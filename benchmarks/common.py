@@ -1,0 +1,108 @@
+"""Shared benchmark fixtures: datasets, segments, metric helpers.
+
+Scale note: the paper's segment is 33M vectors on NVMe; this container is
+one CPU core, so benchmarks run the same algorithms at 10^3-10^4 vectors
+and report *I/O counts and ratios* (hardware-independent) plus *modeled*
+latency/QPS through the calibrated cost models in ``core/iostats.py``
+(clearly labeled modeled-not-measured).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs.starling_segment import SEGMENT_BENCH
+from repro.core import distances as D
+from repro.core.iostats import NVME_SEGMENT, TPU_HBM_SEGMENT, IOStats
+from repro.core.segment import Segment, build_segment
+from repro.data.vectors import clustered_vectors, query_set
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "bench_results.jsonl")
+
+N_BASE = 6000
+DIM = 64
+N_QUERY = 32
+
+
+@functools.lru_cache(maxsize=4)
+def base_data(n: int = N_BASE, dim: int = DIM, seed: int = 0):
+    return clustered_vectors(n, dim, num_clusters=48, seed=seed)
+
+
+@functools.lru_cache(maxsize=8)
+def bench_segment(shuffle: str = "bnf", algo: str = "vamana",
+                  n: int = N_BASE, use_nav: bool = True) -> Segment:
+    x = base_data(n)
+    p = SEGMENT_BENCH
+    p = dataclasses.replace(
+        p, graph=dataclasses.replace(p.graph, algo=algo),
+        layout=dataclasses.replace(p.layout, shuffle=shuffle),
+        search=dataclasses.replace(p.search, use_nav_graph=use_nav))
+    return build_segment(x, p)
+
+
+@functools.lru_cache(maxsize=2)
+def queries(num: int = N_QUERY, in_db: bool = False):
+    return query_set(base_data(), num, in_db=in_db, seed=1)
+
+
+@functools.lru_cache(maxsize=4)
+def ground_truth(k: int = 10):
+    return D.brute_force_knn(base_data(), queries(), k)
+
+
+def mean_io(stats: List[IOStats]) -> float:
+    return float(np.mean([s.block_reads for s in stats]))
+
+
+def mean_xi(stats: List[IOStats]) -> float:
+    return float(np.mean([s.vertex_utilization for s in stats]))
+
+
+def mean_hops(stats: List[IOStats]) -> float:
+    return float(np.mean([s.hops for s in stats]))
+
+
+def mean_ell(stats: List[IOStats]) -> float:
+    """Paper's path length: hops until the final top-1 was found."""
+    return float(np.mean([s.hops_to_best for s in stats]))
+
+
+def modeled(stats: List[IOStats], pipeline: bool = True,
+            cost=NVME_SEGMENT) -> Dict[str, float]:
+    lat = [cost.latency_us(s, pipeline=pipeline) for s in stats]
+    mean_us = float(np.mean(lat))
+    return {"latency_us_" + cost.name: mean_us,
+            "qps_" + cost.name: 1e6 / mean_us if mean_us else 0.0}
+
+
+_results: List[Dict] = []
+
+
+def record(bench: str, **fields) -> Dict:
+    rec = {"bench": bench, **fields}
+    _results.append(rec)
+    os.makedirs(os.path.dirname(os.path.abspath(RESULTS_PATH)),
+                exist_ok=True)
+    with open(RESULTS_PATH, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    flat = " ".join(f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+                    for k, v in fields.items())
+    print(f"[{bench}] {flat}", flush=True)
+    return rec
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0

@@ -1,0 +1,109 @@
+"""Device-path benchmarks: batched TPU-formulation search vs host oracle,
+kernel micro-benchmarks (interpret mode — correctness + op counts, with
+modeled TPU timings from the roofline constants)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import device_search as DS
+from repro.core import distances as D
+from repro.core.search import anns, recall_at_k
+
+
+def device_vs_host():
+    seg = C.bench_segment(shuffle="bnf")
+    q = C.queries()
+    truth = C.ground_truth()
+    ds = DS.from_segment(seg)
+    ids, dd, io, hops = DS.device_anns(
+        ds, jnp.asarray(q), k=10, candidates=48, max_hops=256)
+    C.record("device_anns", impl="device_batched",
+             recall=recall_at_k(np.asarray(ids), truth),
+             mean_io=float(np.asarray(io).mean()),
+             mean_hops=float(np.asarray(hops).mean()))
+    hids, _, hstats = anns(seg.view, q, 10, seg.params.search)
+    C.record("device_anns", impl="host_oracle",
+             recall=recall_at_k(hids, truth),
+             mean_io=C.mean_io(hstats), mean_hops=C.mean_hops(hstats))
+
+
+def batched_beam_throughput():
+    """Device QPS scaling with batch size (TPU analogue of the paper's
+    thread sweep, Fig. 12): one batched while_loop serves B queries."""
+    seg = C.bench_segment(shuffle="bnf")
+    ds = DS.from_segment(seg)
+    x = C.base_data()
+    from repro.data.vectors import query_set
+    for b in (8, 32, 128):
+        q = query_set(x, b, seed=5)
+        fn = lambda qq: DS.device_anns(ds, qq, k=10, candidates=48,
+                                       max_hops=256)
+        ids, dd, io, _ = fn(jnp.asarray(q))       # compile+run
+        jax.block_until_ready(ids)
+        t0 = time.perf_counter()
+        ids, dd, io, _ = fn(jnp.asarray(q))
+        jax.block_until_ready(ids)
+        wall = time.perf_counter() - t0
+        truth = D.brute_force_knn(x, q, 10)
+        C.record("fig12_batched_beam", batch=b,
+                 recall=recall_at_k(np.asarray(ids), truth),
+                 mean_io=float(np.asarray(io).mean()),
+                 wall_s_cpu_interp=wall)
+
+
+def starling_fetch_width():
+    """§Perf cell 3 (paper-representative): multi-block fetch per DMA
+    round-trip — exploits the paper's Central Assumption (a few random
+    reads per round-trip cost ~one). Round trips are the latency unit;
+    block reads are the bandwidth unit."""
+    seg = C.bench_segment(shuffle="bnf")
+    ds = DS.from_segment(seg)
+    q = C.queries()
+    truth = C.ground_truth()
+    base_trips = None
+    for fw in (1, 2, 3, 4):
+        ids, dd, io, trips = DS.device_anns(
+            ds, jnp.asarray(q), k=10, candidates=48, max_hops=256,
+            fetch_width=fw)
+        trips_m = float(np.asarray(trips).mean())
+        if base_trips is None:
+            base_trips = trips_m
+        C.record("perf_fetch_width", fetch_width=fw,
+                 recall=recall_at_k(np.asarray(ids), truth),
+                 block_reads=float(np.asarray(io).mean()),
+                 round_trips=trips_m,
+                 modeled_latency_us_nvme=trips_m * 95.0,
+                 modeled_latency_us_tpu_dma=trips_m * 1.2,
+                 speedup_vs_fw1=base_trips / trips_m)
+
+
+def kernel_micro():
+    """Kernel correctness at bench scale + modeled TPU times."""
+    from repro.kernels import block_rank, pairwise_l2, pq_adc_batch
+    from repro.kernels import ref
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((128, C.DIM)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((4096, C.DIM)), jnp.float32)
+    got = pairwise_l2(q, x)
+    err = float(jnp.abs(got - ref.pairwise_l2_ref(q, x)).max())
+    flops = 2 * 128 * 4096 * C.DIM
+    C.record("kernel_l2_tile", max_err=err, flops=flops,
+             modeled_tpu_us=flops / 197e12 * 1e6)
+    codes = jnp.asarray(rng.integers(0, 256, (4096, 8)), jnp.uint8)
+    luts = jnp.asarray(rng.standard_normal((128, 8, 256)), jnp.float32)
+    got = pq_adc_batch(codes, luts)
+    err = float(jnp.abs(got - ref.pq_adc_ref(luts, codes)).max())
+    flops = 2 * 4096 * 8 * 256 * 128          # one-hot matmul formulation
+    C.record("kernel_pq_adc", max_err=err, flops=flops,
+             modeled_tpu_us=flops / 197e12 * 1e6)
+    tiles = jnp.asarray(rng.standard_normal((128, 16, C.DIM)),
+                        jnp.float32)
+    dd, idx = block_rank(q, tiles, 5)
+    dr, _ = ref.block_rank_ref(q, tiles, 5)
+    C.record("kernel_block_topk",
+             max_err=float(jnp.abs(dd - dr).max()))

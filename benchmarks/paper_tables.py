@@ -1,0 +1,344 @@
+"""One benchmark per paper table/figure (§6 + appendices).
+
+Each function prints/records its rows; ``run.py`` drives them all.
+Latency/QPS figures are *modeled* through the NVMe/TPU cost models (this
+is a CPU container — see common.py); I/O counts, OR(G), xi, path length
+and recall/AP are exact algorithm outputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import baseline as B
+from repro.core import distances as D
+from repro.core import layout as L
+from repro.core.iostats import NVME_SEGMENT, TPU_HBM_SEGMENT
+from repro.core.search import (anns, average_precision, range_search,
+                               recall_at_k)
+
+
+# ------------------------------------------------------------ Fig. 9
+
+def fig9_block_shuffling():
+    """OR(G) + blocks holding the top-100 NN, per layout scheme."""
+    x = C.base_data()
+    q = C.queries()
+    top100 = D.brute_force_knn(x, q, 100)
+    for scheme in ("none", "bnp", "bnf"):
+        seg = C.bench_segment(shuffle=scheme)
+        lay = seg.view.layout
+        orr = L.overlap_ratio(seg.graph, lay)
+        blocks = float(np.mean([
+            len(set(lay.block_of[row].tolist())) for row in top100]))
+        ids, _, stats = anns(seg.view, q, 10, seg.params.search)
+        C.record("fig9_shuffling", scheme=scheme, overlap_ratio=orr,
+                 blocks_for_top100=blocks, mean_io=C.mean_io(stats),
+                 recall=recall_at_k(ids, top100[:, :10]))
+
+
+# ------------------------------------------------------------- Tab. 2
+
+def tab2_io_efficiency():
+    """Vertex utilization xi and search path length ell: baseline vs
+    Starling at matched recall."""
+    seg_s = C.bench_segment(shuffle="bnf")
+    seg_b = C.bench_segment(shuffle="none")
+    q = C.queries()
+    truth = C.ground_truth()
+    p_s = seg_s.params.search
+    p_b = dataclasses.replace(p_s, use_block_search=False,
+                              use_nav_graph=False)
+    ids_s, _, st_s = anns(seg_s.view, q, 10, p_s)
+    ids_b, _, st_b = B.vertex_anns(seg_b.view, q, 10, p_b)
+    C.record("tab2_io", framework="starling", xi=C.mean_xi(st_s),
+             ell=C.mean_ell(st_s), mean_io=C.mean_io(st_s),
+             recall=recall_at_k(ids_s, truth))
+    C.record("tab2_io", framework="diskann_baseline", xi=C.mean_xi(st_b),
+             ell=C.mean_ell(st_b), mean_io=C.mean_io(st_b),
+             recall=recall_at_k(ids_b, truth))
+
+
+# --------------------------------------------------------- Fig. 6 / 7
+
+def fig6_7_anns_frontier():
+    """Recall vs mean I/O + modeled latency/QPS, sweeping candidate size
+    (the paper's frontier plots)."""
+    seg_s = C.bench_segment(shuffle="bnf")
+    seg_b = C.bench_segment(shuffle="none")
+    q = C.queries()
+    truth = C.ground_truth()
+    for gamma in (16, 32, 64, 128):
+        p_s = dataclasses.replace(seg_s.params.search,
+                                  candidate_size=gamma)
+        ids, _, st = anns(seg_s.view, q, 10, p_s)
+        C.record("fig6_7_anns", framework="starling", gamma=gamma,
+                 recall=recall_at_k(ids, truth), mean_io=C.mean_io(st),
+                 **C.modeled(st), **C.modeled(st, cost=TPU_HBM_SEGMENT))
+        p_b = dataclasses.replace(seg_b.params.search,
+                                  candidate_size=gamma,
+                                  use_block_search=False,
+                                  use_nav_graph=False)
+        ids, _, st = B.vertex_anns(seg_b.view, q, 10, p_b)
+        C.record("fig6_7_anns", framework="diskann_baseline", gamma=gamma,
+                 recall=recall_at_k(ids, truth), mean_io=C.mean_io(st),
+                 **C.modeled(st, pipeline=False),
+                 **C.modeled(st, pipeline=False, cost=TPU_HBM_SEGMENT))
+
+
+# --------------------------------------------------------- Fig. 4 / 5
+
+def fig4_5_range_search():
+    """RS: AP vs mean I/O + modeled latency, Starling vs repeated-ANNS
+    baseline, over radii (Fig. 14's sweep folded in)."""
+    seg_s = C.bench_segment(shuffle="bnf")
+    seg_b = C.bench_segment(shuffle="none")
+    x, q = C.base_data(), C.queries()
+    d_gt = D.pairwise(q, x)
+    for quant in (0.001, 0.003, 0.01):
+        radius = float(np.quantile(d_gt, quant))
+        gt = D.brute_force_range(x, q, radius)
+        res, st = range_search(seg_s.view, q, radius,
+                               seg_s.params.search)
+        C.record("fig4_5_rs", framework="starling", radius_q=quant,
+                 ap=average_precision(res, gt), mean_io=C.mean_io(st),
+                 **C.modeled(st))
+        p_b = dataclasses.replace(seg_b.params.search,
+                                  use_block_search=False,
+                                  use_nav_graph=False)
+        res, st = B.vertex_range_search(seg_b.view, q, radius, p_b)
+        C.record("fig4_5_rs", framework="diskann_repeated_anns",
+                 radius_q=quant, ap=average_precision(res, gt),
+                 mean_io=C.mean_io(st), **C.modeled(st, pipeline=False))
+
+
+# ------------------------------------------------------------- Fig. 8
+
+def fig8_index_cost():
+    """Index processing time breakdown (Eq. 8) + memory cost (Eq. 10)."""
+    seg = C.bench_segment(shuffle="bnf")
+    t = seg.build_times
+    total = sum(t.values())
+    C.record("fig8_index_cost", component="disk_graph",
+             seconds=t["disk_graph_s"], frac=t["disk_graph_s"] / total)
+    C.record("fig8_index_cost", component="shuffling",
+             seconds=t["shuffling_s"], frac=t["shuffling_s"] / total,
+             frac_of_graph=t["shuffling_s"] / t["disk_graph_s"])
+    C.record("fig8_index_cost", component="memory_graph",
+             seconds=t["memory_graph_s"],
+             frac=t["memory_graph_s"] / total)
+    C.record("fig8_index_cost", component="pq", seconds=t["pq_s"],
+             frac=t["pq_s"] / total)
+    nav = seg.view.nav
+    C.record("fig8_memory", c_graph=nav.memory_bytes(),
+             c_mapping=seg.view.layout.mapping_bytes(),
+             c_pq=int(seg.view.pq_codes.nbytes
+                      + seg.view.pq_cb.memory_bytes()),
+             total=seg.memory_bytes(), disk=seg.disk_bytes())
+
+
+# ------------------------------------------------------------ Fig. 10
+
+def fig10_nav_graph_ablation():
+    q = C.queries()
+    truth = C.ground_truth()
+    for nav in (True, False):
+        seg = C.bench_segment(shuffle="bnf", use_nav=nav)
+        ids, _, st = anns(seg.view, q, 10, seg.params.search)
+        C.record("fig10_nav", nav_graph=nav,
+                 recall=recall_at_k(ids, truth),
+                 mean_io=C.mean_io(st), ell=C.mean_ell(st),
+                 xi=C.mean_xi(st), **C.modeled(st))
+
+
+# ------------------------------------------------------------ Fig. 11
+
+def fig11_block_search_opts():
+    """(a) pruning sweep, (b) pipeline model, (c) PQ routing I/O,
+    (d) time breakdown."""
+    seg = C.bench_segment(shuffle="bnf")
+    q = C.queries()
+    truth = C.ground_truth()
+    for sigma in (0.0, 0.1, 0.3, 0.5, 1.0):
+        p = dataclasses.replace(seg.params.search, pruning_ratio=sigma,
+                                use_block_search=sigma > 0)
+        ids, _, st = anns(seg.view, q, 10, p)
+        C.record("fig11a_appK_sigma", sigma=sigma,
+                 recall=recall_at_k(ids, truth), mean_io=C.mean_io(st),
+                 dist_comps=float(np.mean([s.dist_comps for s in st])),
+                 **C.modeled(st))
+    _, _, st = anns(seg.view, q, 10, seg.params.search)
+    for pipe in (False, True):
+        m = C.modeled(st, pipeline=pipe)
+        C.record("fig11b_pipeline", pipeline=pipe, **m)
+    for pq in (True, False):
+        p = dataclasses.replace(seg.params.search, use_pq_routing=pq)
+        _, _, st2 = anns(seg.view, q[:8], 10, p)
+        C.record("fig11c_pq_routing", pq_routing=pq,
+                 mean_io=C.mean_io(st2))
+    s = st[0]
+    br = NVME_SEGMENT.breakdown(s)
+    C.record("fig11d_breakdown", framework="starling-nvme-model",
+             io_frac=br["io_frac"],
+             t_io_us=br["t_io_us"], t_comp_us=br["t_comp_us"],
+             t_other_us=br["t_other_us"])
+    seg_b = C.bench_segment(shuffle="none")
+    p_b = dataclasses.replace(seg.params.search, use_block_search=False,
+                              use_nav_graph=False)
+    _, _, st_b = B.vertex_anns(seg_b.view, q, 10, p_b)
+    br_b = NVME_SEGMENT.breakdown(st_b[0])
+    C.record("fig11d_breakdown", framework="diskann-nvme-model",
+             io_frac=br_b["io_frac"], t_io_us=br_b["t_io_us"],
+             t_comp_us=br_b["t_comp_us"], t_other_us=br_b["t_other_us"])
+
+
+# ------------------------------------------------------------ Fig. 13
+
+def fig13_k_sweep():
+    seg = C.bench_segment(shuffle="bnf")
+    x, q = C.base_data(), C.queries()
+    for k in (1, 10, 50):
+        truth = D.brute_force_knn(x, q, k)
+        p = dataclasses.replace(seg.params.search,
+                                candidate_size=max(64, 2 * k))
+        ids, _, st = anns(seg.view, q, k, p)
+        C.record("fig13_k", k=k, recall=recall_at_k(ids, truth),
+                 mean_io=C.mean_io(st), **C.modeled(st))
+
+
+# ------------------------------------------------------------- Tab. 3
+
+def tab3_multi_segment():
+    """QPS scaling with segment count on one machine (coordinator)."""
+    from repro.core import device_search as DS
+    from repro.serving import QueryCoordinator, SegmentServer
+    from repro.configs.starling_segment import SEGMENT_BENCH
+    from repro.core.segment import build_segment
+    from repro.data.vectors import clustered_vectors, query_set
+
+    all_servers = []
+    xs = []
+    off = 0
+    for s in range(3):
+        x = clustered_vectors(1500, C.DIM, num_clusters=16, seed=10 + s)
+        seg = build_segment(x, SEGMENT_BENCH)
+        all_servers.append(SegmentServer(
+            segment=DS.from_segment(seg), offset=off,
+            num_vectors=x.shape[0], candidates=48))
+        xs.append(x)
+        off += x.shape[0]
+    # jit warm-up so wall time reflects steady state, not compilation
+    _ = all_servers[0].search(query_set(xs[0], 16, seed=3), 10)
+    for num in (1, 2, 3):
+        union = np.concatenate(xs[:num], axis=0)
+        q = query_set(union, 16, seed=3)
+        coord = QueryCoordinator(all_servers[:num])
+        t0 = time.perf_counter()
+        gi, gd, stats = coord.search(q, k=10)
+        wall = time.perf_counter() - t0
+        truth = D.brute_force_knn(union, q, 10)
+        C.record("tab3_segments", segments=num,
+                 recall=recall_at_k(gi, truth),
+                 mean_io=stats["mean_block_reads_per_query"],
+                 wall_s_cpu=wall)
+
+
+# ------------------------------------------------------------ Fig. 15
+
+def fig15_segment_size():
+    q = C.queries()
+    for n in (2000, 4000, 6000):
+        seg = C.bench_segment(shuffle="bnf", n=n)
+        x = C.base_data(n)
+        truth = D.brute_force_knn(x, C.queries(), 10)
+        ids, _, st = anns(seg.view, q, 10, seg.params.search)
+        C.record("fig15_segment_size", n=n,
+                 recall=recall_at_k(ids, truth),
+                 mean_io=C.mean_io(st), **C.modeled(st))
+
+
+# ------------------------------------------------------------ Fig. 16
+
+def fig16_graph_algos():
+    """Starling generality: vamana / nsg / hnsw disk graphs."""
+    q = C.queries()
+    truth = C.ground_truth()
+    for algo in ("vamana", "nsg", "hnsw"):
+        for shuffle in ("bnf", "none"):
+            seg = C.bench_segment(shuffle=shuffle, algo=algo)
+            ids, _, st = anns(seg.view, q, 10, seg.params.search)
+            C.record("fig16_graph_algos", algo=algo, shuffle=shuffle,
+                     recall=recall_at_k(ids, truth),
+                     mean_io=C.mean_io(st), **C.modeled(st))
+
+
+# ------------------------------------------------------------- Fig. 17
+
+def fig17_in_database_queries():
+    seg = C.bench_segment(shuffle="bnf")
+    x = C.base_data()
+    for in_db in (False, True):
+        q = C.queries(in_db=in_db)
+        truth = D.brute_force_knn(x, q, 10)
+        ids, _, st = anns(seg.view, q, 10, seg.params.search)
+        C.record("fig17_query_dist", in_database=in_db,
+                 recall=recall_at_k(ids, truth),
+                 mean_io=C.mean_io(st), **C.modeled(st))
+
+
+# ----------------------------------------------------------- App. C/F
+
+def appC_bnf_params():
+    seg = C.bench_segment(shuffle="none")        # need raw graph
+    g = seg.graph
+    eps = seg.view.layout.verts_per_block
+    for beta in (1, 2, 4, 8):
+        with C.Timer() as t:
+            lay, hist = L.layout_bnf(g, eps, iters=beta, tau=0.0)
+        C.record("appC_bnf_beta", beta=beta,
+                 overlap_ratio=L.overlap_ratio(g, lay),
+                 seconds=t.seconds, rounds_run=len(hist) - 1)
+
+
+def appF_bnf_vs_bns():
+    import dataclasses as dc
+    x = C.base_data(1200)
+    from repro.core.segment import build_segment
+    p = dc.replace(C.SEGMENT_BENCH,
+                   layout=dc.replace(C.SEGMENT_BENCH.layout,
+                                     shuffle="none"))
+    seg = build_segment(x, p)
+    g = seg.graph
+    eps = seg.view.layout.verts_per_block
+    with C.Timer() as t_bnf:
+        lay_bnf, _ = L.layout_bnf(g, eps, iters=8)
+    with C.Timer() as t_bns:
+        lay_bns, hist = L.layout_bns(g, eps, iters=1,
+                                     init=lay_bnf)
+    C.record("appF_bnf_vs_bns", algo="bnf",
+             overlap_ratio=L.overlap_ratio(g, lay_bnf),
+             seconds=t_bnf.seconds)
+    C.record("appF_bnf_vs_bns", algo="bns(+bnf init)",
+             overlap_ratio=L.overlap_ratio(g, lay_bns),
+             seconds=t_bns.seconds)
+
+
+def appG_partitioners():
+    x = C.base_data()
+    seg = C.bench_segment(shuffle="none")
+    g = seg.graph
+    eps = seg.view.layout.verts_per_block
+    for name, fn in (
+            ("bnf", lambda: L.layout_bnf(g, eps, iters=8)[0]),
+            ("gp3_gain_order", lambda: L.layout_bnf(
+                g, eps, iters=8, gain_order=True)[0]),
+            ("kmeans_gp1", lambda: L.layout_kmeans(x, g, eps))):
+        with C.Timer() as t:
+            lay = fn()
+        C.record("appG_partitioners", method=name,
+                 overlap_ratio=L.overlap_ratio(g, lay),
+                 seconds=t.seconds)

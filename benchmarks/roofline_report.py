@@ -1,0 +1,103 @@
+"""Render the §Dry-run / §Roofline markdown tables from dryrun.jsonl.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report [--mesh pod16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from collections import OrderedDict
+
+DEFAULT = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun.jsonl")
+
+MOVE_HINTS = {
+    ("compute_s", "moe"): ("replace dense-dispatch MoE (computes E/TP "
+                           "experts per token) with capacity-based "
+                           "gather dispatch"),
+    ("compute_s", "*"): ("cut remat recompute (save attention outputs) "
+                         "or raise arithmetic intensity via larger "
+                         "microbatch"),
+    ("memory_s", "train"): ("fuse attention score chain (flash kernel) "
+                            "and drop f32 materializations of logits"),
+    ("memory_s", "decode"): ("KV-cache traffic is the floor: quantize "
+                             "cache to int8 / window local layers"),
+    ("memory_s", "prefill"): ("flash-fuse attention + avoid writeback "
+                              "of full-cache copies (in-place DUS)"),
+    ("collective_s", "*"): ("reorder sharding so gradient reduce uses "
+                            "reduce-scatter into ZeRO shards; overlap "
+                            "with backward"),
+}
+
+
+def _latest(path: str):
+    recs = OrderedDict()
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except Exception:
+                continue
+            recs[(r["arch"], r["shape"], r["mesh"],
+                  r.get("tag", ""))] = r
+    return list(recs.values())
+
+
+def hint(rec) -> str:
+    dom = rec.get("dominant", "")
+    cfg_kind = rec.get("kind", "*")
+    arch = rec.get("arch", "")
+    if dom == "compute_s" and "moe" in arch:
+        return MOVE_HINTS[("compute_s", "moe")]
+    return MOVE_HINTS.get((dom, cfg_kind), MOVE_HINTS.get((dom, "*"), ""))
+
+
+def render(path: str = DEFAULT, mesh: str = "pod16x16",
+           tag: str = "") -> str:
+    recs = [r for r in _latest(path)
+            if r["mesh"] == mesh and r.get("tag", "") == tag]
+    out = []
+    out.append(f"### Roofline baseline — mesh {mesh}"
+               + (f" (tag={tag})" if tag else ""))
+    out.append("")
+    out.append("| arch | shape | status | GiB/chip | compute_s | "
+               "memory_s | collective_s | dominant | MODEL/HLO flops | "
+               "what would move the dominant term |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r["status"] == "SKIP":
+            out.append(f"| {r['arch']} | {r['shape']} | SKIP | | | | | "
+                       f"| | {r['skip_reason'][:60]} |")
+            continue
+        if r["status"] == "FAIL":
+            out.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | | "
+                       f"| | {r.get('error', '')[:60]} |")
+            continue
+        if "roofline" not in r:
+            out.append(f"| {r['arch']} | {r['shape']} | OK | | | | "
+                       f"{r.get('collective_bytes', 0)}B coll | | | |")
+            continue
+        rf = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | OK "
+            f"| {r['bytes_per_device']['total']/2**30:.2f} "
+            f"| {rf['compute_s']:.4f} | {rf['memory_s']:.4f} "
+            f"| {rf['collective_s']:.5f} "
+            f"| {r['dominant'].replace('_s', '')} "
+            f"| {r.get('model_flops_ratio', 0):.3f} "
+            f"| {hint(r)} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--path", default=DEFAULT)
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    print(render(args.path, args.mesh, args.tag))
+
+
+if __name__ == "__main__":
+    main()

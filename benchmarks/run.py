@@ -1,0 +1,63 @@
+"""Benchmark driver: one function per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --only tab2_io_efficiency
+
+Rows stream to results/bench_results.jsonl; latency/QPS values are
+modeled via the calibrated NVMe/TPU cost models (CPU container — see
+benchmarks/common.py).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import device_bench, paper_tables
+
+BENCHES = [
+    paper_tables.fig9_block_shuffling,
+    paper_tables.tab2_io_efficiency,
+    paper_tables.fig6_7_anns_frontier,
+    paper_tables.fig4_5_range_search,
+    paper_tables.fig8_index_cost,
+    paper_tables.fig10_nav_graph_ablation,
+    paper_tables.fig11_block_search_opts,
+    paper_tables.fig13_k_sweep,
+    paper_tables.tab3_multi_segment,
+    paper_tables.fig15_segment_size,
+    paper_tables.fig16_graph_algos,
+    paper_tables.fig17_in_database_queries,
+    paper_tables.appC_bnf_params,
+    paper_tables.appF_bnf_vs_bns,
+    paper_tables.appG_partitioners,
+    device_bench.device_vs_host,
+    device_bench.starling_fetch_width,
+    device_bench.batched_beam_throughput,
+    device_bench.kernel_micro,
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    failures = 0
+    for fn in BENCHES:
+        if args.only and args.only != fn.__name__:
+            continue
+        print(f"=== {fn.__name__} ===", flush=True)
+        t0 = time.perf_counter()
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+        print(f"=== {fn.__name__} done in "
+              f"{time.perf_counter() - t0:.1f}s ===", flush=True)
+    return failures
+
+
+if __name__ == "__main__":
+    sys.exit(main())

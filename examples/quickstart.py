@@ -1,0 +1,69 @@
+"""Quickstart: build a Starling segment, search it, compare against the
+DiskANN-style baseline and brute force.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.configs.starling_segment import SEGMENT_BENCH
+from repro.core import baseline as B
+from repro.core import distances as D
+from repro.core.iostats import NVME_SEGMENT
+from repro.core.search import anns, range_search, recall_at_k, \
+    average_precision
+from repro.core.segment import build_segment
+from repro.data.vectors import clustered_vectors, query_set
+
+
+def main():
+    print("== Starling quickstart ==")
+    x = clustered_vectors(5000, 64, num_clusters=32, seed=0)
+    q = query_set(x, 20, seed=1)
+    truth = D.brute_force_knn(x, q, 10)
+
+    print("building segment (graph + BNF shuffle + nav graph + PQ) ...")
+    seg = build_segment(x, SEGMENT_BENCH)
+    print(f"  vectors={seg.num_vectors}  OR(G)={seg.overlap_ratio:.3f}")
+    print(f"  memory={seg.memory_bytes()/1e6:.1f}MB  "
+          f"disk={seg.disk_bytes()/1e6:.1f}MB  budget ok="
+          f"{seg.check_budget()}")
+    for k, v in seg.build_times.items():
+        print(f"  {k:16s} {v:6.2f}s")
+
+    print("\n-- ANNS (top-10) --")
+    ids, dists, stats = anns(seg.view, q, 10, seg.params.search)
+    io = np.mean([s.block_reads for s in stats])
+    xi = np.mean([s.vertex_utilization for s in stats])
+    lat = np.mean([NVME_SEGMENT.latency_us(s, pipeline=True)
+                   for s in stats])
+    print(f"starling  recall={recall_at_k(ids, truth):.3f} "
+          f"mean_io={io:.1f} xi={xi:.3f} modeled_latency={lat:.0f}us")
+
+    p_base = dataclasses.replace(seg.params.search,
+                                 use_block_search=False,
+                                 use_nav_graph=False)
+    ids_b, _, stats_b = B.vertex_anns(seg.view, q, 10, p_base)
+    io_b = np.mean([s.block_reads for s in stats_b])
+    xi_b = np.mean([s.vertex_utilization for s in stats_b])
+    lat_b = np.mean([NVME_SEGMENT.latency_us(s, pipeline=False)
+                     for s in stats_b])
+    print(f"baseline  recall={recall_at_k(ids_b, truth):.3f} "
+          f"mean_io={io_b:.1f} xi={xi_b:.3f} modeled_latency={lat_b:.0f}us")
+    print(f"==> I/O reduction {io_b/io:.2f}x, modeled speedup "
+          f"{lat_b/lat:.2f}x")
+
+    print("\n-- Range search --")
+    radius = float(np.quantile(D.pairwise(q, x), 0.002))
+    gt = D.brute_force_range(x, q, radius)
+    res, st = range_search(seg.view, q, radius, seg.params.search)
+    print(f"AP={average_precision(res, gt):.3f} "
+          f"mean_io={np.mean([s.block_reads for s in st]):.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""RAG bridge: an assigned-architecture LM decodes while querying a
+Starling segment index for nearest-neighbor context every few steps —
+the integration point between the paper's technique and the LM serving
+substrate (DESIGN.md §Arch-applicability).
+
+  PYTHONPATH=src python examples/rag_serving.py --arch gemma3-1b
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.configs.starling_segment import SEGMENT_BENCH
+from repro.core import device_search as DS
+from repro.core.segment import build_segment
+from repro.data.vectors import clustered_vectors
+from repro.models import lm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--gen", type=int, default=12)
+    ap.add_argument("--retrieve-every", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    print(f"== RAG serving: {cfg.name} + Starling segment ==")
+
+    # corpus embeddings at the LM's width; the segment indexes them
+    corpus = clustered_vectors(2000, cfg.d_model, num_clusters=16, seed=0)
+    seg = build_segment(corpus, SEGMENT_BENCH)
+    ds = DS.from_segment(seg)
+    print(f"segment ready: OR(G)={seg.overlap_ratio:.3f}")
+
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    b, prompt_len, max_len = 2, 8, 8 + args.gen
+    key = jax.random.PRNGKey(1)
+    prompt = jax.random.randint(key, (b, prompt_len), 0, cfg.vocab_size)
+    logits, cache = lm.prefill(cfg, params, prompt, max_len)
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+
+    total_io = 0
+    for step in range(args.gen - 1):
+        logits, cache = lm.decode_step(cfg, params, cache, tok)
+        # every few tokens, embed the hidden query (here: the pre-logit
+        # representation proxy = embedding of the argmax token) and
+        # retrieve neighbors from the segment
+        if (step + 1) % args.retrieve_every == 0:
+            q = np.asarray(
+                params["embed"])[np.asarray(tok[:, 0])].astype(np.float32)
+            ids, dists, io, _ = DS.device_anns(
+                ds, jnp.asarray(q), k=4, candidates=32, max_hops=64)
+            total_io += int(np.asarray(io).sum())
+            print(f"  step {step+1}: retrieved ctx ids "
+                  f"{np.asarray(ids)[0].tolist()} "
+                  f"(block reads {np.asarray(io).tolist()})")
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    print(f"decoded {args.gen} tokens x {b} seqs; "
+          f"total retrieval block reads: {total_io}")
+
+
+if __name__ == "__main__":
+    main()

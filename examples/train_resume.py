@@ -1,0 +1,65 @@
+"""Fault-tolerant training demo: train an assigned arch (reduced config),
+kill mid-run, resume from the latest checkpoint, verify the loss curve
+continues seamlessly.
+
+  PYTHONPATH=src python examples/train_resume.py --arch rwkv6-1.6b
+"""
+import argparse
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.data.pipeline import TokenPipeline
+from repro.ft.checkpoint import CheckpointManager
+from repro.launch.train import default_optimizer, make_train_step
+from repro.models import lm
+from repro.optim import adamw_init
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="rwkv6-1.6b")
+    ap.add_argument("--steps", type=int, default=24)
+    ap.add_argument("--crash-at", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    print(f"== fault-tolerant training: {cfg.name} ==")
+    step_fn = jax.jit(make_train_step(cfg, default_optimizer()))
+    ckpt = CheckpointManager(tempfile.mkdtemp(prefix="repro_ckpt_"),
+                             keep=2)
+    pipe = TokenPipeline(cfg.vocab_size, batch=4, seq=32, seed=0)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+
+    losses = []
+    print(f"training to step {args.crash_at}, then 'crashing' ...")
+    for step in range(args.crash_at):
+        params, opt, m = step_fn(params, opt, pipe.next_batch(cfg))
+        losses.append(float(m["loss"]))
+        if (step + 1) % 6 == 0:
+            ckpt.save(step + 1, params, opt, pipe.get_state())
+            print(f"  step {step+1}: loss={losses[-1]:.4f} [checkpoint]")
+
+    print("simulated node failure — restarting from latest checkpoint")
+    params2 = lm.init_params(cfg, jax.random.PRNGKey(0))   # fresh proc
+    opt2 = adamw_init(params2)
+    params2, opt2, pipe_state, start = ckpt.restore(params2, opt2)
+    pipe2 = TokenPipeline(cfg.vocab_size, batch=4, seq=32, seed=0)
+    pipe2.set_state(pipe_state)
+    print(f"resumed at step {start}")
+    for step in range(start, args.steps):
+        params2, opt2, m = step_fn(params2, opt2, pipe2.next_batch(cfg))
+        losses.append(float(m["loss"]))
+    print("loss curve:", " ".join(f"{l:.3f}" for l in losses))
+    assert losses[-1] < losses[0], "loss should decrease"
+    print("resume OK — loss continued decreasing across the restart")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""The paper's own workload: segment configurations per dataset (Tab. 1,
+Tab. 16-18) scaled to this container, plus full-size parameter sets used
+by the analytic cost accounting.
+
+``SEGMENT_BENCH`` is the container-scale segment every benchmark runs
+(10^4-10^5 vectors); ``SEGMENT_FULL_*`` mirror the paper's per-dataset
+parameters (Λ, η, ε, ρ) for the Example-2 style accounting tests.
+"""
+from __future__ import annotations
+
+from repro.core.params import (GraphParams, LayoutParams, NavGraphParams,
+                               PQParams, SearchParams, SegmentParams)
+
+# container-scale segment used by benchmarks: same knob values as the
+# paper's BIGANN column wherever scale-independent (σ=0.3, φ=0.5, β=8,
+# τ=0.01, μ≈0.1, PQ codes in memory)
+SEGMENT_BENCH = SegmentParams(
+    graph=GraphParams(max_degree=24, build_beam=64, alpha=1.2,
+                      algo="vamana"),
+    layout=LayoutParams(block_kb=4.0, shuffle="bnf", bnf_iters=8,
+                        gain_tau=0.001),
+    pq=PQParams(num_subspaces=8, num_centroids=256, train_iters=12),
+    nav=NavGraphParams(sample_ratio=0.1, max_degree=12, build_beam=32,
+                       search_beam=16, num_entry_points=4),
+    search=SearchParams(candidate_size=48, pruning_ratio=0.3,
+                        rs_ratio=0.5),
+    metric="l2",
+)
+
+# the paper's full-size per-dataset index parameters (Tab. 16): used by
+# the byte-accounting tests (γ, ε, ρ must reproduce Example 2 exactly)
+PAPER_DATASETS = {
+    # name: (n_vectors, dim, dtype_bytes, Λ, η_kb, ε, ρ)
+    "bigann": (33_000_000, 128, 1, 31, 4, 16, 2_062_500),
+    "deep": (11_000_000, 96, 4, 48, 4, 7, 1_571_429),
+    "ssnpp": (16_000_000, 256, 1, 48, 4, 9, 1_777_778),
+    "text2image": (5_000_000, 200, 4, 54, 4, 4, 1_250_000),
+}

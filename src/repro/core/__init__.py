@@ -1,0 +1,14 @@
+# Starling core: the paper's primary contribution.
+#   graph      — Vamana / NSG-flavour / HNSW-flavour construction
+#   layout     — block-level layout + BNP/BNF/BNS shuffling + OR(G)
+#   navgraph   — in-memory navigation graph (query-aware entry points)
+#   blockstore — block-resident index file (the only online data path)
+#   search     — block search, ANNS (Alg. 2), range search (§5.3)
+#   baseline   — DiskANN-style vertex search + hot cache + repeated-ANNS RS
+#   segment    — build orchestration + Eq. 8/10 cost accounting
+#   iostats    — I/O counters and the Eq. 4 latency model
+from repro.core.params import (GraphParams, LayoutParams, NavGraphParams,
+                               PQParams, SearchParams, SegmentBudget,
+                               SegmentParams)
+from repro.core.segment import Segment, build_segment, load_segment, \
+    save_segment

@@ -1,0 +1,162 @@
+"""DiskANN-style baseline framework (§2.2, §3.1, App. B).
+
+Differences vs Starling, all reproduced here:
+  * layout: ID-contiguous vertices per block (``layout_sequential``);
+  * search: vertex-at-a-time — each hop reads the target's block and uses
+    *only the target vertex* (ξ = 1/ε, Tab. 2);
+  * entry point: fixed medoid (no query-aware navigation graph);
+  * memory: optional *hot-vertex cache* (BFS-radius around the medoid, as in
+    DiskANN's C_hot) — cached targets cost no I/O;
+  * PQ routing: same as Starling (DiskANN introduced it).
+
+Range search for the baseline is repeated-ANNS with doubling k (§6.2
+"RS support is provided by calling ANNS iteratively on DiskANN").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.core import distances as D
+from repro.core.blockstore import BlockStore
+from repro.core.iostats import IOStats
+from repro.core.layout import BlockLayout
+from repro.core.params import SearchParams
+from repro.core.search import SegmentView, _CandidateSet, SearchResult
+from repro.pq import adc_lut, adc_distance
+
+
+def build_hot_cache(seg: SegmentView, ratio: float = 0.05) -> Dict[int, None]:
+    """BFS from the medoid until ratio·N vertices are cached (C_hot)."""
+    store, layout = seg.store, seg.layout
+    n = layout.block_of.shape[0]
+    budget = int(ratio * n)
+    cache: Dict[int, None] = {}
+    frontier = [seg.entry]
+    seen = {seg.entry}
+    while frontier and len(cache) < budget:
+        nxt: List[int] = []
+        for u in frontier:
+            if len(cache) >= budget:
+                break
+            cache[u] = None
+            b = int(layout.block_of[u])
+            vids, _, degs, nbrs = store.read_block(b)
+            s = int(layout.slot_of[u])
+            for v in nbrs[s, : degs[s]]:
+                v = int(v)
+                if v >= 0 and v not in seen:
+                    seen.add(v)
+                    nxt.append(v)
+        frontier = nxt
+    return cache
+
+
+def vertex_search_query(seg: SegmentView, q: np.ndarray, k: int,
+                        p: SearchParams,
+                        hot: Optional[Dict[int, None]] = None
+                        ) -> SearchResult:
+    """DiskANN beam search: PQ-keyed candidates, one block read per visited
+    vertex, only the target consumed from each block."""
+    store, layout = seg.store, seg.layout
+    stats = IOStats()
+    lut = adc_lut(q, seg.pq_cb)
+
+    def route(ids: List[int]) -> np.ndarray:
+        stats.pq_comps += len(ids)
+        return adc_distance(lut, seg.pq_codes[np.asarray(ids, np.int64)])
+
+    C = _CandidateSet(p.candidate_size)
+    R: Dict[int, float] = {}
+    d0 = route([seg.entry])
+    C.push(float(d0[0]), seg.entry)
+
+    while True:
+        i = C.top_unvisited()
+        if i is None:
+            break
+        u = C.ids[i]
+        C.visited[i] = True
+        stats.hops += 1
+
+        bid = int(layout.block_of[u])
+        slot = int(layout.slot_of[u])
+        if hot is not None and u in hot:
+            vids, vecs, degs, nbrs = store.read_block(bid)  # from memory
+        else:
+            vids, vecs, degs, nbrs = store.read_block(bid)  # DR
+            stats.block_reads += 1
+            stats.vertices_fetched += int((vids >= 0).sum())
+            stats.vertices_used += 1
+        # DC: only the target vertex is consumed (Problem 1)
+        dd = D.point_to_points(q, vecs[slot][None, :], seg.metric)[0]
+        stats.dist_comps += 1
+        best_before = min(R.values()) if R else np.inf
+        R.setdefault(u, float(dd))
+        if float(dd) < best_before:
+            stats.hops_to_best = stats.hops
+
+        new_ids = [int(v) for v in nbrs[slot, : degs[slot]]
+                   if int(v) >= 0 and int(v) not in C.member
+                   and int(v) not in R]
+        if new_ids:
+            for v, nd in zip(new_ids, route(new_ids)):
+                C.push(float(nd), v)
+        if stats.hops >= p.max_hops:
+            break
+
+    items = sorted(R.items(), key=lambda kv: kv[1])[:k]
+    return SearchResult(
+        ids=np.asarray([i_ for i_, _ in items], np.int64),
+        dists=np.asarray([d_ for _, d_ in items], np.float32),
+        stats=stats)
+
+
+def vertex_anns(seg: SegmentView, queries: np.ndarray, k: int,
+                p: SearchParams, hot: Optional[Dict[int, None]] = None):
+    Q = queries.shape[0]
+    ids = np.full((Q, k), -1, np.int64)
+    dd = np.full((Q, k), np.inf, np.float32)
+    stats: List[IOStats] = []
+    for qi in range(Q):
+        r = vertex_search_query(seg, queries[qi], k, p, hot)
+        m = r.ids.shape[0]
+        ids[qi, :m] = r.ids
+        dd[qi, :m] = r.dists
+        stats.append(r.stats)
+    return ids, dd, stats
+
+
+def vertex_range_search_query(seg: SegmentView, q: np.ndarray, radius: float,
+                              p: SearchParams,
+                              hot: Optional[Dict[int, None]] = None,
+                              max_rounds: int = 6) -> SearchResult:
+    """Baseline RS: repeated ANNS with doubling k — revisits the same
+    vertices every round (the inefficiency §5.3 calls out)."""
+    stats = IOStats()
+    k = max(p.candidate_size // 2, 10)
+    last: Optional[SearchResult] = None
+    for _ in range(max_rounds):
+        pp = dataclasses.replace(p, candidate_size=max(p.candidate_size, k))
+        r = vertex_search_query(seg, q, k, pp, hot)
+        stats.merge(r.stats)
+        in_range = r.dists <= radius
+        last = SearchResult(ids=r.ids[in_range], dists=r.dists[in_range],
+                            stats=stats)
+        if in_range.sum() < k:      # found the boundary
+            break
+        k *= 2
+    return SearchResult(ids=last.ids, dists=last.dists, stats=stats)
+
+
+def vertex_range_search(seg: SegmentView, queries: np.ndarray, radius: float,
+                        p: SearchParams,
+                        hot: Optional[Dict[int, None]] = None):
+    out, stats = [], []
+    for qi in range(queries.shape[0]):
+        r = vertex_range_search_query(seg, queries[qi], radius, p, hot)
+        out.append(r.ids)
+        stats.append(r.stats)
+    return out, stats

@@ -1,0 +1,422 @@
+"""Device-side batched Starling search (the TPU product of DESIGN.md §2).
+
+The host implementation (``core/search.py``) is the per-query oracle; this
+module is the batched, jit'd production path:
+
+  * one ``lax.while_loop`` over hops for a whole query batch;
+  * each hop gathers one block tile per query (the HBM->VMEM DMA that
+    models one 4 KB disk read), exact-ranks all resident vertices
+    (the ``block_topk`` kernel semantics), expands the sigma-pruned best
+    residents, and routes new candidates by memory-resident PQ-ADC;
+  * entry points come from an in-memory navigation-graph beam search;
+  * per-query block-DMA counters are carried exactly (the paper's
+    "mean I/Os").
+
+Distribution (``make_search_step``): segment-parallel over the ``model``
+mesh axis (each rank owns an independent sub-segment, Fig. 1(b)),
+query-parallel over ``data`` (+ ``pod``); a top-k merge (all-gather +
+sort over ``model``) combines per-segment results — the only collective
+in the step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Tree = dict
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DeviceSegment:
+    """One segment shard, fully device-resident."""
+    vecs: jnp.ndarray          # [rho, eps, D]
+    vid: jnp.ndarray           # [rho, eps] i32 (-1 pad)
+    deg: jnp.ndarray           # [rho, eps] i32
+    nbrs: jnp.ndarray          # [rho, eps, Lam] i32 (-1 pad)
+    block_of: jnp.ndarray      # [N] i32
+    pq_codes: jnp.ndarray      # [N, M] u8
+    pq_cent: jnp.ndarray       # [M, K, dsub] f32
+    nav_vecs: jnp.ndarray      # [n', D]
+    nav_adj: jnp.ndarray       # [n', deg'] i32 (-1 pad)
+    nav_ids: jnp.ndarray       # [n'] i32 global ids
+    nav_entry: jnp.ndarray     # scalar i32 (nav-local)
+
+
+def from_segment(seg) -> DeviceSegment:
+    """Host ``Segment`` -> device arrays."""
+    v = seg.view
+    nav = v.nav
+    return DeviceSegment(
+        vecs=jnp.asarray(v.store.vecs),
+        vid=jnp.asarray(v.store.vid),
+        deg=jnp.asarray(v.store.meta[:, :, 0]),
+        nbrs=jnp.asarray(v.store.meta[:, :, 1:]),
+        block_of=jnp.asarray(v.layout.block_of),
+        pq_codes=jnp.asarray(v.pq_codes),
+        pq_cent=jnp.asarray(v.pq_cb.centroids),
+        nav_vecs=jnp.asarray(nav.vectors),
+        nav_adj=jnp.asarray(nav.graph.adj),
+        nav_ids=jnp.asarray(nav.sample_ids),
+        nav_entry=jnp.asarray(nav.graph.entry, jnp.int32),
+    )
+
+
+# ------------------------------------------------------------- utilities
+
+def _dists(q: jnp.ndarray, x: jnp.ndarray, metric: str) -> jnp.ndarray:
+    """q [Q, D] vs x [Q, E, D] -> [Q, E] (f32)."""
+    q32, x32 = q.astype(jnp.float32), x.astype(jnp.float32)
+    if metric == "ip":
+        return -jnp.einsum("qd,qed->qe", q32, x32)
+    return jnp.sum(jnp.square(x32 - q32[:, None, :]), axis=-1)
+
+
+def _adc_lut(q: jnp.ndarray, cent: jnp.ndarray, metric: str) -> jnp.ndarray:
+    """q [Q, D], cent [M, K, dsub] -> [Q, M, K]."""
+    m, k, dsub = cent.shape
+    qs = q.reshape(q.shape[0], m, 1, dsub).astype(jnp.float32)
+    if metric == "ip":
+        return -jnp.sum(cent[None] * qs, axis=-1)
+    return jnp.sum(jnp.square(cent[None] - qs), axis=-1)
+
+
+def _adc(lut: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
+    """lut [Q, M, K], codes [Q, I, M] -> [Q, I]."""
+    idx = jnp.swapaxes(codes.astype(jnp.int32), 1, 2)      # [Q, M, I]
+    got = jnp.take_along_axis(lut, idx, axis=2)            # [Q, M, I]
+    return jnp.sum(got, axis=1)
+
+
+def _merge_top(keys, ids, new_keys, new_ids, size: int, extra=None,
+               new_extra=None):
+    """Merge sorted-ish lists, dedupe by id, keep `size` smallest keys.
+
+    keys/ids [Q, A], new_* [Q, B] -> [Q, size]. Invalid slots: id < 0,
+    key = +inf. ``extra`` (optional int32 payload, e.g. visited flags)
+    rides along."""
+    k = jnp.concatenate([keys, new_keys], axis=1)
+    i = jnp.concatenate([ids, new_ids], axis=1)
+    e = (jnp.concatenate([extra, new_extra], axis=1)
+         if extra is not None else None)
+    # dedupe: sort by (id asc); duplicates adjacent; keep the first
+    # occurrence with the *smallest key* -> sort by (id, key)
+    order = jnp.lexsort((k, i))
+    k = jnp.take_along_axis(k, order, axis=1)
+    i = jnp.take_along_axis(i, order, axis=1)
+    if e is not None:
+        # keep the max extra among duplicates (visited wins): approximate
+        # by taking the flag of the kept (first) occurrence after lexsort
+        # with visited as secondary key desc would be ideal; visited
+        # entries also carry +inf keys in our usage, so (id, key) order
+        # already puts the live entry first.
+        e = jnp.take_along_axis(e, order, axis=1)
+    dup = jnp.concatenate(
+        [jnp.zeros((i.shape[0], 1), bool), i[:, 1:] == i[:, :-1]], axis=1)
+    dup |= i < 0
+    k = jnp.where(dup, jnp.inf, k)
+    i = jnp.where(dup, -1, i)
+    order2 = jnp.argsort(k, axis=1)[:, :size]
+    k = jnp.take_along_axis(k, order2, axis=1)
+    i = jnp.take_along_axis(i, order2, axis=1)
+    if e is not None:
+        e = jnp.where(dup, 0, e)
+        e = jnp.take_along_axis(e, order2, axis=1)
+        return k, i, e
+    return k, i
+
+
+def _bit_get(mask: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """mask [Q, NB] u32, ids [Q, I] (>=0) -> [Q, I] bool."""
+    word = jnp.take_along_axis(mask, (ids >> 5).astype(jnp.int32), axis=1)
+    return ((word >> (ids & 31).astype(jnp.uint32)) & 1).astype(bool)
+
+
+def _bit_set(mask: jnp.ndarray, ids: jnp.ndarray,
+             on: jnp.ndarray) -> jnp.ndarray:
+    """Set bits for ids [Q] where on [Q] (ids >= 0)."""
+    q = mask.shape[0]
+    word_idx = (ids >> 5).astype(jnp.int32)
+    bit = (jnp.uint32(1) << (ids & 31).astype(jnp.uint32))
+    bit = jnp.where(on, bit, 0).astype(jnp.uint32)
+    cur = mask[jnp.arange(q), word_idx]
+    return mask.at[jnp.arange(q), word_idx].set(cur | bit)
+
+
+# -------------------------------------------------- navigation graph beam
+
+def nav_entry_points(ds: DeviceSegment, queries: jnp.ndarray,
+                     beam: int = 8, hops: int = 12, num: int = 4,
+                     metric: str = "l2") -> jnp.ndarray:
+    """Batched beam search on the in-memory navigation graph.
+    Returns [Q, num] *global* entry ids (no block I/O involved)."""
+    qn = queries.shape[0]
+    d0 = _dists(queries, ds.nav_vecs[ds.nav_entry][None, None, :].repeat(
+        qn, axis=0), metric)[:, 0]
+    ids = jnp.full((qn, beam), -1, jnp.int32).at[:, 0].set(ds.nav_entry)
+    keys = jnp.full((qn, beam), jnp.inf).at[:, 0].set(d0)
+    expanded = jnp.zeros((qn, beam), bool)
+
+    def body(_, state):
+        ids, keys, expanded = state
+        open_key = jnp.where(expanded | (ids < 0), jnp.inf, keys)
+        pick = jnp.argmin(open_key, axis=1)                  # [Q]
+        has_open = jnp.isfinite(
+            jnp.take_along_axis(open_key, pick[:, None], axis=1))[:, 0]
+        u = jnp.take_along_axis(ids, pick[:, None], axis=1)[:, 0]
+        u_safe = jnp.maximum(u, 0)
+        expanded = expanded.at[jnp.arange(qn), pick].set(
+            expanded[jnp.arange(qn), pick] | has_open)
+        nb = ds.nav_adj[u_safe]                              # [Q, deg']
+        valid = (nb >= 0) & has_open[:, None]
+        nb_safe = jnp.maximum(nb, 0)
+        nd = _dists(queries, ds.nav_vecs[nb_safe], metric)
+        nd = jnp.where(valid, nd, jnp.inf)
+        nb_m = jnp.where(valid, nb, -1)
+        keys, ids, expanded = _merge_top(
+            keys, ids, nd, nb_m, beam,
+            extra=expanded.astype(jnp.int32),
+            new_extra=jnp.zeros(nb.shape, jnp.int32))
+        return ids, keys, expanded.astype(bool)
+
+    ids, keys, _ = jax.lax.fori_loop(0, hops, body, (ids, keys, expanded))
+    top = ids[:, :num]
+    return ds.nav_ids[jnp.maximum(top, 0)] * (top >= 0) + (-1) * (top < 0)
+
+
+# ------------------------------------------------------ main block search
+
+@functools.partial(jax.jit, static_argnames=(
+    "k", "candidates", "sigma", "max_hops", "metric", "nav_beam",
+    "nav_hops", "entry_points", "fetch_width"))
+def device_anns(ds: DeviceSegment, queries: jnp.ndarray, k: int = 10,
+                candidates: int = 64, sigma: float = 0.3,
+                max_hops: int = 256, metric: str = "l2",
+                nav_beam: int = 8, nav_hops: int = 12,
+                entry_points: int = 4, fetch_width: int = 1):
+    """Batched Starling ANNS on one segment shard.
+
+    ``fetch_width`` > 1 fetches the F best unvisited candidates' blocks
+    per round-trip (beyond-paper: the paper's Central Assumption notes a
+    few random reads per SSD/DMA round-trip cost about the same as one —
+    this trades block-bandwidth for round-trip latency).
+
+    Returns (ids [Q, k], dists [Q, k], io [Q] block reads,
+    hops [Q] round trips)."""
+    qn, d = queries.shape
+    rho, eps = ds.vid.shape
+    n = ds.block_of.shape[0]
+    nb_words = -(-n // 32)
+    fw = max(fetch_width, 1)
+    res_size = k + 2 * eps * fw
+    n_expand = fw * (1 + max(int(np.ceil((eps - 1) * sigma)), 0))
+    queries = queries.astype(jnp.float32)
+
+    lut = _adc_lut(queries, ds.pq_cent, metric)              # [Q, M, K]
+    entry = nav_entry_points(ds, queries, beam=nav_beam, hops=nav_hops,
+                             num=entry_points, metric=metric)
+    e_codes = ds.pq_codes[jnp.maximum(entry, 0)]
+    e_key = jnp.where(entry >= 0, _adc(lut, e_codes), jnp.inf)
+
+    cand_id = jnp.full((qn, candidates), -1, jnp.int32)
+    cand_key = jnp.full((qn, candidates), jnp.inf)
+    cand_key, cand_id = _merge_top(cand_key, cand_id, e_key, entry,
+                                   candidates)
+    visited = jnp.zeros((qn, nb_words), jnp.uint32)          # expanded set
+    res_id = jnp.full((qn, res_size), -1, jnp.int32)
+    res_key = jnp.full((qn, res_size), jnp.inf)
+    io = jnp.zeros((qn,), jnp.int32)
+    hops = jnp.zeros((qn,), jnp.int32)
+
+    def cond(state):
+        cand_id, cand_key, visited, res_id, res_key, io, hops, t = state
+        vis = _bit_get(visited, jnp.maximum(cand_id, 0)) | (cand_id < 0)
+        live = jnp.isfinite(jnp.where(vis, jnp.inf, cand_key)).any()
+        return live & (t < max_hops)
+
+    def body(state):
+        cand_id, cand_key, visited, res_id, res_key, io, hops, t = state
+        vis = _bit_get(visited, jnp.maximum(cand_id, 0)) | (cand_id < 0)
+        open_key = jnp.where(vis, jnp.inf, cand_key)
+        neg_top, picks = jax.lax.top_k(-open_key, fw)        # [Q, F]
+        f_active = jnp.isfinite(-neg_top)                    # [Q, F]
+        active = f_active[:, 0]
+        u = jnp.take_along_axis(cand_id, picks, axis=1)      # [Q, F]
+        u = jnp.where(f_active, u, -1)
+        u_safe = jnp.maximum(u, 0)
+
+        # --- DR: F block DMAs per round trip (one per active candidate)
+        b = ds.block_of[u_safe]                              # [Q, F]
+        vid = ds.vid[b].reshape(qn, fw * eps)                # [Q, F*eps]
+        vecs = ds.vecs[b].reshape(qn, fw * eps, -1)
+        nbrs = ds.nbrs[b].reshape(qn, fw * eps, -1)
+        io = io + f_active.sum(axis=1).astype(jnp.int32)
+        hops = hops + active.astype(jnp.int32)               # round trips
+
+        # --- DC: exact-rank all residents; fold into results
+        dd = _dists(queries, vecs, metric)                   # [Q, F*eps]
+        f_valid = jnp.repeat(f_active, eps, axis=1)
+        slot_valid = (vid >= 0) & f_valid
+        dd_m = jnp.where(slot_valid, dd, jnp.inf)
+        res_key, res_id = _merge_top(res_key, res_id, dd_m,
+                                     jnp.where(slot_valid, vid, -1),
+                                     res_size)
+
+        # --- block pruning: expand targets + top-((eps-1)*sigma)
+        is_target = (vid[:, :, None] == u[:, None, :]).any(-1) \
+            & (vid >= 0)
+        sel_key = jnp.where(is_target, -jnp.inf, dd_m)
+        order = jnp.argsort(sel_key, axis=1)[:, :n_expand]   # [Q, X]
+        ex_id = jnp.take_along_axis(vid, order, axis=1)
+        ex_valid = (jnp.take_along_axis(sel_key, order, axis=1)
+                    < jnp.inf) & active[:, None] & (ex_id >= 0)
+        ex_new = ex_valid & ~_bit_get(visited, jnp.maximum(ex_id, 0))
+        for j in range(n_expand):                            # mark expanded
+            visited = _bit_set(visited, jnp.maximum(ex_id[:, j], 0),
+                               ex_new[:, j])
+
+        # --- collect neighbors of expanded slots, route by PQ
+        ex_nbrs = jnp.take_along_axis(
+            nbrs, order[:, :, None], axis=1)                 # [Q, X, Lam]
+        flat = ex_nbrs.reshape(qn, -1)
+        f_valid = (flat >= 0) & ex_new.repeat(
+            ex_nbrs.shape[2], axis=1) & active[:, None]
+        f_safe = jnp.maximum(flat, 0)
+        f_valid &= ~_bit_get(visited, f_safe)                # skip expanded
+        f_codes = ds.pq_codes[f_safe]                        # [Q, F, M]
+        f_key = jnp.where(f_valid, _adc(lut, f_codes), jnp.inf)
+        f_id = jnp.where(f_valid, flat, -1)
+        cand_key, cand_id = _merge_top(cand_key, cand_id, f_key, f_id,
+                                       candidates)
+        return (cand_id, cand_key, visited, res_id, res_key, io, hops,
+                t + 1)
+
+    state = (cand_id, cand_key, visited, res_id, res_key, io, hops,
+             jnp.zeros((), jnp.int32))
+    state = jax.lax.while_loop(cond, body, state)
+    _, _, _, res_id, res_key, io, hops, _ = state
+    return res_id[:, :k], res_key[:, :k], io, hops
+
+
+# --------------------------------------------- production mesh search step
+
+def make_search_step(mesh, rules, *,
+                     n_local: int = 1 << 21, dim: int = 128,
+                     eps: int = 16, lam: int = 31, q_global: int = 4096,
+                     pq_m: int = 16, pq_k: int = 256,
+                     nav_frac: int = 64, nav_deg: int = 12,
+                     k: int = 10):
+    """Build (fn, arg ShapeDtypeStructs) for the segment-search dry-run.
+
+    Layout: every ``model`` rank owns an independent sub-segment of
+    ``n_local`` vectors (16 ranks x 2M = 33M vectors per pod row — the
+    paper's segment scale); queries are sharded over ``data`` (x ``pod``)
+    and replicated over ``model``. The step runs the local block search
+    via shard_map and merges per-segment top-k with one all-gather over
+    ``model``.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from jax import shard_map
+
+    model_n = mesh.shape["model"]
+    data_axes = tuple(a for a in mesh.axis_names if a != "model")
+    rho = n_local // eps
+    nav_n = n_local // nav_frac
+    dsub = dim // pq_m
+
+    def sds(shape, dtype, spec):
+        return jax.ShapeDtypeStruct(
+            shape, dtype, sharding=NamedSharding(mesh, spec))
+
+    seg_specs = DeviceSegment(
+        vecs=sds((model_n, rho, eps, dim), jnp.bfloat16, P("model")),
+        vid=sds((model_n, rho, eps), jnp.int32, P("model")),
+        deg=sds((model_n, rho, eps), jnp.int32, P("model")),
+        nbrs=sds((model_n, rho, eps, lam), jnp.int32, P("model")),
+        block_of=sds((model_n, n_local), jnp.int32, P("model")),
+        pq_codes=sds((model_n, n_local, pq_m), jnp.uint8, P("model")),
+        pq_cent=sds((model_n, pq_m, pq_k, dsub), jnp.float32, P("model")),
+        nav_vecs=sds((model_n, nav_n, dim), jnp.float32, P("model")),
+        nav_adj=sds((model_n, nav_n, nav_deg), jnp.int32, P("model")),
+        nav_ids=sds((model_n, nav_n), jnp.int32, P("model")),
+        nav_entry=sds((model_n,), jnp.int32, P("model")),
+    )
+    q_specs = sds((q_global, dim), jnp.float32, P(data_axes))
+
+    in_specs = (DeviceSegment(
+        vecs=P("model"), vid=P("model"), deg=P("model"), nbrs=P("model"),
+        block_of=P("model"), pq_codes=P("model"), pq_cent=P("model"),
+        nav_vecs=P("model"), nav_adj=P("model"), nav_ids=P("model"),
+        nav_entry=P("model")), P(data_axes))
+    out_specs = (P(data_axes), P(data_axes), P(data_axes, "model"))
+
+    def local_search(seg: DeviceSegment, queries):
+        seg = jax.tree.map(lambda a: a[0], seg)      # strip shard dim
+        seg = dataclasses.replace(
+            seg, vecs=seg.vecs.astype(jnp.float32))
+        ids, dists, io, hops = device_anns(
+            seg, queries, k=k, candidates=64, sigma=0.3, max_hops=128)
+        # hierarchical top-k merge over segment ranks: all-gather k
+        # results per rank (O(k) bytes cross-rank, not O(Gamma))
+        rank = jax.lax.axis_index("model")
+        gids = jax.lax.all_gather(ids, "model")      # [S, Q, k]
+        gd = jax.lax.all_gather(dists, "model")
+        s, q, _ = gids.shape
+        flat_d = jnp.moveaxis(gd, 0, 1).reshape(q, s * k)
+        flat_i = jnp.moveaxis(gids, 0, 1).reshape(q, s * k)
+        seg_of = jnp.repeat(jnp.arange(s, dtype=jnp.int32), k)[None, :]
+        order = jnp.argsort(flat_d, axis=1)[:, :k]
+        out_d = jnp.take_along_axis(flat_d, order, axis=1)
+        out_i = jnp.take_along_axis(flat_i, order, axis=1)
+        out_seg = jnp.take_along_axis(
+            jnp.broadcast_to(seg_of, flat_i.shape), order, axis=1)
+        # global id = segment rank * n_local + local id
+        gid = out_seg * n_local + out_i
+        return gid, out_d, io[:, None] * jnp.ones((1, 1), jnp.int32)
+
+    fn = shard_map(local_search, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_vma=False)
+    return fn, (seg_specs, q_specs)
+
+
+# ---------------------------------------------------------- range search
+
+@functools.partial(jax.jit, static_argnames=(
+    "radius", "k_cap", "candidates", "sigma", "max_hops", "metric",
+    "rounds", "ratio"))
+def device_range_search(ds: DeviceSegment, queries: jnp.ndarray,
+                        radius: float, k_cap: int = 256,
+                        candidates: int = 32, sigma: float = 0.3,
+                        max_hops: int = 256, metric: str = "l2",
+                        rounds: int = 3, ratio: float = 0.5):
+    """Batched RS (§5.3 semantics, device formulation): run ANNS with a
+    growing candidate set per round; stop growing a query's set once the
+    in-range fraction of its results drops below ``ratio``. Returns
+    (ids [Q, k_cap], dists, in_range mask, io)."""
+    io_total = jnp.zeros((queries.shape[0],), jnp.int32)
+    ids = dists = None
+    c = candidates
+    for _ in range(rounds):
+        k_r = min(k_cap, c)
+        ids, dists, io, _ = device_anns(
+            ds, queries, k=k_r, candidates=c, sigma=sigma,
+            max_hops=max_hops, metric=metric)
+        io_total = io_total + io
+        in_r = (dists <= radius).sum(axis=1)
+        frac = in_r / jnp.maximum(k_r, 1)
+        if c * 2 > k_cap:
+            break
+        c *= 2
+        # (rounds are compile-time unrolled; per-query early-exit is
+        # handled by the ratio mask on the host serving layer)
+    pad = k_cap - ids.shape[1]
+    if pad > 0:
+        ids = jnp.pad(ids, ((0, 0), (0, pad)), constant_values=-1)
+        dists = jnp.pad(dists, ((0, 0), (0, pad)),
+                        constant_values=jnp.inf)
+    return ids, dists, dists <= radius, io_total

@@ -1,0 +1,94 @@
+"""Distance primitives.
+
+Host-side (numpy, BLAS-backed) helpers for index construction and the
+reference search implementation, plus jit'd chunked brute force used for
+ground truth and KNN-graph seeding.
+
+Conventions: ``l2`` returns *squared* Euclidean distance (monotone in the
+true metric, as in DiskANN/Starling implementations); ``ip`` returns the
+negated inner product so that smaller is always better.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def pairwise(a: np.ndarray, b: np.ndarray, metric: str = "l2") -> np.ndarray:
+    """[Na, D] x [Nb, D] -> [Na, Nb] distance matrix (numpy, float32)."""
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    dot = a @ b.T
+    if metric == "ip":
+        return -dot
+    na = np.sum(a * a, axis=1, keepdims=True)
+    nb = np.sum(b * b, axis=1, keepdims=True)
+    d = na + nb.T - 2.0 * dot
+    return np.maximum(d, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def pairwise_jit(a: jnp.ndarray, b: jnp.ndarray, metric: str = "l2"):
+    dot = a @ b.T
+    if metric == "ip":
+        return -dot
+    na = jnp.sum(a * a, axis=1, keepdims=True)
+    nb = jnp.sum(b * b, axis=1, keepdims=True)
+    return jnp.maximum(na + nb.T - 2.0 * dot, 0.0)
+
+
+def point_to_points(q: np.ndarray, x: np.ndarray, metric: str = "l2"
+                    ) -> np.ndarray:
+    """[D] x [N, D] -> [N]."""
+    q = np.asarray(q, np.float32)
+    x = np.asarray(x, np.float32)
+    if metric == "ip":
+        return -(x @ q)
+    diff = x - q[None, :]
+    return np.einsum("nd,nd->n", diff, diff)
+
+
+def brute_force_knn(x: np.ndarray, q: np.ndarray, k: int,
+                    metric: str = "l2", chunk: int = 4096) -> np.ndarray:
+    """Exact top-k ids for each query row (ground truth). [Nq, k] int32."""
+    x = np.asarray(x, np.float32)
+    q = np.asarray(q, np.float32)
+    out = np.empty((q.shape[0], k), np.int32)
+    xj = jnp.asarray(x)
+    for s in range(0, q.shape[0], chunk):
+        d = pairwise_jit(jnp.asarray(q[s:s + chunk]), xj, metric=metric)
+        _, idx = jax.lax.top_k(-d, k)
+        out[s:s + chunk] = np.asarray(idx, np.int32)
+    return out
+
+
+def brute_force_range(x: np.ndarray, q: np.ndarray, radius: float,
+                      metric: str = "l2", chunk: int = 2048):
+    """Exact range-search ground truth: list of id arrays per query."""
+    x = np.asarray(x, np.float32)
+    out = []
+    for s in range(0, q.shape[0], chunk):
+        d = np.asarray(pairwise_jit(jnp.asarray(q[s:s + chunk]),
+                                    jnp.asarray(x), metric=metric))
+        for row in d:
+            out.append(np.where(row <= radius)[0].astype(np.int32))
+    return out
+
+
+def knn_graph(x: np.ndarray, k: int, metric: str = "l2",
+              chunk: int = 2048) -> np.ndarray:
+    """Exact KNN graph over x (excluding self). [N, k] int32."""
+    n = x.shape[0]
+    ids = brute_force_knn(x, x, min(k + 1, n), metric=metric, chunk=chunk)
+    out = np.empty((n, k), np.int32)
+    for i in range(n):
+        row = ids[i]
+        row = row[row != i][:k]
+        if row.shape[0] < k:  # degenerate duplicates; pad with self-exclusions
+            pad = np.setdiff1d(np.arange(min(n, k + 2)), np.append(row, i))
+            row = np.append(row, pad)[:k]
+        out[i] = row
+    return out

@@ -1,0 +1,85 @@
+"""I/O accounting and the latency cost model (Eq. 4).
+
+Everything the paper measures flows through this module:
+
+  * ``IOStats`` — per-query counters: block reads (mean I/Os), vertices
+    fetched vs vertices used (vertex-utilization ξ, Tab. 2), hops (path
+    length ℓ), distance computations.
+  * ``CostModel`` — T_total = T_io + T_comp + T_other (Eq. 4), with an
+    overlap factor for the I/O–compute pipeline (§5.1). Two presets:
+    the paper's NVMe segment and the TPU HBM-block regime of DESIGN.md §2 —
+    latencies are *model parameters*, so every latency/QPS figure derived
+    from them is clearly labeled modeled-not-measured on this CPU container.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class IOStats:
+    block_reads: int = 0        # number of block fetches (the paper's I/Os)
+    io_round_trips: int = 0     # batched fetches issued (≤ block_reads)
+    vertices_fetched: int = 0   # ε per block read
+    vertices_used: int = 0      # distance-evaluated full-precision vertices
+    hops: int = 0               # total expansions (== block reads)
+    hops_to_best: int = 0       # ℓ: hop at which the final top-1 was
+    #                             found (the paper's path length)
+    dist_comps: int = 0         # full-precision distance computations
+    pq_comps: int = 0           # ADC distance computations
+
+    def merge(self, other: "IOStats") -> None:
+        for f in dataclasses.fields(self):
+            if f.name == "hops_to_best":
+                self.hops_to_best = max(self.hops_to_best,
+                                        other.hops_to_best)
+                continue
+            setattr(self, f.name,
+                    getattr(self, f.name) + getattr(other, f.name))
+
+    @property
+    def vertex_utilization(self) -> float:
+        """ξ: fraction of fetched vertices actually used (Tab. 2)."""
+        if self.vertices_fetched == 0:
+            return 0.0
+        return self.vertices_used / self.vertices_fetched
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Latency model; times in microseconds."""
+    t_block_io: float           # one block fetch
+    t_dist: float               # one full-precision distance (D-dim)
+    t_pq: float                 # one ADC distance
+    t_hop_other: float = 0.2    # queue maintenance per hop
+    name: str = "model"
+
+    def latency_us(self, s: IOStats, pipeline: bool = False) -> float:
+        t_io = s.block_reads * self.t_block_io
+        t_comp = s.dist_comps * self.t_dist + s.pq_comps * self.t_pq
+        t_other = s.hops * self.t_hop_other
+        if pipeline:
+            # §5.1: DR and DC run concurrently; serial residue is the max
+            # plus the non-overlappable other time.
+            return max(t_io, t_comp) + t_other
+        return t_io + t_comp + t_other
+
+    def breakdown(self, s: IOStats, pipeline: bool = False) -> dict:
+        t_io = s.block_reads * self.t_block_io
+        t_comp = s.dist_comps * self.t_dist + s.pq_comps * self.t_pq
+        t_other = s.hops * self.t_hop_other
+        total = self.latency_us(s, pipeline)
+        return {"t_io_us": t_io, "t_comp_us": t_comp, "t_other_us": t_other,
+                "total_us": total,
+                "io_frac": t_io / max(t_io + t_comp + t_other, 1e-9)}
+
+
+# The paper's segment: NVMe 4KB random read ~90–100 µs per round-trip,
+# ~0.05 µs per 128-d L2 on one core, ADC ~0.01 µs.
+NVME_SEGMENT = CostModel(t_block_io=95.0, t_dist=0.055, t_pq=0.012,
+                         name="nvme")
+
+# TPU regime (DESIGN.md §2): 4 KB HBM→VMEM DMA ≈ 1.2 µs latency-bound,
+# VPU block ranking ≈ 0.02 µs/vector amortized, ADC ≈ 0.002 µs via LUT tiles.
+TPU_HBM_SEGMENT = CostModel(t_block_io=1.2, t_dist=0.02, t_pq=0.002,
+                            name="tpu-hbm")

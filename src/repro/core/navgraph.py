@@ -1,0 +1,69 @@
+"""In-memory navigation graph (§4.2).
+
+Sample μ·N vertices, build a graph index over the sample with the *same*
+algorithm family as the disk graph, and answer "give me entry points near q"
+without any disk I/O. Returned ids are in the *full dataset* id space.
+
+For the HNSW variant the upper layers of the disk HNSW play this role
+(multi-layered navigation, Fig. 16(b)) — see ``from_hnsw_layers``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core import distances as D
+from repro.core import graph as G
+from repro.core.params import GraphParams, NavGraphParams
+
+
+@dataclasses.dataclass
+class NavGraph:
+    graph: G.Graph
+    sample_ids: np.ndarray      # [n'] global ids of sampled vertices
+    vectors: np.ndarray         # [n', D] resident copies (the memory charge)
+
+    def memory_bytes(self) -> int:
+        """C_graph of Eq. 10: resident vectors + adjacency + degree."""
+        return (self.vectors.nbytes + self.graph.adj.nbytes
+                + self.graph.deg.nbytes + self.sample_ids.nbytes)
+
+    def entry_points(self, queries: np.ndarray, beam: int,
+                     num: int) -> np.ndarray:
+        """[Q, num] global entry-point ids (query-aware, no disk I/O)."""
+        ids, _, _ = G.greedy_search_batch(
+            self.vectors, self.graph.adj, self.graph.deg, self.graph.entry,
+            queries, beam=max(beam, num), metric=self.graph.metric)
+        picked = ids[:, :num]
+        picked = np.where(picked >= 0, picked, 0)
+        return self.sample_ids[picked.astype(np.int64)]
+
+
+def build_navgraph(x: np.ndarray, p: NavGraphParams, metric: str = "l2",
+                   algo: str = "vamana") -> NavGraph:
+    n = x.shape[0]
+    rng = np.random.default_rng(p.seed)
+    n_s = max(int(round(p.sample_ratio * n)), min(n, 8))
+    ids = np.sort(rng.choice(n, size=n_s, replace=False)).astype(np.int32)
+    sub = np.ascontiguousarray(x[ids], dtype=np.float32)
+    gp = GraphParams(max_degree=p.max_degree,
+                     build_beam=max(p.build_beam, p.max_degree),
+                     algo=algo, seed=p.seed)
+    g = G.build_graph(sub, gp, metric)
+    return NavGraph(graph=g, sample_ids=ids, vectors=sub)
+
+
+def from_hnsw_layers(x: np.ndarray, h: G.HNSWGraph,
+                     p: NavGraphParams) -> NavGraph:
+    """Starling-HNSW: upper layers stay in memory as the navigation
+    structure. We flatten layers 1.. into one sampled graph (union of
+    level-1+ vertices with the level-1 adjacency)."""
+    if len(h.layers) < 2:
+        # degenerate: no upper layer; sample instead
+        return build_navgraph(x, p, h.metric, algo="nsg")
+    ids = h.level_ids[1]
+    g = h.layers[1]
+    return NavGraph(graph=g, sample_ids=ids.astype(np.int32),
+                    vectors=np.ascontiguousarray(x[ids], np.float32))

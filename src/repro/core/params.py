@@ -1,0 +1,116 @@
+"""Parameter dataclasses for the Starling segment index.
+
+Notation follows the paper (§4.1):
+  Λ (max_degree)   — max neighbor IDs stored per vertex
+  λ                — actual neighbor count (stored inline, padded to Λ)
+  γ (vertex_kb)    — KB per vertex on "disk" = D·dtype + 4 + Λ·4 bytes
+  η (block_kb)     — block size in KB (smallest I/O unit)
+  ε (verts_per_block) — ⌊η/γ⌋
+  ρ (num_blocks)   — ⌈|V|/ε⌉
+  σ (pruning_ratio)   — block-pruning ratio (§5.1), paper optimum 0.3
+  μ (sample_ratio)    — navigation-graph sample ratio (§4.2)
+  φ (rs_ratio)        — range-search doubling threshold (§5.3), paper 0.5
+  Γ (candidate_size)  — search candidate-set size (App. M)
+  β, τ             — shuffling iteration cap / OR-gain threshold (App. C)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphParams:
+    """Graph-index construction parameters (Vamana/NSG/HNSW-flavour)."""
+    max_degree: int = 32          # Λ
+    build_beam: int = 64          # L (candidate list during construction)
+    alpha: float = 1.2            # Vamana robust-prune slack
+    algo: str = "vamana"          # vamana | nsg | hnsw
+    insert_batch: int = 256       # batched-insert chunk during build
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.build_beam >= self.max_degree, "L must be >= Λ (App. L)"
+        assert self.algo in ("vamana", "nsg", "hnsw")
+
+
+@dataclasses.dataclass(frozen=True)
+class LayoutParams:
+    """Block-level layout parameters (§4.1)."""
+    block_kb: float = 4.0         # η
+    shuffle: str = "bnf"          # none | bnp | bnf | bns
+    bnf_iters: int = 8            # β  (paper default 8, App. C)
+    bns_iters: int = 2            # β for BNS (expensive; App. F)
+    gain_tau: float = 0.01        # τ  (paper default 0.01, App. C)
+
+    def verts_per_block(self, dim: int, max_degree: int,
+                        dtype_bytes: int = 4) -> int:
+        """ε = ⌊η/γ⌋ with γ = D·b + 4 (λ) + Λ·4 bytes (Example 2)."""
+        gamma = dim * dtype_bytes + 4 + max_degree * 4
+        eps = int(self.block_kb * 1024) // gamma
+        if eps < 1:
+            raise ValueError(
+                f"vertex ({gamma}B) does not fit a {self.block_kb}KB block")
+        return eps
+
+    def num_blocks(self, n: int, dim: int, max_degree: int,
+                   dtype_bytes: int = 4) -> int:
+        eps = self.verts_per_block(dim, max_degree, dtype_bytes)
+        return math.ceil(n / eps)
+
+
+@dataclasses.dataclass(frozen=True)
+class PQParams:
+    """Product-quantization parameters for in-memory routing (§5.1)."""
+    num_subspaces: int = 8        # M
+    num_centroids: int = 256      # K (uint8 codes)
+    train_iters: int = 12
+    train_sample: int = 16384
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class NavGraphParams:
+    """In-memory navigation graph (§4.2)."""
+    sample_ratio: float = 0.1     # μ
+    max_degree: int = 20          # Λ' (smaller than disk graph; Tab. 17)
+    build_beam: int = 64
+    search_beam: int = 16         # beam when finding entry points
+    num_entry_points: int = 4     # entry points handed to the disk search
+    seed: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchParams:
+    """Online search parameters (§5)."""
+    candidate_size: int = 64      # Γ
+    pruning_ratio: float = 0.3    # σ
+    use_pq_routing: bool = True
+    use_nav_graph: bool = True
+    use_block_search: bool = True  # False → vertex-at-a-time (baseline strat)
+    pipeline: bool = True          # I/O–compute overlap (modeled on CPU)
+    rs_ratio: float = 0.5          # φ
+    rs_max_rounds: int = 6         # cap on candidate-set doublings
+    max_hops: int = 4096           # safety valve
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentBudget:
+    """Per-segment space budget (§2.2: ≤2 GB DRAM, ≤10 GB disk)."""
+    memory_bytes: int = 2 << 30
+    disk_bytes: int = 10 << 30
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentParams:
+    graph: GraphParams = dataclasses.field(default_factory=GraphParams)
+    layout: LayoutParams = dataclasses.field(default_factory=LayoutParams)
+    pq: PQParams = dataclasses.field(default_factory=PQParams)
+    nav: NavGraphParams = dataclasses.field(default_factory=NavGraphParams)
+    search: SearchParams = dataclasses.field(default_factory=SearchParams)
+    budget: SegmentBudget = dataclasses.field(default_factory=SegmentBudget)
+    metric: str = "l2"            # l2 | ip
+
+    def __post_init__(self):
+        assert self.metric in ("l2", "ip")

@@ -1,0 +1,140 @@
+"""Segment build orchestration + space-budget accounting (§2.2, §6.4).
+
+``build_segment`` runs the full offline pipeline of Eq. 8:
+  T_disk_graph  — graph construction (Vamana/NSG/HNSW)
+  T_shuffling   — block shuffling (BNP/BNF/BNS)
+  T_memory_graph— in-memory navigation graph on the μ-sample
+  T_PQ          — PQ codebook training + encoding
+
+and returns a ``Segment`` whose ``memory_bytes()`` implements Eq. 10
+(C_graph + C_mapping + C_PQ&others) and ``disk_bytes()`` the block file.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core import graph as G
+from repro.core import layout as L
+from repro.core import navgraph as NG
+from repro.core.blockstore import BlockStore, build_store
+from repro.core.params import SegmentParams
+from repro.core.search import SegmentView
+from repro.pq import PQCodebook, encode_pq, train_pq
+
+
+@dataclasses.dataclass
+class Segment:
+    view: SegmentView
+    graph: G.Graph
+    params: SegmentParams
+    build_times: Dict[str, float]
+    overlap_ratio: float
+
+    @property
+    def num_vectors(self) -> int:
+        return self.graph.num_vertices
+
+    def memory_bytes(self) -> int:
+        """Eq. 10: C_graph + C_mapping + C_PQ&others."""
+        c_graph = (self.view.nav.memory_bytes()
+                   if self.view.nav is not None else 0)
+        c_mapping = self.view.layout.mapping_bytes()
+        c_pq = (self.view.pq_codes.nbytes + self.view.pq_cb.memory_bytes()
+                if self.view.pq_codes is not None else 0)
+        return c_graph + c_mapping + c_pq
+
+    def disk_bytes(self) -> int:
+        return self.view.store.disk_bytes()
+
+    def check_budget(self) -> Dict[str, bool]:
+        b = self.params.budget
+        return {"memory_ok": self.memory_bytes() <= b.memory_bytes,
+                "disk_ok": self.disk_bytes() <= b.disk_bytes}
+
+
+def build_segment(x: np.ndarray, params: SegmentParams,
+                  graph: Optional[G.Graph] = None) -> Segment:
+    x = np.ascontiguousarray(x, np.float32)
+    times: Dict[str, float] = {}
+
+    t0 = time.perf_counter()
+    g = graph if graph is not None else G.build_graph(
+        x, params.graph, params.metric)
+    times["disk_graph_s"] = time.perf_counter() - t0
+
+    eps = params.layout.verts_per_block(x.shape[1], g.max_degree)
+    t0 = time.perf_counter()
+    lay = L.make_layout(g, eps, params.layout.shuffle, x=x,
+                        bnf_iters=params.layout.bnf_iters,
+                        bns_iters=params.layout.bns_iters,
+                        tau=params.layout.gain_tau)
+    times["shuffling_s"] = time.perf_counter() - t0
+    lay.validate()
+
+    t0 = time.perf_counter()
+    nav = (NG.build_navgraph(x, params.nav, params.metric,
+                             algo="nsg")
+           if params.search.use_nav_graph else None)
+    times["memory_graph_s"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    cb = train_pq(x, params.pq, params.metric)
+    codes = encode_pq(x, cb)
+    times["pq_s"] = time.perf_counter() - t0
+
+    store = build_store(x, g, lay, params.layout.block_kb)
+    view = SegmentView(store=store, layout=lay, nav=nav,
+                       pq_codes=codes, pq_cb=cb, metric=params.metric,
+                       entry=g.entry)
+    return Segment(view=view, graph=g, params=params, build_times=times,
+                   overlap_ratio=L.overlap_ratio(g, lay))
+
+
+def save_segment(seg: Segment, path: str) -> None:
+    np.savez_compressed(
+        path,
+        adj=seg.graph.adj, deg=seg.graph.deg, entry=seg.graph.entry,
+        blocks=seg.view.layout.blocks, block_of=seg.view.layout.block_of,
+        slot_of=seg.view.layout.slot_of,
+        vid=seg.view.store.vid, vecs=seg.view.store.vecs,
+        meta=seg.view.store.meta,
+        pq_codes=seg.view.pq_codes, pq_cent=seg.view.pq_cb.centroids,
+        nav_ids=(seg.view.nav.sample_ids if seg.view.nav is not None
+                 else np.zeros(0, np.int32)),
+        nav_adj=(seg.view.nav.graph.adj if seg.view.nav is not None
+                 else np.zeros((0, 1), np.int32)),
+        nav_deg=(seg.view.nav.graph.deg if seg.view.nav is not None
+                 else np.zeros(0, np.int32)),
+        nav_entry=(seg.view.nav.graph.entry
+                   if seg.view.nav is not None else 0),
+        nav_vecs=(seg.view.nav.vectors if seg.view.nav is not None
+                  else np.zeros((0, 1), np.float32)),
+        metric=seg.params.metric, block_kb=seg.params.layout.block_kb,
+        overlap=seg.overlap_ratio)
+
+
+def load_segment(path: str, params: SegmentParams) -> Segment:
+    z = np.load(path, allow_pickle=False)
+    g = G.Graph(adj=z["adj"], deg=z["deg"], entry=int(z["entry"]),
+                metric=str(z["metric"]))
+    lay = L.BlockLayout(blocks=z["blocks"], block_of=z["block_of"],
+                        slot_of=z["slot_of"])
+    store = BlockStore(vid=z["vid"], vecs=z["vecs"], meta=z["meta"],
+                       block_kb=float(z["block_kb"]))
+    nav = None
+    if z["nav_ids"].shape[0]:
+        nav = NG.NavGraph(
+            graph=G.Graph(adj=z["nav_adj"], deg=z["nav_deg"],
+                          entry=int(z["nav_entry"]), metric=str(z["metric"])),
+            sample_ids=z["nav_ids"], vectors=z["nav_vecs"])
+    cb = PQCodebook(centroids=z["pq_cent"], dim=z["vecs"].shape[2],
+                    metric=str(z["metric"]))
+    view = SegmentView(store=store, layout=lay, nav=nav,
+                       pq_codes=z["pq_codes"], pq_cb=cb,
+                       metric=str(z["metric"]), entry=int(z["entry"]))
+    return Segment(view=view, graph=g, params=params, build_times={},
+                   overlap_ratio=float(z["overlap"]))

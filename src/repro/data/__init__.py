@@ -1,0 +1,2 @@
+from repro.data.pipeline import TokenPipeline
+from repro.data.vectors import clustered_vectors, query_set

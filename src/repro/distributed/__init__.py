@@ -1,0 +1,9 @@
+# Distribution substrate:
+#   sharding — logical-axis rules -> PartitionSpec/NamedSharding (GSPMD)
+#   hlo      — collective-bytes parser over lowered/compiled HLO text
+#   compress — int8 gradient all-reduce with error feedback
+#   elastic  — re-mesh planner for node loss (shrink data axis, keep batch)
+from repro.distributed.sharding import (AxisRules, SINGLE_POD_RULES,
+                                        MULTI_POD_RULES, logical_spec,
+                                        shard, set_rules, current_rules,
+                                        param_sharding_tree)

@@ -1,0 +1,78 @@
+"""Gradient compression: int8 quantized all-reduce with error feedback.
+
+Per-leaf symmetric int8 quantization (per-tensor scale = max|g|/127);
+the residual (g - dequant(q)) is carried in an error-feedback buffer and
+added to the next step's gradient, making the compressed SGD unbiased in
+the long run (Karimireddy et al., 2019). At 1000+ nodes this cuts the
+gradient all-reduce bytes 4x (f32) / 2x (bf16) at negligible loss.
+
+``compressed_psum`` is the collective-aware path used under shard_map /
+pmap; ``quantize``/``dequantize`` + ``ErrorFeedback`` are pure-tensor
+pieces unit-tested on CPU.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+
+def quantize(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(g)).astype(jnp.float32) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_init(params: Tree) -> Tree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_with_feedback(grads: Tree, errors: Tree
+                           ) -> Tuple[Tree, Tree, Tree]:
+    """Returns (int8 tree, scales tree, new error tree)."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize(corrected)
+        new_e = corrected - dequantize(q, s)
+        return q, s, new_e
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(errors)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    qs = jax.tree.unflatten(treedef, [o[0] for o in out])
+    ss = jax.tree.unflatten(treedef, [o[1] for o in out])
+    es = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return qs, ss, es
+
+
+def compressed_psum(grads: Tree, errors: Tree, axis_name: str
+                    ) -> Tuple[Tree, Tree]:
+    """All-reduce int8 gradients across ``axis_name`` (inside shard_map).
+
+    The scale is psum-maxed first so every rank dequantizes identically;
+    int8 payloads are summed as int32 (no overflow up to 2^24 ranks).
+    Returns (mean gradients f32, new error feedback)."""
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        scale = jax.lax.pmax(jnp.max(jnp.abs(corrected)) / 127.0,
+                             axis_name)
+        scale = jnp.maximum(scale, 1e-12)
+        q = jnp.clip(jnp.round(corrected / scale), -127, 127)
+        new_e = corrected - q * scale
+        summed = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        return summed.astype(jnp.float32) * scale / n, new_e
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(errors)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(treedef, [o[0] for o in out]),
+            jax.tree.unflatten(treedef, [o[1] for o in out]))

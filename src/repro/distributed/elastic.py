@@ -1,0 +1,52 @@
+"""Elastic re-mesh planning: map surviving node counts to a new mesh.
+
+Policy: the ``model`` (TP) degree is pinned (weights are laid out for
+it); elasticity comes from shrinking the ``data`` axis to the largest
+power of two supported by the survivors, rescaling per-device batch to
+keep the global batch constant, and raising grad-accum when the
+per-device batch would not divide. Restart = restore latest checkpoint
+with the new mesh (checkpoints are mesh-agnostic npz trees).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    data: int
+    model: int
+    pods: int
+    per_device_batch: int
+    grad_accum: int
+    dropped_chips: int
+
+    @property
+    def chips(self) -> int:
+        return self.pods * self.data * self.model
+
+
+def plan_remesh(surviving_chips: int, model: int, global_batch: int,
+                pods: int = 1, min_data: int = 1,
+                base_grad_accum: int = 1) -> Optional[RemeshPlan]:
+    """Largest (pod, data, model) mesh fitting the survivors; None if
+    even the minimum mesh does not fit."""
+    if surviving_chips < model * min_data * pods:
+        if pods > 1:
+            return plan_remesh(surviving_chips, model, global_batch,
+                               pods=pods - 1, min_data=min_data,
+                               base_grad_accum=base_grad_accum)
+        return None
+    data = 1
+    while data * 2 * model * pods <= surviving_chips:
+        data *= 2
+    chips = data * model * pods
+    dp_ways = data * pods
+    accum = base_grad_accum
+    while global_batch % (dp_ways * accum) and accum < global_batch:
+        accum += 1
+    per_dev = max(global_batch // (dp_ways * accum), 1)
+    return RemeshPlan(data=data, model=model, pods=pods,
+                      per_device_batch=per_dev, grad_accum=accum,
+                      dropped_chips=surviving_chips - chips)

@@ -1,0 +1,359 @@
+"""Trip-count-aware HLO-text analyzer — the roofline's data source.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body **once**, so
+for scan-over-layers models it undercounts FLOPs/bytes/collectives by the
+trip count (layers x grad-accum x seq-chunks). This analyzer re-derives
+the totals from the compiled HLO text:
+
+  * parses every computation into (name, shape, op, operands) tuples;
+  * extracts while-loop trip counts from the condition computation
+    (max integer constant compared against the induction variable —
+    exact for lax.scan/fori_loop, an upper bound for dynamic
+    while_loops);
+  * walks the call graph (while x trip, fusion/call once, conditional
+    max-of-branches) accumulating:
+      - dot FLOPs: 2 * prod(result dims) * prod(contracted dims)
+      - bytes accessed: operand + result bytes per effective instruction
+      - collective operand bytes per op kind
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(
+    r"\b(pred|s8|u8|s16|u16|bf16|f16|f8e4m3fn|f8e5m2|s32|u32|f32|s64"
+    r"|u64|f64|c64|c128)\[([0-9,]*)\]")
+
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+?)\s([\w\-]+)\((.*)$")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_COND_BODY_RE = re.compile(
+    r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_NO_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                 "bitcast", "after-all", "partition-id", "replica-id",
+                 "iota", "copy-start", "copy-done"}
+
+# ops an XLA:TPU fusion would keep in registers/VMEM (counted in the raw
+# byte total but excluded from the fused-traffic estimate)
+_ELEMENTWISE_OPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "exponential", "exponential-minus-one", "tanh", "negate", "compare",
+    "select", "convert", "broadcast", "reshape", "transpose", "reduce",
+    "rsqrt", "sqrt", "power", "and", "or", "not", "xor", "log",
+    "log-plus-one", "floor", "ceil", "clamp", "abs", "sign", "cosine",
+    "sine", "is-finite", "reduce-window", "map", "slice", "rem",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "round-nearest-afz", "round-nearest-even", "logistic", "atan2",
+}
+
+_GROUPS_ARRAY_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,\s]+?)\}")
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape_str: str
+    op: str
+    rest: str          # operands + attributes (raw tail of the line)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for t, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[t]
+    return total
+
+
+def _shape_dims(shape_str: str) -> List[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+def parse_module(text: str) -> Dict[str, List[Instr]]:
+    comps: Dict[str, List[Instr]] = {}
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        if not line.startswith(" ") and "{" in line and "->" in line:
+            m = _COMP_HEADER_RE.match(line.strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            comps[cur].append(Instr(m.group(1), m.group(2), m.group(3),
+                                    m.group(4)))
+    return comps
+
+
+def _group_size(rest: str) -> int:
+    m = _GROUPS_ARRAY_RE.search(rest)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(rest)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 1
+
+
+@dataclasses.dataclass
+class Totals:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0      # every top-level instruction
+    bytes_fused: float = 0.0         # TPU-fusion estimate (see below)
+    collective_bytes: float = 0.0
+    per_collective: Dict[str, Dict] = dataclasses.field(
+        default_factory=lambda: defaultdict(
+            lambda: {"count": 0.0, "bytes": 0.0}))
+    bytes_by_op: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    def add(self, other: "Totals", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes_accessed += other.bytes_accessed * mult
+        self.bytes_fused += other.bytes_fused * mult
+        self.collective_bytes += other.collective_bytes * mult
+        for k, v in other.per_collective.items():
+            self.per_collective[k]["count"] += v["count"] * mult
+            self.per_collective[k]["bytes"] += v["bytes"] * mult
+        for k, v in other.bytes_by_op.items():
+            self.bytes_by_op[k] += v * mult
+
+
+class HloAnalyzer:
+    def __init__(self, text: str, dynamic_while_default: int = 1):
+        self.comps = parse_module(text)
+        self.shapes: Dict[str, str] = {}
+        for instrs in self.comps.values():
+            for ins in instrs:
+                self.shapes[ins.name] = ins.shape_str
+        self._memo: Dict[str, Totals] = {}
+        self._ew_memo: Dict[str, bool] = {}
+        self.dynamic_while_default = dynamic_while_default
+        self.while_trips: Dict[str, float] = {}
+
+    def _non_ew_ops(self, comp: str) -> frozenset:
+        """Non-elementwise opcodes inside a fused computation
+        (transitively). Empty set => pure elementwise fusion."""
+        if comp in self._ew_memo:
+            return self._ew_memo[comp]
+        self._ew_memo[comp] = frozenset()      # cycle guard
+        out = set()
+        for ins in self.comps.get(comp, []):
+            if ins.op in _NO_BYTES_OPS or ins.op in _ELEMENTWISE_OPS:
+                continue
+            if ins.op == "fusion":
+                cm = _CALLS_RE.search(ins.rest)
+                if cm:
+                    out |= self._non_ew_ops(cm.group(1))
+                continue
+            out.add(ins.op)
+        self._ew_memo[comp] = frozenset(out)
+        return self._ew_memo[comp]
+
+    def _elementwise_only(self, comp: str) -> bool:
+        return not self._non_ew_ops(comp)
+
+    # ops whose HBM traffic is the *slice*, not the full buffer: a
+    # dynamic-slice reads slice-many bytes from the big operand; an
+    # in-place dynamic-update-slice writes update-many bytes. The scan
+    # machinery (per-iteration weight slices from stacked arrays) is all
+    # of this kind — counting full operands would overcount by the trip
+    # count.
+    _SLICE_LIKE = frozenset({"dynamic-slice", "dynamic-update-slice",
+                             "copy", "pad"})
+
+    def _slice_bytes(self, ins: Instr) -> float:
+        """2 x the smallest participating tensor >= 1 KiB (the slice)."""
+        sizes = [float(_shape_bytes(ins.shape_str))]
+        operand_str = ins.rest.split(")", 1)[0]
+        for name in _OPERAND_RE.findall(operand_str):
+            sizes.append(float(_shape_bytes(self.shapes.get(name, ""))))
+        big = [s for s in sizes if s >= 1024.0]
+        return 2.0 * min(big) if big else sum(sizes)
+
+    # -------------------------------------------------------- trip count
+    def trip_count(self, cond_comp: str) -> float:
+        instrs = self.comps.get(cond_comp, [])
+        consts = []
+        for ins in instrs:
+            if ins.op == "constant":
+                m = re.match(r"(\d+)\)", ins.rest)
+                if m:
+                    consts.append(int(m.group(1)))
+            consts += [int(c) for c in _CONST_RE.findall(ins.rest)]
+        big = [c for c in consts if c > 1]
+        if big:
+            return float(max(big))
+        return float(self.dynamic_while_default)
+
+    # ------------------------------------------------------ per-instr cost
+    def _dot_flops(self, ins: Instr) -> float:
+        result = 1.0
+        for d in _shape_dims(ins.shape_str):
+            result *= d
+        lhs_name_m = _OPERAND_RE.search(ins.rest)
+        contracted = 1.0
+        if lhs_name_m:
+            lhs_shape = self.shapes.get(lhs_name_m.group(1), "")
+            dims = _shape_dims(lhs_shape)
+            cm = _CONTRACT_RE.search(ins.rest)
+            if cm and cm.group(1):
+                for ci in cm.group(1).split(","):
+                    i = int(ci)
+                    if i < len(dims):
+                        contracted *= dims[i]
+        return 2.0 * result * contracted
+
+    def _instr_bytes(self, ins: Instr) -> float:
+        if ins.op in _NO_BYTES_OPS:
+            return 0.0
+        total = float(_shape_bytes(ins.shape_str))
+        operand_str = ins.rest.split(")", 1)[0]
+        for name in _OPERAND_RE.findall(operand_str):
+            total += _shape_bytes(self.shapes.get(name, ""))
+        return total
+
+    def _collective(self, ins: Instr, t: Totals) -> None:
+        op = ins.op.replace("-start", "")
+        if op not in _COLLECTIVES:
+            return
+        if ins.op.endswith("-done"):
+            return
+        result = _shape_bytes(ins.shape_str)
+        g = _group_size(ins.rest)
+        if op == "all-gather":
+            b = result // max(g, 1)
+        elif op == "reduce-scatter":
+            b = result * g
+        else:
+            b = result
+        t.per_collective[op]["count"] += 1
+        t.per_collective[op]["bytes"] += b
+        t.collective_bytes += b
+
+    # --------------------------------------------------------- traversal
+    def analyze(self, comp: str) -> Totals:
+        if comp in self._memo:
+            return self._memo[comp]
+        t = Totals()
+        self._memo[comp] = t      # cycle guard (self-recursion impossible)
+        for ins in self.comps.get(comp, []):
+            if ins.op == "while":
+                m = _COND_BODY_RE.search(ins.rest)
+                if m:
+                    trips = self.trip_count(m.group(1))
+                    self.while_trips[ins.name] = trips
+                    t.add(self.analyze(m.group(2)), trips)
+                continue
+            if ins.op in ("fusion", "call", "async-start"):
+                # descend for flops/collectives; bytes count only at the
+                # fusion boundary (the inner values are register/VMEM
+                # resident on TPU, not HBM traffic)
+                cm = _CALLS_RE.search(ins.rest)
+                kinds = frozenset({"?"})
+                if cm:
+                    inner = self.analyze(cm.group(1))
+                    t.flops += inner.flops
+                    t.collective_bytes += inner.collective_bytes
+                    for k, v in inner.per_collective.items():
+                        t.per_collective[k]["count"] += v["count"]
+                        t.per_collective[k]["bytes"] += v["bytes"]
+                    kinds = self._non_ew_ops(cm.group(1))
+                t.bytes_accessed += self._instr_bytes(ins)
+                if kinds:
+                    if kinds <= self._SLICE_LIKE:
+                        b = self._slice_bytes(ins)
+                        t.bytes_fused += b
+                        t.bytes_by_op["slice-fusion"] += b
+                    else:
+                        b = self._instr_bytes(ins)
+                        t.bytes_fused += b
+                        t.bytes_by_op["fusion"] += b
+                continue
+            if ins.op == "conditional":
+                branches = _OPERAND_RE.findall(
+                    ins.rest.split("branch_computations=")[-1]) \
+                    if "branch_computations=" in ins.rest else []
+                sub = [self.analyze(b) for b in branches
+                       if b in self.comps]
+                if sub:
+                    best = max(sub, key=lambda s: s.flops)
+                    t.add(best)
+                continue
+            if ins.op == "dot":
+                t.flops += self._dot_flops(ins)
+            self._collective(ins, t)
+            t.bytes_accessed += self._instr_bytes(ins)
+            if ins.op not in _ELEMENTWISE_OPS:
+                b = (self._slice_bytes(ins)
+                     if ins.op in self._SLICE_LIKE
+                     else self._instr_bytes(ins))
+                t.bytes_fused += b
+                t.bytes_by_op[ins.op] += b
+        return t
+
+    def entry(self) -> str:
+        # entry computation is the one named main.* if present, else the
+        # last computation in the module text
+        for name in self.comps:
+            if name.startswith("main"):
+                return name
+        return list(self.comps)[-1]
+
+    def totals(self) -> Totals:
+        return self.analyze(self.entry())
+
+
+def analyze_hlo(text: str, dynamic_while_default: int = 1) -> Totals:
+    return HloAnalyzer(text, dynamic_while_default).totals()
+
+
+# ------------------------------------------------ legacy flat interfaces
+
+def collective_bytes(hlo_text: str) -> Tuple[int, Dict[str, Dict]]:
+    """Trip-count-aware total collective operand bytes."""
+    t = analyze_hlo(hlo_text)
+    per = {k: {"count": int(v["count"]), "bytes": int(v["bytes"])}
+           for k, v in t.per_collective.items()}
+    return int(t.collective_bytes), per
+
+
+def collective_summary(hlo_text: str) -> str:
+    total, per = collective_bytes(hlo_text)
+    lines = [f"collective operand bytes: {total:,}"]
+    for op, d in sorted(per.items()):
+        lines.append(f"  {op:20s} x{d['count']:<6d} {d['bytes']:,} B")
+    return "\n".join(lines)
+
+
+def count_ops(hlo_text: str, opcode: str) -> int:
+    return len(re.findall(rf"=\s*[^=]*?\b{re.escape(opcode)}\b", hlo_text))

@@ -1,0 +1,126 @@
+"""Logical-axis sharding rules (MaxText-style) -> GSPMD PartitionSpecs.
+
+Model code annotates tensors with *logical* axis names; the launcher picks a
+rule set mapping logical names to mesh axes. A dim is sharded only if its
+size is divisible by the product of the mapped mesh axes — otherwise that
+dim silently falls back to replication (e.g. gemma3's 4 heads on a 16-way
+``model`` axis).
+
+Rule sets:
+  SINGLE_POD_RULES — mesh ("data", "model") = (16, 16)
+    batch/fsdp -> data   (DP + ZeRO-style param/optimizer sharding)
+    heads/ff/experts/vocab/inner -> model  (Megatron TP / EP)
+    kv_seq -> model      (sequence-sharded KV cache for long-context decode)
+  MULTI_POD_RULES  — mesh ("pod", "data", "model") = (2, 16, 16)
+    batch/fsdp -> (pod, data); everything else as single-pod.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+AxisRules = Dict[str, Tuple[str, ...]]
+
+SINGLE_POD_RULES: AxisRules = {
+    "batch": ("data",),
+    "fsdp": ("data",),            # weight dim sharded ZeRO-style
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ff": ("model",),
+    "experts": ("model",),
+    "inner": ("model",),          # mamba/rwkv inner width
+    "kv_seq": ("model",),         # KV-cache sequence axis (decode SP)
+    "seq": (),                    # activation sequence axis: replicated
+    "embed": (),
+    "head_dim": (),
+    "state": (),
+}
+
+MULTI_POD_RULES: AxisRules = dict(
+    SINGLE_POD_RULES,
+    batch=("pod", "data"),
+    fsdp=("pod", "data"),
+)
+
+_local = threading.local()
+
+
+def set_rules(rules: Optional[AxisRules], mesh: Optional[Mesh]) -> None:
+    _local.rules = rules
+    _local.mesh = mesh
+
+
+def current_rules() -> Tuple[Optional[AxisRules], Optional[Mesh]]:
+    return getattr(_local, "rules", None), getattr(_local, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: AxisRules, mesh: Mesh):
+    prev = current_rules()
+    set_rules(rules, mesh)
+    try:
+        with mesh:
+            yield
+    finally:
+        set_rules(*prev)
+
+
+def _mesh_axis_size(mesh: Mesh, axes: Sequence[str]) -> int:
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def logical_spec(shape: Sequence[int], axes: Sequence[Optional[str]],
+                 rules: AxisRules, mesh: Mesh) -> PartitionSpec:
+    """Map logical axis names to a PartitionSpec, honouring divisibility."""
+    assert len(shape) == len(axes), (shape, axes)
+    spec = []
+    used: set = set()
+    for dim, name in zip(shape, axes):
+        mesh_axes = rules.get(name, ()) if name else ()
+        mesh_axes = tuple(a for a in mesh_axes if a not in used)
+        if mesh_axes and dim % _mesh_axis_size(mesh, mesh_axes) == 0:
+            used.update(mesh_axes)
+            spec.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+        else:
+            spec.append(None)
+    return PartitionSpec(*spec)
+
+
+def shard(x: jnp.ndarray, *axes: Optional[str]) -> jnp.ndarray:
+    """with_sharding_constraint by logical names; no-op without rules."""
+    rules, mesh = current_rules()
+    if rules is None or mesh is None:
+        return x
+    spec = logical_spec(x.shape, axes, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def param_sharding_tree(spec_tree, rules: AxisRules, mesh: Mesh):
+    """Map a tree of ``ParamSpec``-likes (``.shape``/``.axes``) to
+    NamedShardings (used for jit in_shardings and checkpoint layouts)."""
+    def one(ps):
+        return NamedSharding(mesh,
+                             logical_spec(ps.shape, ps.axes, rules, mesh))
+    return jax.tree.map(one, spec_tree,
+                        is_leaf=lambda x: hasattr(x, "axes"))
+
+
+def spec_tree_to_shape_dtype(spec_tree, rules: AxisRules, mesh: Mesh,
+                             dtype=None):
+    """ParamSpec tree -> ShapeDtypeStruct tree with attached shardings
+    (AOT lowering inputs: no allocation)."""
+    def one(ps):
+        sh = NamedSharding(mesh, logical_spec(ps.shape, ps.axes, rules, mesh))
+        return jax.ShapeDtypeStruct(ps.shape, dtype or ps.dtype, sharding=sh)
+    return jax.tree.map(one, spec_tree,
+                        is_leaf=lambda x: hasattr(x, "axes"))

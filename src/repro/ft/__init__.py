@@ -1,0 +1,2 @@
+from repro.ft.checkpoint import CheckpointManager
+from repro.ft.straggler import HeartbeatMonitor, StragglerReport

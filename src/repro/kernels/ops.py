@@ -1,0 +1,84 @@
+"""jit'd dispatch wrappers around the Pallas kernels.
+
+On this CPU container the kernels execute with ``interpret=True`` (the
+kernel body runs in Python under the Pallas interpreter — bit-faithful to
+the TPU lowering semantics); on TPU ``set_interpret(False)`` compiles the
+real Mosaic kernels. Wrappers pad inputs to tile multiples and strip the
+padding from outputs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import block_topk as _bt
+from repro.kernels import l2_tile as _l2
+from repro.kernels import pq_adc as _adc
+
+_INTERPRET = True
+
+
+def set_interpret(flag: bool) -> None:
+    global _INTERPRET
+    _INTERPRET = flag
+
+
+def interpret_default() -> bool:
+    return _INTERPRET
+
+
+def _pad_rows(a: jnp.ndarray, mult: int) -> jnp.ndarray:
+    n = a.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return a
+    return jnp.pad(a, [(0, pad)] + [(0, 0)] * (a.ndim - 1))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("metric", "interpret", "bq", "bn"))
+def pairwise_l2(q: jnp.ndarray, x: jnp.ndarray, metric: str = "l2",
+                interpret: bool = None, bq: int = None, bn: int = None
+                ) -> jnp.ndarray:
+    """[Q, D] x [N, D] -> [Q, N] distances via the l2_tile kernel."""
+    interpret = _INTERPRET if interpret is None else interpret
+    bq = bq or min(_l2.BQ, max(8, q.shape[0]))
+    bn = bn or min(_l2.BN, max(8, x.shape[0]))
+    qp, xp = _pad_rows(q, bq), _pad_rows(x, bn)
+    out = _l2.l2_tile(qp, xp, metric=metric, interpret=interpret,
+                      bq=bq, bn=bn)
+    out = out[: q.shape[0], : x.shape[0]]
+    if metric == "l2":
+        return out
+    # padded base rows are zero vectors -> -0.0 for ip; harmless, sliced.
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "bn"))
+def pq_adc_batch(codes: jnp.ndarray, luts: jnp.ndarray,
+                 interpret: bool = None, bn: int = None) -> jnp.ndarray:
+    """codes [N, M] uint8 x luts [B, M, K] -> [B, N] ADC distances."""
+    interpret = _INTERPRET if interpret is None else interpret
+    bn = bn or min(_adc.BN, max(8, codes.shape[0]))
+    cp = _pad_rows(codes, bn)
+    out = _adc.pq_adc(cp, luts.astype(jnp.float32), interpret=interpret,
+                      bn=bn)
+    return jnp.moveaxis(out, 0, 1)[:, : codes.shape[0]]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("top_m", "metric", "interpret", "bq"))
+def block_rank(queries: jnp.ndarray, tiles: jnp.ndarray, top_m: int,
+               metric: str = "l2", interpret: bool = None,
+               bq: int = None):
+    """queries [Q, D] x gathered tiles [Q, eps, D] ->
+    (dists [Q, eps], top_idx [Q, top_m])."""
+    interpret = _INTERPRET if interpret is None else interpret
+    bq = bq or min(_bt.BQ, max(8, queries.shape[0]))
+    qp = _pad_rows(queries, bq)
+    tp = _pad_rows(tiles, bq)
+    d, idx = _bt.block_topk(qp, tp, top_m, metric=metric,
+                            interpret=interpret, bq=bq)
+    return d[: queries.shape[0]], idx[: queries.shape[0]]

@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for every kernel (the allclose reference)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pairwise_l2_ref(q: jnp.ndarray, x: jnp.ndarray,
+                    metric: str = "l2") -> jnp.ndarray:
+    """[Q, D] x [N, D] -> [Q, N]; squared L2 or negated IP."""
+    dot = q.astype(jnp.float32) @ x.astype(jnp.float32).T
+    if metric == "ip":
+        return -dot
+    qq = jnp.sum(q.astype(jnp.float32) ** 2, axis=1, keepdims=True)
+    xx = jnp.sum(x.astype(jnp.float32) ** 2, axis=1)
+    return jnp.maximum(qq + xx[None, :] - 2.0 * dot, 0.0)
+
+
+def pq_adc_ref(luts: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
+    """luts [B, M, K] f32, codes [N, M] int -> [B, N] ADC distances."""
+    m = luts.shape[1]
+    gather = luts[:, jnp.arange(m)[None, :], codes.astype(jnp.int32)]
+    return gather.sum(axis=-1)
+
+
+def block_rank_ref(queries: jnp.ndarray, tiles: jnp.ndarray,
+                   top_m: int, metric: str = "l2"):
+    """queries [Q, D]; tiles [Q, eps, D] (the gathered block per query).
+    Returns (dists [Q, eps], top_idx [Q, top_m]) — top_m slot indices by
+    ascending distance."""
+    q32 = queries.astype(jnp.float32)
+    t32 = tiles.astype(jnp.float32)
+    if metric == "ip":
+        d = -jnp.einsum("qd,qed->qe", q32, t32)
+    else:
+        d = jnp.sum((t32 - q32[:, None, :]) ** 2, axis=-1)
+    idx = jnp.argsort(d, axis=1)[:, :top_m]
+    return d, idx.astype(jnp.int32)

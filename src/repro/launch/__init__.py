@@ -1,0 +1,3 @@
+# Launch layer: production mesh, AOT input specs, train/serve steps,
+# multi-pod dry-run driver. NOTE: dryrun.py must be the process
+# entrypoint (it sets XLA_FLAGS before any jax import).

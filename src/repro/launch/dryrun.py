@@ -1,0 +1,357 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell:  jit(step).lower(*ShapeDtypeStructs).compile(), then record
+memory_analysis(), cost_analysis() and the collective schedule parsed from
+the compiled HLO — the §Dry-run / §Roofline inputs.
+
+Results stream to a JSONL (one record per cell); completed cells are
+skipped on re-run, so the full grid can be built incrementally:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-1b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --starling   # search_step
+"""
+import argparse     # noqa: E402
+import functools    # noqa: E402
+import json         # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+
+import jax          # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import (ARCH_IDS, SHAPES, get_config,     # noqa: E402
+                           skip_reason)
+from repro.distributed.hlo import analyze_hlo, collective_bytes  # noqa: E402,E501
+from repro.distributed.sharding import use_rules             # noqa: E402
+from repro.launch.mesh import make_production_mesh, rules_for  # noqa: E402
+from repro.launch.specs import step_specs                    # noqa: E402
+from repro.launch.train import default_optimizer, make_train_step  # noqa: E402,E501
+from repro.launch.serve import make_prefill, make_serve_step  # noqa: E402
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__),
+                           "../../../results/dryrun.jsonl")
+
+# v5e hardware constants (roofline)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / link (ICI)
+
+
+def _mesh_tag(multi_pod: bool) -> str:
+    return "pod2x16x16" if multi_pod else "pod16x16"
+
+
+def _save_hlo(arch: str, shape: str, multi_pod: bool, tag: str,
+              hlo: str) -> str:
+    """Persist compiled HLO (gzip) so roofline analysis is re-runnable
+    without recompiling (see ``reanalyze``)."""
+    import gzip
+    d = os.path.join(os.path.dirname(os.path.abspath(DEFAULT_OUT)), "hlo")
+    os.makedirs(d, exist_ok=True)
+    name = f"{arch}_{shape}_{_mesh_tag(multi_pod)}"
+    if tag:
+        name += f"_{tag}"
+    path = os.path.join(d, name + ".hlo.gz")
+    with gzip.open(path, "wt") as f:
+        f.write(hlo)
+    return path
+
+
+def reanalyze(out_path: str) -> None:
+    """Rebuild roofline fields of every record from stored HLO."""
+    import gzip
+    recs = []
+    with open(out_path) as f:
+        for line in f:
+            recs.append(json.loads(line))
+    for rec in recs:
+        p = rec.get("hlo_path")
+        if rec.get("status") != "OK" or not p or not os.path.exists(p):
+            continue
+        with gzip.open(p, "rt") as f:
+            hlo = f.read()
+        tot = analyze_hlo(hlo)
+        rec["hlo_flops"] = tot.flops
+        rec["hlo_bytes_raw"] = tot.bytes_accessed
+        rec["hlo_bytes"] = tot.bytes_fused
+        rec["collective_bytes"] = int(tot.collective_bytes)
+        rec["collectives"] = {
+            k: {"count": int(v["count"]), "bytes": int(v["bytes"])}
+            for k, v in tot.per_collective.items()}
+        chips = rec["chips"]
+        rec["roofline"] = {
+            "compute_s": tot.flops / PEAK_FLOPS,
+            "memory_s": tot.bytes_fused / HBM_BW,
+            "collective_s": tot.collective_bytes / LINK_BW,
+        }
+        rec["memory_s_raw"] = tot.bytes_accessed / HBM_BW
+        rec["dominant"] = max(rec["roofline"], key=rec["roofline"].get)
+        total_hlo = tot.flops * chips
+        rec["model_flops_ratio"] = (rec["model_flops"] / total_hlo
+                                    if total_hlo else 0.0)
+    with open(out_path, "w") as f:
+        for rec in recs:
+            f.write(json.dumps(rec) + "\n")
+    print(f"reanalyzed {len(recs)} records")
+
+
+def _cost_get(cost, key):
+    try:
+        return float(cost.get(key, 0.0))
+    except Exception:
+        return 0.0
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               extra_tag: str = "", step_override=None,
+               overrides: dict = None) -> dict:
+    """Lower + compile one cell; returns the JSONL record."""
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if overrides:
+        cfg = _dc.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_for(mesh)
+    rec = {"arch": arch, "shape": shape_name, "mesh": _mesh_tag(multi_pod),
+           "kind": shape.kind, "tag": extra_tag}
+
+    kind, args = step_specs(cfg, shape, mesh)
+    donate = ()
+    if step_override is not None:
+        fn = step_override
+    elif kind == "train":
+        fn = make_train_step(cfg, default_optimizer())
+        donate = (0, 1)          # params, opt_state
+    elif kind == "prefill":
+        fn = make_prefill(cfg, shape.seq_len)
+    else:
+        fn = make_serve_step(cfg)
+        donate = (1,)            # kv cache / ssm state
+
+    t0 = time.time()
+    with use_rules(rules, mesh):
+        lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t0 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0, 1)
+
+    mem = compiled.memory_analysis()
+    rec["bytes_per_device"] = {
+        "argument": getattr(mem, "argument_size_in_bytes", 0),
+        "output": getattr(mem, "output_size_in_bytes", 0),
+        "temp": getattr(mem, "temp_size_in_bytes", 0),
+        "alias": getattr(mem, "alias_size_in_bytes", 0),
+        "peak": getattr(mem, "peak_memory_in_bytes", 0),
+    }
+    # live per-chip bytes: donated inputs alias outputs
+    rec["bytes_per_device"]["total"] = (
+        rec["bytes_per_device"]["argument"]
+        + rec["bytes_per_device"]["temp"]
+        - rec["bytes_per_device"]["alias"])
+
+    # raw XLA cost analysis (counts while bodies ONCE — kept for
+    # reference); the roofline uses the trip-count-aware HLO analyzer.
+    cost = compiled.cost_analysis()
+    rec["xla_flops_once"] = _cost_get(cost, "flops")
+    rec["xla_bytes_once"] = _cost_get(cost, "bytes accessed")
+
+    hlo = compiled.as_text()
+    rec["hlo_path"] = _save_hlo(arch, shape_name, multi_pod, extra_tag,
+                                hlo)
+    tot = analyze_hlo(hlo)
+    rec["hlo_flops"] = tot.flops
+    rec["hlo_bytes_raw"] = tot.bytes_accessed   # every instruction
+    rec["hlo_bytes"] = tot.bytes_fused          # TPU-fusion estimate
+    rec["collective_bytes"] = int(tot.collective_bytes)
+    rec["collectives"] = {
+        k: {"count": int(v["count"]), "bytes": int(v["bytes"])}
+        for k, v in tot.per_collective.items()}
+    rec["hlo_chars"] = len(hlo)
+
+    # roofline terms (per chip, seconds). The HLO analyzer totals are
+    # per-device for SPMD modules; memory_s uses the fused-traffic
+    # estimate (raw instruction traffic kept as memory_s_raw).
+    chips = mesh.size
+    rec["chips"] = chips
+    rec["roofline"] = {
+        "compute_s": rec["hlo_flops"] / PEAK_FLOPS,
+        "memory_s": rec["hlo_bytes"] / HBM_BW,
+        # per-chip collective bytes / per-chip link bandwidth (equals
+        # the assignment's total/(chips*link_bw) formula)
+        "collective_s": rec["collective_bytes"] / LINK_BW,
+    }
+    rec["memory_s_raw"] = rec["hlo_bytes_raw"] / HBM_BW
+    terms = rec["roofline"]
+    rec["dominant"] = max(terms, key=terms.get)
+
+    # MODEL_FLOPS = 6 N D (dense) / 6 N_active D (MoE); D = tokens
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        n = cfg.active_params()
+        rec["model_flops"] = 6.0 * n * tokens
+        total_hlo = rec["hlo_flops"] * chips
+        rec["model_flops_ratio"] = (rec["model_flops"] / total_hlo
+                                    if total_hlo else 0.0)
+    else:
+        tokens = (shape.global_batch * shape.seq_len
+                  if shape.kind == "prefill" else shape.global_batch)
+        rec["model_flops"] = 2.0 * cfg.active_params() * tokens
+        total_hlo = rec["hlo_flops"] * chips
+        rec["model_flops_ratio"] = (rec["model_flops"] / total_hlo
+                                    if total_hlo else 0.0)
+    return rec
+
+
+def _load_done(path: str) -> set:
+    done = set()
+    if os.path.exists(path):
+        with open(path) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    done.add((r["arch"], r["shape"], r["mesh"],
+                              r.get("tag", "")))
+                except Exception:
+                    pass
+    return done
+
+
+def run_cells(cells, out_path: str, force: bool = False,
+              tag: str = "", overrides: dict = None) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(out_path)), exist_ok=True)
+    done = set() if force else _load_done(out_path)
+    for arch, shape_name, multi_pod in cells:
+        key = (arch, shape_name, _mesh_tag(multi_pod), tag)
+        if key in done:
+            print(f"[skip-done] {key}")
+            continue
+        reason = skip_reason(arch, shape_name)
+        rec = {"arch": arch, "shape": shape_name,
+               "mesh": _mesh_tag(multi_pod), "tag": tag}
+        if reason is not None:
+            rec["status"] = "SKIP"
+            rec["skip_reason"] = reason
+            print(f"[SKIP] {key}: {reason}")
+        else:
+            print(f"[lower] {key} ...", flush=True)
+            try:
+                rec.update(lower_cell(arch, shape_name, multi_pod,
+                                      extra_tag=tag,
+                                      overrides=overrides))
+                rec["status"] = "OK"
+                r = rec["roofline"]
+                print(f"  OK lower={rec['lower_s']}s "
+                      f"compile={rec['compile_s']}s "
+                      f"mem={rec['bytes_per_device']['total']/2**30:.2f}GiB "
+                      f"comp={r['compute_s']*1e3:.2f}ms "
+                      f"hbm={r['memory_s']*1e3:.2f}ms "
+                      f"coll={r['collective_s']*1e3:.2f}ms "
+                      f"dom={rec['dominant']}", flush=True)
+            except Exception as e:
+                rec["status"] = "FAIL"
+                rec["error"] = f"{type(e).__name__}: {e}"
+                rec["traceback"] = traceback.format_exc()[-2000:]
+                print(f"  FAIL {rec['error']}", flush=True)
+        with open(out_path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+
+
+def starling_cells(out_path: str, force: bool = False) -> None:
+    """Dry-run the Starling segment search_step on the production mesh."""
+    from repro.core.device_search import make_search_step
+    for multi_pod in (False, True):
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        rules = rules_for(mesh)
+        key = ("starling-search", "segment", _mesh_tag(multi_pod), "")
+        done = set() if force else _load_done(out_path)
+        if key in done:
+            print(f"[skip-done] {key}")
+            continue
+        rec = {"arch": "starling-search", "shape": "segment",
+               "mesh": _mesh_tag(multi_pod), "tag": ""}
+        try:
+            fn, args = make_search_step(mesh, rules)
+            t0 = time.time()
+            with use_rules(rules, mesh):
+                lowered = jax.jit(fn).lower(*args)
+                compiled = lowered.compile()
+            rec["lower_s"] = round(time.time() - t0, 1)
+            mem = compiled.memory_analysis()
+            rec["bytes_per_device"] = {
+                "argument": getattr(mem, "argument_size_in_bytes", 0),
+                "temp": getattr(mem, "temp_size_in_bytes", 0)}
+            cost = compiled.cost_analysis()
+            rec["hlo_flops"] = _cost_get(cost, "flops")
+            rec["hlo_bytes"] = _cost_get(cost, "bytes accessed")
+            cb, per = collective_bytes(compiled.as_text())
+            rec["collective_bytes"] = cb
+            rec["collectives"] = per
+            rec["status"] = "OK"
+            print(f"[starling] {key} OK coll={cb:,}B")
+        except Exception as e:
+            rec["status"] = "FAIL"
+            rec["error"] = f"{type(e).__name__}: {e}"
+            rec["traceback"] = traceback.format_exc()[-2000:]
+            print(f"[starling] FAIL {rec['error']}")
+        with open(out_path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--starling", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--reanalyze", action="store_true",
+                    help="recompute roofline fields from stored HLO")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (repeatable)")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        if v in ("True", "False"):
+            v = v == "True"
+        overrides[k] = v
+
+    if args.reanalyze:
+        reanalyze(args.out)
+        return
+    if args.starling:
+        starling_cells(args.out, force=args.force)
+        return
+
+    pods = {"single": (False,), "multi": (True,),
+            "both": (False, True)}[args.mesh]
+    if args.all:
+        cells = [(a, s, mp) for a in ARCH_IDS for s in SHAPES
+                 for mp in pods]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape, mp) for mp in pods]
+    run_cells(cells, args.out, force=args.force, tag=args.tag,
+              overrides=overrides)
+
+
+if __name__ == "__main__":
+    main()

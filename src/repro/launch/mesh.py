@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module cannot touch jax device state. The dry-run entrypoint sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first
+jax init; smoke tests and benchmarks see the 1 real CPU device.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+from repro.distributed.sharding import (AxisRules, MULTI_POD_RULES,
+                                        SINGLE_POD_RULES)
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def rules_for(mesh: Mesh) -> AxisRules:
+    return MULTI_POD_RULES if "pod" in mesh.axis_names else SINGLE_POD_RULES
+
+
+def make_debug_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Tiny mesh over however many devices exist (tests)."""
+    return jax.make_mesh((data, model), ("data", "model"))

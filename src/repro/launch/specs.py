@@ -1,0 +1,145 @@
+"""AOT input specs: ShapeDtypeStruct stand-ins (with NamedShardings) for
+every model input — weak-type-correct, shardable, no device allocation.
+
+``step_specs(arch, shape, mesh)`` returns (fn_name, kwargs-of-SDS) for the
+function the dry-run lowers:
+  train_*    -> train_step(params, opt_state, batch)
+  prefill_*  -> prefill_fn(params, tokens [, patch/frames])
+  decode_*   -> serve_step(params, cache, tokens)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.configs.shapes import SHAPES, Shape
+from repro.distributed.sharding import (AxisRules, logical_spec,
+                                        spec_tree_to_shape_dtype)
+from repro.launch.mesh import rules_for
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+Tree = Any
+
+
+def _sds(shape, dtype, mesh, rules, axes):
+    sh = NamedSharding(mesh, logical_spec(shape, axes, rules, mesh))
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+
+
+def params_specs(cfg: ModelConfig, mesh: Mesh,
+                 rules: Optional[AxisRules] = None) -> Tree:
+    rules = rules or rules_for(mesh)
+    return spec_tree_to_shape_dtype(lm.param_specs(cfg), rules, mesh)
+
+
+def opt_specs(cfg: ModelConfig, mesh: Mesh,
+              rules: Optional[AxisRules] = None) -> Tree:
+    """AdamW m/v mirror the parameter sharding; fp32."""
+    rules = rules or rules_for(mesh)
+    p = spec_tree_to_shape_dtype(lm.param_specs(cfg), rules, mesh,
+                                 dtype=jnp.float32)
+    step = jax.ShapeDtypeStruct(
+        (), jnp.int32, sharding=NamedSharding(mesh, PartitionSpec()))
+    return {"m": p, "v": jax.tree.map(lambda x: x, p), "step": step}
+
+
+def batch_specs(cfg: ModelConfig, shape: Shape, mesh: Mesh,
+                rules: Optional[AxisRules] = None) -> Dict[str, Any]:
+    rules = rules or rules_for(mesh)
+    b, s = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {}
+    tok_len = s
+    if cfg.family == "vlm":
+        tok_len = s - cfg.patch_tokens
+        out["patch_embeds"] = _sds((b, cfg.patch_tokens, cfg.d_model),
+                                   jnp.bfloat16, mesh, rules,
+                                   ("batch", None, None))
+    if cfg.family == "audio":
+        out["frames"] = _sds((b, cfg.num_mem_tokens, cfg.d_model),
+                             jnp.bfloat16, mesh, rules,
+                             ("batch", None, None))
+    out["tokens"] = _sds((b, tok_len), jnp.int32, mesh, rules,
+                         ("batch", None))
+    out["labels"] = _sds((b, tok_len), jnp.int32, mesh, rules,
+                         ("batch", None))
+    return out
+
+
+def _cache_axes(cfg: ModelConfig, path: Tuple[str, ...], ndim: int,
+                mesh: Mesh) -> Tuple[Optional[str], ...]:
+    """Logical axes for a cache leaf (leading dim = stacked layers).
+
+    KV tensors [L, B, S, Hkv, hd]: shard heads over model when divisible,
+    else shard the cache sequence axis (decode sequence-parallelism for
+    MQA archs). SSM states: batch + inner dims.
+    """
+    name = path[-1] if path else ""
+    model_size = mesh.shape["model"]
+    if name in ("k", "v", "attn_k", "attn_v"):
+        if cfg.num_kv_heads % model_size == 0:
+            return (None, "batch", None, "kv_heads", None)
+        return (None, "batch", "kv_seq", "kv_heads", None)
+    if name == "memory":
+        return ("batch", None, None)
+    if name == "len":
+        return ()
+    # SSM states: [.., B, ...] with trailing feature dims; shard batch +
+    # the widest feature dim over model via "inner" when divisible.
+    axes = [None] * ndim
+    # find the batch dim: first dim whose size matches is handled by
+    # caller passing shapes; here we rely on position: stacked layer dims
+    # come first, batch next. ndim>=2 always.
+    return tuple(axes)
+
+
+def cache_specs(cfg: ModelConfig, shape: Shape, mesh: Mesh,
+                rules: Optional[AxisRules] = None,
+                cache_dtype=jnp.bfloat16) -> Tree:
+    """ShapeDtypeStructs for the decode cache (shapes via eval_shape)."""
+    rules = rules or rules_for(mesh)
+    b = shape.global_batch
+
+    shapes = jax.eval_shape(
+        functools.partial(lm.init_cache, cfg, b, shape.seq_len,
+                          cache_dtype))
+
+    def annotate(path, leaf):
+        names = tuple(str(getattr(p, "key", p)) for p in path)
+        axes = list(_cache_axes(cfg, names, len(leaf.shape), mesh))
+        # default batch sharding for SSM state leaves: the dim whose size
+        # == batch gets the "batch" axis.
+        if all(a is None for a in axes):
+            for i, d in enumerate(leaf.shape):
+                if d == b:
+                    axes[i] = "batch"
+                    break
+        sh = NamedSharding(mesh,
+                           logical_spec(leaf.shape, tuple(axes), rules,
+                                        mesh))
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype, sharding=sh)
+
+    return jax.tree_util.tree_map_with_path(annotate, shapes)
+
+
+def step_specs(cfg: ModelConfig, shape: Shape, mesh: Mesh
+               ) -> Tuple[str, Tuple]:
+    """(kind, args-of-SDS) for the function the dry-run lowers."""
+    rules = rules_for(mesh)
+    p = params_specs(cfg, mesh, rules)
+    if shape.kind == "train":
+        return "train", (p, opt_specs(cfg, mesh, rules),
+                         batch_specs(cfg, shape, mesh, rules))
+    if shape.kind == "prefill":
+        bs = batch_specs(cfg, shape, mesh, rules)
+        bs.pop("labels")
+        return "prefill", (p, bs)
+    if shape.kind == "decode":
+        tok = _sds((shape.global_batch, 1), jnp.int32, mesh, rules,
+                   ("batch", None))
+        return "decode", (p, cache_specs(cfg, shape, mesh, rules), tok)
+    raise ValueError(shape.kind)

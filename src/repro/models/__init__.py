@@ -1,0 +1,8 @@
+# Model zoo substrate: every assigned architecture family in pure JAX.
+#   config   — ModelConfig covering dense / MoE / VLM / audio / hybrid / SSM
+#   layers   — attention (GQA+RoPE+window+QK-norm+softcap), SwiGLU, MoE
+#   ssm      — Mamba2 chunked SSD scan, RWKV6 chunked WKV scan (+decode steps)
+#   lm       — param specs/init, train forward+loss, prefill, decode
+from repro.models.config import ModelConfig
+from repro.models.lm import (init_params, param_specs, loss_fn, forward,
+                             prefill, decode_step, init_cache)

@@ -1,0 +1,413 @@
+"""Transformer primitives: RMSNorm, RoPE, GQA attention (sliding window,
+QK-norm, KV cache), SwiGLU/GeGLU MLP, mixture-of-experts FFN.
+
+All functions are pure: ``params`` dicts in, arrays out. Logical-axis
+sharding annotations (``shard``) are no-ops outside a mesh context, so the
+same code serves 1-device smoke tests and the 512-chip dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import shard
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """Parameter spec: shape + logical axes + init style."""
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | custom key
+    scale: float = 1.0
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray,
+             eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + gamma)).astype(dt)
+
+
+# ------------------------------------------------------------------- RoPE
+
+def rope_table(positions: jnp.ndarray, head_dim: int,
+               theta: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions [*] -> (sin, cos) each [*, head_dim/2] float32."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jnp.ndarray, sin: jnp.ndarray,
+               cos: jnp.ndarray) -> jnp.ndarray:
+    """x [B, S, H, hd]; sin/cos [B?, S, hd/2] broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    sin = sin[..., None, :].astype(x.dtype)
+    cos = cos[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1)
+
+
+# -------------------------------------------------------------- attention
+
+# Blockwise (flash-style) attention kicks in above this many score
+# elements per head — full S x S materialization is never compiled for
+# the 4k-500k shapes. Chunk sizes are MXU-aligned.
+_BLOCKWISE_THRESHOLD = 1 << 21
+Q_CHUNK = 512
+KV_CHUNK = 1024
+
+
+def _attn_mask(q_pos, kv_pos, window, kv_len, causal):
+    dist = q_pos[:, None] - kv_pos[None, :]            # [Sq, Sk]
+    mask = dist >= 0 if causal else jnp.ones(dist.shape, bool)
+    mask &= jnp.where(window > 0, dist < window, True)
+    if kv_len is not None:
+        mask &= kv_pos[None, :] < kv_len
+    return mask
+
+
+def _plain_attention(q, k, v, q_pos, kv_pos, kv_len, window, causal):
+    b, sq, hkv, g, hd = q.shape
+    scale = hd ** -0.5
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = _attn_mask(q_pos, kv_pos, window, kv_len, causal)
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+
+
+def _chunk_of(s: int, target: int) -> int:
+    """Largest divisor of s that is <= target."""
+    c = min(target, s)
+    while s % c:
+        c -= 1
+    return c
+
+
+def _blockwise_attention(q, k, v, q_pos, kv_pos, kv_len, window, causal):
+    """Online-softmax attention: scan over KV chunks inside a scan over Q
+    chunks; live score tensor is [B, Hkv, G, Qc, KVc] only."""
+    b, sq, hkv, g, hd = q.shape
+    sk = k.shape[1]
+    qc = _chunk_of(sq, Q_CHUNK)
+    kc = _chunk_of(sk, KV_CHUNK)
+    nq, nk = sq // qc, sk // kc
+    scale = hd ** -0.5
+
+    qb = jnp.moveaxis(q.reshape(b, nq, qc, hkv, g, hd), 1, 0)
+    qp = q_pos.reshape(nq, qc)
+    kb = jnp.moveaxis(k.reshape(b, nk, kc, hkv, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nk, kc, hkv, hd), 1, 0)
+    kp = kv_pos.reshape(nk, kc)
+
+    def q_body(_, q_in):
+        qi, qpi = q_in
+
+        @jax.checkpoint
+        def kv_body(carry, kv_in):
+            m, l, acc = carry
+            ki, vi, kpi = kv_in
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qi, ki,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _attn_mask(qpi, kpi, window, kv_len, causal)
+            s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * corr + p.sum(-1)
+            acc_new = (acc * corr[..., None]
+                       + jnp.einsum("bkgqs,bskd->bkgqd",
+                                    p.astype(vi.dtype), vi))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, qc, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0), (kb, vb, kp))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, jnp.moveaxis(out, (1, 2), (2, 3))   # [B, qc, Hkv, G, hd]
+
+    _, outs = jax.lax.scan(q_body, None, (qb, qp))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, hkv, g, hd)
+    return out.astype(v.dtype)
+
+
+def gqa_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  q_pos: jnp.ndarray, kv_pos: jnp.ndarray,
+                  kv_len: Optional[jnp.ndarray], window: jnp.ndarray,
+                  causal: bool = True) -> jnp.ndarray:
+    """Grouped-query attention.
+
+    q [B, Sq, H, hd]; k/v [B, Sk, Hkv, hd]; q_pos [Sq]; kv_pos [Sk];
+    kv_len — number of valid cache entries (decode) or None (all valid);
+    window — scalar int32: 0 = global, w = sliding window of size w.
+    Softmax in f32. Dispatches to blockwise (flash-style) attention when
+    the score tensor would be large. Returns [B, Sq, H, hd].
+    """
+    b, sq, h, hd = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    q = q.reshape(b, sq, hkv, g, hd)
+    if sq * k.shape[1] > _BLOCKWISE_THRESHOLD and sq >= 64:
+        out = _blockwise_attention(q, k, v, q_pos, kv_pos, kv_len, window,
+                                   causal)
+    else:
+        out = _plain_attention(q, k, v, q_pos, kv_pos, kv_len, window,
+                               causal)
+    return out.reshape(b, sq, h, hd)
+
+
+def attention_block(params: Dict, x: jnp.ndarray, positions: jnp.ndarray,
+                    cfg, window: jnp.ndarray,
+                    cache: Optional[Dict] = None,
+                    memory: Optional[jnp.ndarray] = None,
+                    causal: bool = True) -> Tuple[jnp.ndarray,
+                                                  Optional[Dict]]:
+    """Full attention sub-block: norm -> qkv -> rope -> attn -> out-proj.
+
+    ``cache`` (decode): {"k": [B, Smax, Hkv, hd], "v": ..., "len": scalar};
+    new tokens are written at positions [len, len+Sq) and the updated cache
+    is returned. ``memory`` (cross-attention): K/V come from memory and
+    RoPE is skipped.
+    """
+    b, sq, _ = x.shape
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    xn = rms_norm(x, params["ln"], cfg.norm_eps)
+    q = shard(jnp.einsum("bsd,dhe->bshe", xn, params["wq"]),
+              "batch", None, "heads", None)
+    src = xn if memory is None else memory.astype(xn.dtype)
+    k = jnp.einsum("bsd,dhe->bshe", src, params["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", src, params["wv"])
+
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+
+    if memory is None:
+        sin_q, cos_q = rope_table(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, sin_q, cos_q)
+        k = apply_rope(k, sin_q, cos_q)
+
+    kv_len = None
+    if cache is not None and memory is None:
+        start = cache["len"]
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, start, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, start, 0, 0))
+        cache = {"k": ck, "v": cv, "len": start + sq}
+        k, v = ck.astype(q.dtype), cv.astype(q.dtype)
+        kv_pos = jnp.arange(cache["k"].shape[1])
+        kv_len = cache["len"]
+    else:
+        kv_pos = (positions if memory is None
+                  else jnp.arange(memory.shape[1]))
+
+    out = gqa_attention(q, k, v, positions, kv_pos, kv_len, window,
+                        causal=causal and memory is None)
+    out = jnp.einsum("bshe,hed->bsd", out, params["wo"])
+    return shard(out, "batch", None, "embed"), cache
+
+
+# -------------------------------------------------------------------- MLP
+
+def mlp_block(params: Dict, x: jnp.ndarray, cfg,
+              gated: bool = True) -> jnp.ndarray:
+    """Gated (SwiGLU/GeGLU) or plain two-matrix FFN, pre-norm."""
+    xn = rms_norm(x, params["ln"], cfg.norm_eps)
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    up = jnp.einsum("bsd,df->bsf", xn, params["w_up"])
+    if gated:
+        gate = jnp.einsum("bsd,df->bsf", xn, params["w_gate"])
+        hidden = act(gate) * up
+    else:
+        hidden = act(up)
+    hidden = shard(hidden, "batch", None, "ff")
+    out = jnp.einsum("bsf,fd->bsd", hidden, params["w_down"])
+    return shard(out, "batch", None, "embed")
+
+
+# -------------------------------------------------------------------- MoE
+
+def _dense_dispatch(params: Dict, xn: jnp.ndarray, combine: jnp.ndarray,
+                    cfg, act) -> jnp.ndarray:
+    """Every expert on every token, masked by combine [B, S, E].
+
+    The combine weights fold into the hidden BEFORE the down projection:
+    out = sum_e c_e (h_e @ Wd_e) = sum_e (c_e h_e) @ Wd_e — the
+    contraction runs over (e, f) jointly and the only EP collective is
+    one all-reduce of [B, S, D] partial sums; no [B, S, E, D] expert
+    output is ever materialized."""
+    gate = jnp.einsum("bsd,edf->bsef", xn, params["w_gate"])
+    up = jnp.einsum("bsd,edf->bsef", xn, params["w_up"])
+    hidden = shard(act(gate) * up, "batch", None, "experts", None)
+    hidden = hidden * combine[..., None]
+    return jnp.einsum("bsef,efd->bsd", hidden, params["w_down"])
+
+
+def _capacity_dispatch(params: Dict, xn: jnp.ndarray,
+                       combine: jnp.ndarray, cfg, act) -> jnp.ndarray:
+    """Capacity-based gather dispatch (GShard/Switch-style, dropping).
+
+    Per sequence, each expert takes its top-C tokens
+    (C = S*k*cf/E), gathered with batch-dim-preserving indexing so
+    every op stays sharded over ``data`` (no token transport across
+    chips — activations are replicated over ``model``). Compute is
+    E*C = k*cf*S instead of dense dispatch's E_local*S per chip: a
+    E/(k*cf*TP... ) ~ 13x FLOP cut for qwen3 at cf=1.25."""
+    b, s, d = xn.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    cap = min(s, int(np.ceil(s * k * cfg.moe_capacity_factor / e)))
+    cap = max(cap, 1)
+    # top-C tokens per (batch row, expert) by combine weight
+    w_te = jnp.swapaxes(combine, 1, 2)                  # [B, E, S]
+    top_w, top_s = jax.lax.top_k(w_te, cap)             # [B, E, C]
+    top_w = shard(top_w, "batch", "experts", None)
+    top_s = shard(top_s, "batch", "experts", None)
+    # pin xn replicated over `model` so the expert-sharded gather is
+    # chip-local (GSPMD otherwise re-shards and all-gathers activations)
+    xn = shard(xn, "batch", None, None)
+    rows = jnp.arange(b)[:, None, None]
+    xg = xn[rows, top_s]                                # [B, E, C, D]
+    xg = shard(xg, "batch", "experts", None, None)
+    gate = jnp.einsum("becd,edf->becf", xg, params["w_gate"])
+    up = jnp.einsum("becd,edf->becf", xg, params["w_up"])
+    hidden = shard(act(gate) * up, "batch", "experts", None, None)
+    hidden = hidden * top_w[..., None].astype(hidden.dtype)
+    part = jnp.einsum("becf,efd->becd", hidden, params["w_down"])
+    out = jnp.zeros((b, s, d), part.dtype).at[rows, top_s].add(part)
+    return shard(out, "batch", None, "embed")
+
+
+def _capacity_dispatch_ep(params: Dict, xn: jnp.ndarray,
+                          combine: jnp.ndarray, cfg, act,
+                          rules, mesh) -> jnp.ndarray:
+    """shard_map expert parallelism: every rank runs the capacity
+    dispatch for ITS experts on ITS (replicated-over-model) local batch;
+    weights arrive FSDP-sharded and are all-gathered explicitly; the only
+    other collective is the psum of [B, S, D] partial outputs over
+    ``model``. Deterministic transport — GSPMD cannot re-shard the
+    gather/scatter (which it otherwise does, all-gathering activations
+    per layer; see EXPERIMENTS §Perf iteration 3)."""
+    from jax import shard_map
+    from repro.distributed.sharding import logical_spec
+
+    b, s, d = xn.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    cap = max(min(s, int(np.ceil(s * k * cfg.moe_capacity_factor / e))),
+              1)
+    data_axes = tuple(a for a in mesh.axis_names if a != "model")
+    wg, wu, wd = params["w_gate"], params["w_up"], params["w_down"]
+
+    def spec(shape, axes):
+        return logical_spec(shape, axes, rules, mesh)
+
+    def local_fn(xn_l, comb_l, wg_l, wu_l, wd_l):
+        # FSDP gather of this rank's expert weights (w_gate/w_up shard
+        # d_model; w_down shards d_model on its output dim)
+        wg_f = jax.lax.all_gather(wg_l, data_axes, axis=1, tiled=True)
+        wu_f = jax.lax.all_gather(wu_l, data_axes, axis=1, tiled=True)
+        wd_f = jax.lax.all_gather(wd_l, data_axes, axis=2, tiled=True)
+        bl, sl, dl = xn_l.shape
+        w_te = jnp.swapaxes(comb_l, 1, 2)             # [Bl, El, S]
+        top_w, top_s = jax.lax.top_k(w_te, cap)       # [Bl, El, C]
+        rows = jnp.arange(bl)[:, None, None]
+        xg = xn_l[rows, top_s]                        # [Bl, El, C, D]
+        gate = jnp.einsum("becd,edf->becf", xg, wg_f)
+        up = jnp.einsum("becd,edf->becf", xg, wu_f)
+        hidden = act(gate) * up
+        hidden = hidden * top_w[..., None].astype(hidden.dtype)
+        part = jnp.einsum("becf,efd->becd", hidden, wd_f)
+        out = jnp.zeros((bl, sl, dl), part.dtype).at[rows, top_s].add(
+            part)
+        return jax.lax.psum(out, "model")
+
+    fn = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(spec(xn.shape, ("batch", None, None)),
+                  spec(combine.shape, ("batch", None, "experts")),
+                  spec(wg.shape, ("experts", "fsdp", None)),
+                  spec(wu.shape, ("experts", "fsdp", None)),
+                  spec(wd.shape, ("experts", None, "fsdp"))),
+        out_specs=spec(xn.shape, ("batch", None, None)),
+        check_vma=False)
+    return fn(xn, combine, wg, wu, wd)
+
+
+def moe_block(params: Dict, x: jnp.ndarray, cfg
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k routed mixture of experts; experts sharded over ``model``
+    (EP). Dispatch: ``cfg.moe_dispatch`` = "dense" (paper-agnostic TPU
+    baseline: all experts on all tokens) or "capacity" (gather top-C
+    tokens per expert; 'beyond' optimization, see EXPERIMENTS §Perf).
+    Returns (out, aux_loss)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    xn = rms_norm(x, params["ln"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,de->bse", xn.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # combine weights as a dense [B, S, E] tensor (0 for unrouted experts)
+    combine = jnp.zeros((b, s, e), jnp.float32).at[
+        jnp.arange(b)[:, None, None],
+        jnp.arange(s)[None, :, None], top_i].set(top_p)
+    combine = shard(combine.astype(x.dtype), "batch", None, "experts")
+
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    if cfg.moe_dispatch == "capacity":
+        from repro.distributed.sharding import current_rules
+        rules, mesh = current_rules()
+        if (mesh is not None and "model" in mesh.axis_names
+                and e % mesh.shape["model"] == 0):
+            out = _capacity_dispatch_ep(params, xn, combine, cfg, act,
+                                        rules, mesh)
+        else:
+            out = _capacity_dispatch(params, xn, combine, cfg, act)
+    else:
+        out = _dense_dispatch(params, xn, combine, cfg, act)
+
+    if cfg.num_shared_experts:
+        sh_gate = jnp.einsum("bsd,df->bsf", xn, params["shared_w_gate"])
+        sh_up = jnp.einsum("bsd,df->bsf", xn, params["shared_w_up"])
+        out = out + jnp.einsum("bsf,fd->bsd", act(sh_gate) * sh_up,
+                               params["shared_w_down"])
+
+    # load-balancing aux loss (Switch-style): E * sum_e f_e * P_e
+    frac_routed = jnp.mean(combine > 0, axis=(0, 1)).astype(jnp.float32)
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac_routed * mean_prob)
+    return shard(out, "batch", None, "embed"), aux
+
+
+def dense_layer(params: Dict, x: jnp.ndarray, positions: jnp.ndarray,
+                cfg, window: jnp.ndarray, cache: Optional[Dict] = None,
+                causal: bool = True) -> Tuple[jnp.ndarray, Optional[Dict],
+                                              jnp.ndarray]:
+    """One decoder layer: attention + FFN (residual, pre-norm).
+    Returns (x, cache, aux_loss)."""
+    a, cache = attention_block(params["attn"], x, positions, cfg, window,
+                               cache=cache, causal=causal)
+    x = x + a
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "moe" and "moe" in params:
+        m, aux = moe_block(params["moe"], x, cfg)
+    else:
+        m = mlp_block(params["mlp"], x, cfg)
+    return x + m, cache, aux

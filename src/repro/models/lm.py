@@ -1,0 +1,550 @@
+"""Model assembly: parameter specs/init, train forward + loss, prefill and
+decode for every assigned architecture family.
+
+Layer stacks are ``lax.scan``-based (stacked per-layer params, one traced
+body) so the 94-layer MoE compiles as fast as the 6-layer whisper. Decode
+threads per-layer KV caches / SSM states through the same scans.
+
+Param trees are nested dicts of ``layers.P`` specs; ``init_params``
+materializes them (smoke tests only — the full configs are lowered from
+ShapeDtypeStructs and never allocated).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import shard
+from repro.models import ssm
+from repro.models.config import ModelConfig
+from repro.models.layers import (P, attention_block, dense_layer, mlp_block,
+                                 rms_norm)
+
+Tree = Dict[str, Any]
+
+
+# =====================================================================
+# Parameter specs
+# =====================================================================
+
+def _attn_specs(cfg: ModelConfig) -> Tree:
+    d, h, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    s = {"ln": P((d,), (None,), init="zeros"),
+         "wq": P((d, h, hd), ("fsdp", "heads", None), scale=d ** -0.5),
+         "wk": P((d, hkv, hd), ("fsdp", "kv_heads", None), scale=d ** -0.5),
+         "wv": P((d, hkv, hd), ("fsdp", "kv_heads", None), scale=d ** -0.5),
+         "wo": P((h, hd, d), ("heads", None, "fsdp"),
+                 scale=(h * hd) ** -0.5)}
+    if cfg.qk_norm:
+        s["q_norm"] = P((hd,), (None,), init="zeros")
+        s["k_norm"] = P((hd,), (None,), init="zeros")
+    return s
+
+
+def _mlp_specs(cfg: ModelConfig, gated: bool = True) -> Tree:
+    d, f = cfg.d_model, cfg.d_ff
+    s = {"ln": P((d,), (None,), init="zeros"),
+         "w_up": P((d, f), ("fsdp", "ff"), scale=d ** -0.5),
+         "w_down": P((f, d), ("ff", "fsdp"), scale=f ** -0.5)}
+    if gated:
+        s["w_gate"] = P((d, f), ("fsdp", "ff"), scale=d ** -0.5)
+    return s
+
+
+def _moe_specs(cfg: ModelConfig) -> Tree:
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    s = {"ln": P((d,), (None,), init="zeros"),
+         "router": P((d, e), (None, "experts"), scale=d ** -0.5),
+         "w_gate": P((e, d, f), ("experts", "fsdp", None), scale=d ** -0.5),
+         "w_up": P((e, d, f), ("experts", "fsdp", None), scale=d ** -0.5),
+         "w_down": P((e, f, d), ("experts", None, "fsdp"),
+                     scale=f ** -0.5)}
+    if cfg.num_shared_experts:
+        fs = f * cfg.num_shared_experts
+        s["shared_w_gate"] = P((d, fs), ("fsdp", "ff"), scale=d ** -0.5)
+        s["shared_w_up"] = P((d, fs), ("fsdp", "ff"), scale=d ** -0.5)
+        s["shared_w_down"] = P((fs, d), ("ff", "fsdp"), scale=fs ** -0.5)
+    return s
+
+
+def _mamba_specs(cfg: ModelConfig) -> Tree:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    proj = 2 * di + 2 * n + h
+    conv_c = di + 2 * n
+    return {"ln": P((d,), (None,), init="zeros"),
+            "in_proj": P((d, proj), ("fsdp", "inner"), scale=d ** -0.5),
+            "conv_w": P((cfg.ssm_conv, conv_c), (None, "inner"),
+                        scale=cfg.ssm_conv ** -0.5),
+            "dt_bias": P((h,), (None,), init="ones", scale=0.01),
+            "a_log": P((h,), (None,), init="ones", scale=0.5),
+            "d_skip": P((h,), (None,), init="ones"),
+            "gate_ln": P((di,), (None,), init="zeros"),
+            "out_proj": P((di, d), ("inner", "fsdp"), scale=di ** -0.5)}
+
+
+def _rwkv_specs(cfg: ModelConfig) -> Tree:
+    d, f = cfg.d_model, cfg.d_ff
+    lo, dl = cfg.rwkv_lora, cfg.rwkv_decay_lora
+    tm = {"ln": P((d,), (None,), init="zeros"),
+          "mu_base": P((d,), (None,), scale=0.5),
+          "mu": P((5, d), (None, None), scale=0.5),
+          "mix_wa": P((d, 5, lo), (None, None, None), scale=d ** -0.5),
+          "mix_wb": P((5, lo, d), (None, None, None), scale=lo ** -0.5),
+          "decay_wa": P((d, dl), (None, None), scale=d ** -0.5),
+          "decay_wb": P((dl, d), (None, None), scale=dl ** -0.5),
+          "w0": P((d,), (None,), init="ones", scale=0.5),
+          "u": P((d,), (None,), scale=0.5),
+          "wr": P((d, d), ("fsdp", "inner"), scale=d ** -0.5),
+          "wk": P((d, d), ("fsdp", "inner"), scale=d ** -0.5),
+          "wv": P((d, d), ("fsdp", "inner"), scale=d ** -0.5),
+          "wg": P((d, d), ("fsdp", "inner"), scale=d ** -0.5),
+          "gn_g": P((d,), (None,), init="zeros"),
+          "gn_b": P((d,), (None,), init="zeros"),
+          "wo": P((d, d), ("inner", "fsdp"), scale=d ** -0.5)}
+    cm = {"ln": P((d,), (None,), init="zeros"),
+          "mu_k": P((d,), (None,), scale=0.5),
+          "mu_r": P((d,), (None,), scale=0.5),
+          "wk": P((d, f), ("fsdp", "ff"), scale=d ** -0.5),
+          "wv": P((f, d), ("ff", "fsdp"), scale=f ** -0.5),
+          "wr": P((d, d), ("fsdp", "inner"), scale=d ** -0.5)}
+    return {"tm": tm, "cm": cm}
+
+
+def _stack(tree: Tree, n: int) -> Tree:
+    """Prepend a stacked ``layers`` axis of length n to every spec."""
+    def one(p: P) -> P:
+        return P((n,) + p.shape, (None,) + p.axes, init=p.init,
+                 scale=p.scale, dtype=p.dtype)
+    return jax.tree.map(one, tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def param_specs(cfg: ModelConfig) -> Tree:
+    d, v = cfg.d_model, cfg.padded_vocab
+    specs: Tree = {
+        "embed": P((v, d), ("vocab", "fsdp"), scale=0.02),
+        "final_ln": P((d,), (None,), init="zeros"),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P((d, v), ("fsdp", "vocab"), scale=d ** -0.5)
+
+    if cfg.family in ("dense", "vlm"):
+        layer = {"attn": _attn_specs(cfg), "mlp": _mlp_specs(cfg)}
+        specs["layers"] = _stack(layer, cfg.num_layers)
+    elif cfg.family == "moe":
+        layer = {"attn": _attn_specs(cfg), "moe": _moe_specs(cfg)}
+        specs["layers"] = _stack(layer, cfg.num_layers)
+    elif cfg.family == "ssm":
+        specs["layers"] = _stack(_rwkv_specs(cfg), cfg.num_layers)
+    elif cfg.family == "hybrid":
+        g, tail = _hybrid_groups(cfg)
+        specs["groups"] = _stack(_stack(_mamba_specs(cfg),
+                                        cfg.shared_attn_period), g)
+        if tail:
+            specs["tail"] = _stack(_mamba_specs(cfg), tail)
+        specs["shared_attn"] = {"attn": _attn_specs(cfg),
+                                "mlp": _mlp_specs(cfg)}
+    elif cfg.family == "audio":
+        enc = {"attn": _attn_specs(cfg), "mlp": _mlp_specs(cfg, gated=False)}
+        dec = {"attn": _attn_specs(cfg), "cross": _attn_specs(cfg),
+               "mlp": _mlp_specs(cfg, gated=False)}
+        specs["enc_layers"] = _stack(enc, cfg.encoder_layers)
+        specs["enc_final_ln"] = P((d,), (None,), init="zeros")
+        specs["layers"] = _stack(dec, cfg.num_layers)
+    if cfg.family == "vlm":
+        specs["patch_proj"] = P((d, d), ("fsdp", None), scale=d ** -0.5)
+    return specs
+
+
+def _hybrid_groups(cfg: ModelConfig) -> Tuple[int, int]:
+    """(num_groups, tail_layers): groups of ``shared_attn_period`` mamba
+    layers each followed by the shared attention block; remainder = tail."""
+    g = cfg.num_layers // cfg.shared_attn_period
+    return g, cfg.num_layers - g * cfg.shared_attn_period
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Tree:
+    """Materialize parameters (reduced/smoke configs only)."""
+    specs = param_specs(cfg)
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    keys = jax.random.split(key, len(leaves))
+    dtype = jnp.dtype(cfg.param_dtype)
+
+    def one(p: P, k):
+        if p.init == "zeros":
+            return jnp.zeros(p.shape, dtype)
+        if p.init == "ones":
+            return jnp.full(p.shape, p.scale, dtype)
+        return jax.random.normal(k, p.shape, dtype) * p.scale
+
+    return jax.tree.unflatten(treedef, [one(p, k) for p, k
+                                        in zip(leaves, keys)])
+
+
+# =====================================================================
+# Forward (training / prefill / decode share the layer bodies)
+# =====================================================================
+
+def _cast_params(cfg: ModelConfig, params: Tree) -> Tree:
+    """Master weights are fp32; compute runs in cfg.dtype. Norm scales and
+    SSM decay/dt parameters are explicitly upcast at their use sites."""
+    dt = jnp.dtype(cfg.dtype)
+    return jax.tree.map(
+        lambda p: p.astype(dt) if p.dtype == jnp.float32 else p, params)
+
+
+def _embed(cfg: ModelConfig, params: Tree, tokens: jnp.ndarray
+           ) -> jnp.ndarray:
+    x = params["embed"].astype(jnp.dtype(cfg.dtype))[tokens]
+    if cfg.scale_embed:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    return shard(x, "batch", None, "embed")
+
+
+def _vocab_mask(cfg: ModelConfig, logits: jnp.ndarray) -> jnp.ndarray:
+    """Neutralize padded vocab columns (they carry random init rows)."""
+    if cfg.padded_vocab == cfg.vocab_size:
+        return logits
+    cols = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                    logits.ndim - 1)
+    return jnp.where(cols < cfg.vocab_size, logits,
+                     jnp.asarray(-1e30, logits.dtype))
+
+
+def _unembed(cfg: ModelConfig, params: Tree, x: jnp.ndarray) -> jnp.ndarray:
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+    if cfg.logit_softcap > 0:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return shard(_vocab_mask(cfg, logits), "batch", None, "vocab")
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _transformer_trunk(cfg: ModelConfig, params: Tree, x: jnp.ndarray,
+                       positions: jnp.ndarray,
+                       cache: Optional[Tree] = None
+                       ) -> Tuple[jnp.ndarray, Optional[Tree], jnp.ndarray]:
+    """Scan over dense/moe/vlm decoder layers. cache: {"k": [L,B,S,Hkv,hd],
+    "v": ..., "len": scalar} or None."""
+    windows = jnp.asarray(cfg.layer_windows(), jnp.int32)
+
+    def body(carry, xs):
+        h, aux = carry
+        if cache is None:
+            lp, w = xs
+            h2, _, a = dense_layer(lp, h, positions, cfg, w, cache=None)
+            return (h2, aux + a), None
+        lp, w, ck, cv = xs
+        layer_cache = {"k": ck, "v": cv, "len": cache["len"]}
+        h2, nc, a = dense_layer(lp, h, positions, cfg, w,
+                                cache=layer_cache)
+        return (h2, aux + a), (nc["k"], nc["v"])
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if cache is None:
+        (x, aux), _ = jax.lax.scan(_maybe_remat(body, cfg), (x, aux0),
+                                   (params["layers"], windows))
+        return x, None, aux
+    (x, aux), (nk, nv) = jax.lax.scan(body, (x, aux0),
+                                      (params["layers"], windows,
+                                       cache["k"], cache["v"]))
+    new_cache = {"k": nk, "v": nv, "len": cache["len"] + x.shape[1]}
+    return x, new_cache, aux
+
+
+def _rwkv_trunk(cfg, params, x, cache):
+    def body(carry, xs):
+        if cache is None:
+            h, _ = ssm.rwkv_layer(xs, carry, cfg, None)
+            return h, None
+        lp, st = xs
+        h, ns = ssm.rwkv_layer(lp, carry, cfg, st)
+        return h, ns
+
+    if cache is None:
+        x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, params["layers"])
+        return x, None, jnp.zeros((), jnp.float32)
+    x, new_states = jax.lax.scan(body, x, (params["layers"], cache))
+    return x, new_states, jnp.zeros((), jnp.float32)
+
+
+def _hybrid_trunk(cfg, params, x, positions, cache):
+    """Zamba2: groups of mamba layers, shared attn block between groups.
+
+    cache: {"mamba_g": [G, period, ...] states, "mamba_t": [T, ...],
+            "attn_k"/"attn_v": [G, B, S, Hkv, hd], "len": scalar}."""
+    window = jnp.zeros((), jnp.int32)        # shared block: global attn
+    g, tail = _hybrid_groups(cfg)
+
+    def mamba_scan(h, lp_stack, st_stack):
+        def body(carry, xs):
+            if st_stack is None:
+                h2, _ = ssm.mamba_mix(xs, carry, cfg, None)
+                return carry + h2, None
+            lp, st = xs
+            h2, ns = ssm.mamba_mix(lp, carry, cfg, st)
+            return carry + h2, ns
+        if st_stack is None:
+            h, _ = jax.lax.scan(_maybe_remat(body, cfg), h, lp_stack)
+            return h, None
+        return jax.lax.scan(body, h, (lp_stack, st_stack))
+
+    def group_body(carry, xs):
+        h = carry
+        if cache is None:
+            gp = xs
+            h, _ = mamba_scan(h, gp, None)
+            a, _ = attention_block(params["shared_attn"]["attn"], h,
+                                   positions, cfg, window)
+            h = h + a
+            h = h + mlp_block(params["shared_attn"]["mlp"], h, cfg)
+            return h, None
+        gp, st, ck, cv = xs
+        h, ns = mamba_scan(h, gp, st)
+        lc = {"k": ck, "v": cv, "len": cache["len"]}
+        a, nc = attention_block(params["shared_attn"]["attn"], h,
+                                positions, cfg, window, cache=lc)
+        h = h + a
+        h = h + mlp_block(params["shared_attn"]["mlp"], h, cfg)
+        return h, (ns, nc["k"], nc["v"])
+
+    if cache is None:
+        x, _ = jax.lax.scan(group_body, x, params["groups"])
+        if tail:
+            x, _ = mamba_scan(x, params["tail"], None)
+        return x, None, jnp.zeros((), jnp.float32)
+
+    x, (n_mg, nk, nv) = jax.lax.scan(
+        group_body, x,
+        (params["groups"], cache["mamba_g"], cache["attn_k"],
+         cache["attn_v"]))
+    n_mt = None
+    if tail:
+        x, n_mt = mamba_scan(x, params["tail"], cache["mamba_t"])
+    new_cache = {"mamba_g": n_mg, "mamba_t": n_mt, "attn_k": nk,
+                 "attn_v": nv, "len": cache["len"] + x.shape[1]}
+    return x, new_cache, jnp.zeros((), jnp.float32)
+
+
+def _encoder(cfg, params, frames):
+    """Whisper encoder over stub frame embeddings [B, T, D] (bidir attn)."""
+    pos = jnp.arange(frames.shape[1])
+    window = jnp.zeros((), jnp.int32)
+    x = shard(frames.astype(jnp.dtype(cfg.dtype)), "batch", None, "embed")
+
+    def body(h, lp):
+        a, _ = attention_block(lp["attn"], h, pos, cfg, window,
+                               causal=False)
+        h = h + a
+        h = h + mlp_block(lp["mlp"], h, cfg, gated=False)
+        return h, None
+
+    x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, params["enc_layers"])
+    return rms_norm(x, params["enc_final_ln"], cfg.norm_eps)
+
+
+def _encdec_trunk(cfg, params, x, positions, memory, cache):
+    """Whisper decoder: self-attn (cached) + cross-attn + plain MLP."""
+    window = jnp.zeros((), jnp.int32)
+
+    def body(carry, xs):
+        h = carry
+        if cache is None:
+            lp = xs
+            a, _ = attention_block(lp["attn"], h, positions, cfg, window)
+            h = h + a
+            c, _ = attention_block(lp["cross"], h, positions, cfg, window,
+                                   memory=memory)
+            h = h + c
+            h = h + mlp_block(lp["mlp"], h, cfg, gated=False)
+            return h, None
+        lp, ck, cv = xs
+        lc = {"k": ck, "v": cv, "len": cache["len"]}
+        a, nc = attention_block(lp["attn"], h, positions, cfg, window,
+                                cache=lc)
+        h = h + a
+        c, _ = attention_block(lp["cross"], h, positions, cfg, window,
+                               memory=memory)
+        h = h + c
+        h = h + mlp_block(lp["mlp"], h, cfg, gated=False)
+        return h, (nc["k"], nc["v"])
+
+    if cache is None:
+        x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, params["layers"])
+        return x, None, jnp.zeros((), jnp.float32)
+    x, (nk, nv) = jax.lax.scan(body, x,
+                               (params["layers"], cache["k"], cache["v"]))
+    new_cache = {"k": nk, "v": nv, "len": cache["len"] + x.shape[1],
+                 "memory": cache["memory"]}
+    return x, new_cache, jnp.zeros((), jnp.float32)
+
+
+def _forward_hidden(cfg: ModelConfig, params: Tree, tokens: jnp.ndarray,
+                    patch_embeds: Optional[jnp.ndarray] = None,
+                    frames: Optional[jnp.ndarray] = None,
+                    cache: Optional[Tree] = None,
+                    positions: Optional[jnp.ndarray] = None
+                    ) -> Tuple[jnp.ndarray, Optional[Tree], jnp.ndarray]:
+    """Trunk output before final norm/unembed (VLM patch rows dropped)."""
+    params = _cast_params(cfg, params)
+    x = _embed(cfg, params, tokens)
+    if cfg.family == "vlm" and patch_embeds is not None:
+        pe = jnp.einsum("bpd,de->bpe",
+                        patch_embeds.astype(x.dtype), params["patch_proj"])
+        x = jnp.concatenate([shard(pe, "batch", None, "embed"), x], axis=1)
+    if positions is None:
+        start = cache.get("len", 0) if cache is not None else 0
+        positions = start + jnp.arange(x.shape[1])
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        x, cache, aux = _transformer_trunk(cfg, params, x, positions, cache)
+    elif cfg.family == "ssm":
+        x, cache, aux = _rwkv_trunk(cfg, params, x, cache)
+    elif cfg.family == "hybrid":
+        x, cache, aux = _hybrid_trunk(cfg, params, x, positions, cache)
+    elif cfg.family == "audio":
+        memory = (cache["memory"] if cache is not None
+                  else _encoder(cfg, params, frames))
+        x, cache, aux = _encdec_trunk(cfg, params, x, positions, memory,
+                                      cache)
+    else:
+        raise ValueError(cfg.family)
+
+    if cfg.family == "vlm" and patch_embeds is not None:
+        x = x[:, patch_embeds.shape[1]:]
+    return x, cache, aux
+
+
+def forward(cfg: ModelConfig, params: Tree, tokens: jnp.ndarray,
+            patch_embeds: Optional[jnp.ndarray] = None,
+            frames: Optional[jnp.ndarray] = None,
+            cache: Optional[Tree] = None,
+            positions: Optional[jnp.ndarray] = None
+            ) -> Tuple[jnp.ndarray, Optional[Tree], jnp.ndarray]:
+    """Token logits for any family. Returns (logits, cache', aux_loss)."""
+    x, cache, aux = _forward_hidden(cfg, params, tokens,
+                                    patch_embeds=patch_embeds,
+                                    frames=frames, cache=cache,
+                                    positions=positions)
+    return _unembed(cfg, params, x), cache, aux
+
+
+def _ce_chunks(seq_len: int, vocab: int) -> int:
+    """Sequence-chunked CE: keep live logits ~<= 2^24 elements per call."""
+    if vocab < 16384:
+        return 1
+    target = max(1, (seq_len * vocab) // (1 << 24))
+    nc = 1
+    while nc < target and seq_len % (nc * 2) == 0:
+        nc *= 2
+    return nc
+
+
+def _chunked_ce(cfg: ModelConfig, params: Tree, x: jnp.ndarray,
+                labels: jnp.ndarray) -> jnp.ndarray:
+    """Next-token CE without materializing full [B, S, V] logits: the
+    unembed + logsumexp is computed per sequence chunk under remat, so the
+    live working set is [B, S/nc, V]."""
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    w = w.astype(x.dtype)
+    b, s, d = x.shape
+    nc = _ce_chunks(s, w.shape[1])
+
+    def chunk_ce(xc, lc):
+        logits = jnp.einsum("bsd,dv->bsv", xc, w)
+        if cfg.logit_softcap > 0:
+            logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+        logits = _vocab_mask(cfg, logits)
+        logits = shard(logits, "batch", None, "vocab").astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        mask = (lc >= 0).astype(jnp.float32)
+        return jnp.sum((logz - gold) * mask), jnp.sum(mask)
+
+    if nc == 1:
+        tot, cnt = chunk_ce(x, labels)
+    else:
+        xc = x.reshape(b, nc, s // nc, d).swapaxes(0, 1)
+        lc = labels.reshape(b, nc, s // nc).swapaxes(0, 1)
+        (tot, cnt), _ = jax.lax.scan(
+            lambda c, args: ((c[0] + jax.checkpoint(chunk_ce)(*args)[0],
+                              c[1] + (args[1] >= 0).sum().astype(
+                                  jnp.float32)), None),
+            (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            (xc, lc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(cfg: ModelConfig, params: Tree, batch: Dict[str, jnp.ndarray]
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Mean next-token cross-entropy (+ MoE aux)."""
+    x, _, aux = _forward_hidden(
+        cfg, params, batch["tokens"],
+        patch_embeds=batch.get("patch_embeds"),
+        frames=batch.get("frames"))
+    ce = _chunked_ce(cfg, params, x, batch["labels"])
+    loss = ce + cfg.router_aux_coef * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# =====================================================================
+# Serving: cache init / prefill / decode
+# =====================================================================
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Tree:
+    zero = jnp.zeros((), jnp.int32)
+    if cfg.family in ("dense", "moe", "vlm"):
+        kv = jnp.zeros((cfg.num_layers, batch, max_len, cfg.num_kv_heads,
+                        cfg.hd), dtype)
+        return {"k": kv, "v": kv, "len": zero}
+    if cfg.family == "ssm":
+        st = ssm.init_rwkv_state(cfg, batch, dtype)
+        return jax.tree.map(
+            lambda l: jnp.broadcast_to(l, (cfg.num_layers,) + l.shape), st)
+    if cfg.family == "hybrid":
+        g, tail = _hybrid_groups(cfg)
+        mst = ssm.init_mamba_state(cfg, batch, dtype)
+        per = cfg.shared_attn_period
+        kv = jnp.zeros((g, batch, max_len, cfg.num_kv_heads, cfg.hd), dtype)
+        return {"mamba_g": jax.tree.map(
+                    lambda l: jnp.broadcast_to(l, (g, per) + l.shape), mst),
+                "mamba_t": (jax.tree.map(
+                    lambda l: jnp.broadcast_to(l, (tail,) + l.shape), mst)
+                    if tail else None),
+                "attn_k": kv, "attn_v": kv, "len": zero}
+    if cfg.family == "audio":
+        kv = jnp.zeros((cfg.num_layers, batch, max_len, cfg.num_kv_heads,
+                        cfg.hd), dtype)
+        mem = jnp.zeros((batch, cfg.num_mem_tokens, cfg.d_model), dtype)
+        return {"k": kv, "v": kv, "len": zero, "memory": mem}
+    raise ValueError(cfg.family)
+
+
+def prefill(cfg: ModelConfig, params: Tree, tokens: jnp.ndarray,
+            max_len: int, patch_embeds=None, frames=None,
+            cache_dtype=jnp.bfloat16) -> Tuple[jnp.ndarray, Tree]:
+    cache = init_cache(cfg, tokens.shape[0], max_len, cache_dtype)
+    if cfg.family == "audio":
+        cache["memory"] = _encoder(cfg, _cast_params(cfg, params),
+                                   frames).astype(cache_dtype)
+    logits, cache, _ = forward(cfg, params, tokens,
+                               patch_embeds=patch_embeds, cache=cache)
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params: Tree, cache: Tree,
+                tokens: jnp.ndarray) -> Tuple[jnp.ndarray, Tree]:
+    """One decode step: tokens [B, 1] -> (logits [B, 1, V], cache')."""
+    logits, cache, _ = forward(cfg, params, tokens, cache=cache)
+    return logits, cache

@@ -1,0 +1,330 @@
+"""State-space / linear-recurrence trunks: Mamba2 (SSD) and RWKV6 (Finch).
+
+Both are implemented in *chunked* form — intra-chunk work is MXU-friendly
+matmuls; the inter-chunk carry is a short ``lax.scan`` — plus O(1)-state
+recurrent ``*_decode_step`` functions used by serving. The chunked and
+recurrent paths are validated against each other in tests.
+
+Numerics notes (model definition, applied consistently in both paths):
+  * Mamba2 per-head decay alpha_t = exp(A * dt_t), A = -exp(A_log) < 0;
+    pairwise intra-chunk exponents are <= 0, so the factored matmul form
+    is safe in f32.
+  * RWKV6 per-channel log-decay is clamped to >= -4 so the factored
+    chunk form (exp(+cumsum) up to chunk length 16·4 = 64 < log(f32max))
+    cannot overflow. Decay this fast (w < 0.018) is saturated anyway.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.layers import rms_norm
+
+RWKV_CHUNK = 16
+RWKV_LOGW_MIN = -4.0
+
+
+def _scan_chunks(body, carry, xs, num_chunks: int):
+    """scan with sqrt-checkpointing: when the chunk count is large, group
+    chunks into sqrt(nc)-sized super-chunks and remat each group, so
+    backward keeps O(sqrt(nc)) states instead of O(nc) (the inter-chunk
+    state carry is large: [B, H, K, V])."""
+    body = jax.checkpoint(body)
+    if num_chunks <= 32:
+        return jax.lax.scan(body, carry, xs)
+    inner = 1
+    while inner * inner < num_chunks:
+        inner *= 2
+    if num_chunks % inner:
+        return jax.lax.scan(body, carry, xs)
+    outer = num_chunks // inner
+
+    def regroup(t):
+        return t.reshape(outer, inner, *t.shape[1:])
+
+    xs2 = jax.tree.map(regroup, xs)
+
+    @jax.checkpoint
+    def outer_body(c, x_in):
+        return jax.lax.scan(body, c, x_in)
+
+    carry, ys = jax.lax.scan(outer_body, carry, xs2)
+    ys = jax.tree.map(lambda t: t.reshape(num_chunks, *t.shape[2:]), ys)
+    return carry, ys
+
+
+# =====================================================================
+# Mamba2 (chunked SSD)
+# =====================================================================
+
+def _causal_conv(x: jnp.ndarray, kernel: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv. x [B, S, C], kernel [K, C],
+    state [B, K-1, C] (history) -> (y [B, S, C], new_state)."""
+    k = kernel.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * kernel[i] for i in range(k))
+    return y, xp[:, -(k - 1):]
+
+
+def mamba_mix(params: Dict, x: jnp.ndarray, cfg,
+              state: Optional[Dict] = None
+              ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Mamba2 mixer: in_proj -> conv -> SSD scan -> gated norm -> out_proj.
+
+    x [B, S, D]. ``state`` (decode): {"conv": [B, K-1, C], "ssm":
+    [B, H, P, N]} — pass None for training (zero initial state).
+    """
+    b, s, _ = x.shape
+    di, n, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    h = cfg.ssm_heads
+    xn = rms_norm(x, params["ln"], cfg.norm_eps)
+    proj = jnp.einsum("bsd,de->bse", xn, params["in_proj"])
+    proj = shard(proj, "batch", None, "inner")
+    z, xbc, dt_raw = jnp.split(proj, [di, 2 * di + 2 * n], axis=-1)
+
+    conv_state = state["conv"] if state is not None else None
+    xbc, new_conv = _causal_conv(jax.nn.silu(xbc), params["conv_w"],
+                                 conv_state)
+    xs, bm, cm = jnp.split(xbc, [di, di + n], axis=-1)
+    xs = xs.reshape(b, s, h, p)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"])          # [B, S, H]
+    log_a = -jnp.exp(params["a_log"].astype(jnp.float32)) * dt
+
+    ssm_state = (state["ssm"] if state is not None
+                 else jnp.zeros((b, h, p, n), jnp.float32))
+    y, new_ssm = _ssd_chunked(xs, dt, log_a, bm.astype(jnp.float32),
+                              cm.astype(jnp.float32), ssm_state,
+                              cfg.ssm_chunk)
+    y = y + params["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, s, di)
+    y = rms_norm(y.astype(x.dtype) * jax.nn.silu(z), params["gate_ln"],
+                 cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    out = shard(out, "batch", None, "embed")
+    new_state = ({"conv": new_conv.astype(state["conv"].dtype),
+                  "ssm": new_ssm} if state is not None else None)
+    return out, new_state
+
+
+def _ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, log_a: jnp.ndarray,
+                 bm: jnp.ndarray, cm: jnp.ndarray, s0: jnp.ndarray,
+                 chunk: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan.
+
+    x [B, S, H, P]; dt/log_a [B, S, H]; bm/cm [B, S, N]; s0 [B, H, P, N].
+    y_t = C_t^T S_t,  S_t = alpha_t S_{t-1} + dt_t B_t (x_t)^T.
+    Returns (y [B, S, H, P] f32, final state).
+    """
+    b, s, h, p = x.shape
+    n = bm.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    def r(t, width):                     # [B, S, ...] -> [Nc, B, Q, ...]
+        return jnp.moveaxis(t.reshape(b, nc, q, *width), 1, 0)
+
+    xc, dtc, lac = r(x, (h, p)), r(dt, (h,)), r(log_a, (h,))
+    bc, cc = r(bm, (n,)), r(cm, (n,))
+
+    def body(carry, inp):
+        st = carry                                   # [B, H, P, N]
+        xq, dq, laq, bq, cq = inp
+        lcum = jnp.cumsum(laq, axis=1)               # [B, Q, H] inclusive
+        # intra: M[t, s'] = (C_t.B_s') exp(Lt - Ls') dt_s'  (s' <= t)
+        # (mask the exponent, not the product: exp of future-pair diffs
+        # overflows and inf*0 poisons the backward pass)
+        cb = jnp.einsum("bqn,bsn->bqs", cq, bq)
+        mask = jnp.tril(jnp.ones((q, q), bool))[None, :, :, None]
+        diff = lcum[:, :, None, :] - lcum[:, None, :, :]
+        decay = jnp.exp(jnp.where(mask, diff, -jnp.inf))
+        m = cb[..., None] * decay * dq[:, None, :, :]
+        y_intra = jnp.einsum("bqsh,bshp->bqhp", m, xq)
+        # inter: y += exp(Lt) C_t @ S_prev
+        y_inter = jnp.einsum("bqn,bhpn,bqh->bqhp", cq, st, jnp.exp(lcum))
+        # state: S' = exp(L_Q) S + sum_s exp(L_Q - L_s) dt_s B_s x_s^T
+        tail = jnp.exp(lcum[:, -1:, :] - lcum) * dq   # [B, Q, H]
+        s_new = (jnp.exp(lcum[:, -1])[:, :, None, None] * st
+                 + jnp.einsum("bsn,bshp,bsh->bhpn", bq, xq, tail))
+        return s_new, y_intra + y_inter
+
+    s_fin, ys = _scan_chunks(body, s0, (xc, dtc, lac, bc, cc), nc)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p)
+    return y, s_fin
+
+
+def mamba_decode_step(params: Dict, x: jnp.ndarray, cfg,
+                      state: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """One-token recurrent step (S=1); exact recurrence, O(1) state."""
+    return mamba_mix(params, x, cfg, state=state)
+
+
+def init_mamba_state(cfg, batch: int, dtype=jnp.float32) -> Dict:
+    c = cfg.d_inner + 2 * cfg.ssm_state      # conv acts on (x, B, C) only
+    return {"conv": jnp.zeros((batch, cfg.ssm_conv - 1, c), dtype),
+            "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                              cfg.ssm_state), jnp.float32)}
+
+
+# =====================================================================
+# RWKV6 (Finch)
+# =====================================================================
+
+def rwkv_time_mix(params: Dict, x: jnp.ndarray, cfg,
+                  state: Optional[Dict] = None
+                  ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """RWKV6 time-mix block (WKV attention substitute).
+
+    x [B, S, D]. ``state`` (decode): {"shift": [B, D] last input,
+    "wkv": [B, H, K, V]} or None (training, zeros)."""
+    b, s, d = x.shape
+    h, hk = cfg.rwkv_heads, cfg.rwkv_head_dim
+    xn = rms_norm(x, params["ln"], cfg.norm_eps)
+
+    if state is not None:
+        prev = jnp.concatenate(
+            [state["shift"][:, None].astype(xn.dtype), xn[:, :-1]], 1)
+    else:
+        prev = jnp.pad(xn, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+    # data-dependent lerp for r, k, v, w, g
+    xx = prev - xn
+    xxx = xn + xx * params["mu_base"]
+    lora = jnp.einsum("bsfl,fld->bsfd",
+                      jnp.tanh(jnp.einsum("bsd,dfl->bsfl", xxx,
+                                          params["mix_wa"])),
+                      params["mix_wb"])                # [B, S, 5, D]
+    mixed = xn[:, :, None] + xx[:, :, None] * (params["mu"] + lora)
+    xr, xk, xv, xw, xg = [mixed[:, :, i] for i in range(5)]
+
+    r = jnp.einsum("bsd,de->bse", xr, params["wr"]).reshape(b, s, h, hk)
+    k = jnp.einsum("bsd,de->bse", xk, params["wk"]).reshape(b, s, h, hk)
+    v = jnp.einsum("bsd,de->bse", xv, params["wv"]).reshape(b, s, h, hk)
+    g = jnp.einsum("bsd,de->bse", xg, params["wg"])
+    # per-channel log-decay, clamped (see module docstring)
+    ww = (params["w0"]
+          + jnp.einsum("bsl,ld->bsd",
+                       jnp.tanh(jnp.einsum("bsd,dl->bsl", xw,
+                                           params["decay_wa"])),
+                       params["decay_wb"]))
+    logw = jnp.clip(-jnp.exp(ww.astype(jnp.float32)), RWKV_LOGW_MIN, -1e-5)
+    logw = logw.reshape(b, s, h, hk)
+    u = params["u"].reshape(h, hk)
+
+    wkv0 = (state["wkv"] if state is not None
+            else jnp.zeros((b, h, hk, hk), jnp.float32))
+    y, wkv_fin = _wkv_chunked(r.astype(jnp.float32), k.astype(jnp.float32),
+                              v.astype(jnp.float32), logw, u, wkv0)
+
+    # per-head group norm, gate, out-proj
+    y = y.reshape(b, s, h, hk)
+    mean = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = (y - mean) * jax.lax.rsqrt(var + 64e-5)
+    y = (y * (1.0 + params["gn_g"].reshape(h, hk))
+         + params["gn_b"].reshape(h, hk))
+    y = y.reshape(b, s, d).astype(x.dtype) * jax.nn.silu(g)
+    out = jnp.einsum("bsd,de->bse", y, params["wo"])
+    out = shard(out, "batch", None, "embed")
+    new_state = ({"shift": xn[:, -1].astype(state["shift"].dtype),
+                  "wkv": wkv_fin} if state is not None else None)
+    return out, new_state
+
+
+def _wkv_chunked(r, k, v, logw, u, s0
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked WKV6: y_t = r_t.(diag(u) k_t v_t^T + S_{t-1});
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T (decays act on the K index).
+
+    r/k/v [B, S, H, K]; logw same; u [H, K]; s0 [B, H, K, K(V)].
+    Returns (y [B, S, H, K], final state). f32 throughout.
+    """
+    b, s, h, hk = r.shape
+    q = min(RWKV_CHUNK, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    def rs(t):
+        return jnp.moveaxis(t.reshape(b, nc, q, h, hk), 1, 0)
+
+    rc, kc, vc, wc = rs(r), rs(k), rs(v), rs(logw)
+
+    def body(carry, inp):
+        st = carry                                    # [B, H, K, V]
+        rq, kq, vq, lw = inp                          # [B, Q, H, K]
+        wcum = jnp.cumsum(lw, axis=1)                 # inclusive
+        wex = wcum - lw                               # exclusive
+        # inter-chunk: y_t += (r_t * exp(Wex_t)) @ S_prev
+        y_inter = jnp.einsum("bqhk,bhkv->bqhv", rq * jnp.exp(wex), st)
+        # intra: A[t,s'] = sum_k r_tk k_s'k exp(Wex_t - Wc_s'), s' < t
+        rr = rq * jnp.exp(wex)
+        kk = kq * jnp.exp(-wcum)
+        a = jnp.einsum("bqhk,bshk->bhqs", rr, kk)
+        mask = jnp.tril(jnp.ones((q, q), bool), -1)
+        a = jnp.where(mask[None, None], a, 0.0)
+        # bonus diagonal: r_t.(u * k_t) v_t
+        diag = jnp.einsum("bqhk,bqhk->bqh", rq, kq * u[None, None])
+        y = (y_inter + jnp.einsum("bhqs,bshv->bqhv", a, vq)
+             + diag[..., None] * vq)
+        # state update: S' = exp(Wc_Q) S + sum_s exp(Wc_Q - Wc_s) k_s v_s^T
+        tail = jnp.exp(wcum[:, -1:] - wcum)           # [B, Q, H, K]
+        s_new = (jnp.exp(wcum[:, -1])[..., None] * st
+                 + jnp.einsum("bshk,bshv->bhkv", kq * tail, vq))
+        return s_new, y
+
+    s_fin, ys = _scan_chunks(body, s0, (rc, kc, vc, wc), nc)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, hk)
+    return y, s_fin
+
+
+def rwkv_channel_mix(params: Dict, x: jnp.ndarray, cfg,
+                     state: Optional[Dict] = None
+                     ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """RWKV6 channel-mix (FFN substitute): squared-ReLU keyed FFN with
+    receptance gate and token shift."""
+    xn = rms_norm(x, params["ln"], cfg.norm_eps)
+    if state is not None:
+        prev = jnp.concatenate(
+            [state["shift"][:, None].astype(xn.dtype), xn[:, :-1]], 1)
+    else:
+        prev = jnp.pad(xn, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    xx = prev - xn
+    xk = xn + xx * params["mu_k"]
+    xr = xn + xx * params["mu_r"]
+    kk = jnp.einsum("bsd,df->bsf", xk, params["wk"])
+    kk = shard(jnp.square(jax.nn.relu(kk)), "batch", None, "ff")
+    vv = jnp.einsum("bsf,fd->bsd", kk, params["wv"])
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, params["wr"]))
+    out = shard(rr * vv, "batch", None, "embed")
+    new_state = ({"shift": xn[:, -1].astype(state["shift"].dtype)}
+                 if state is not None else None)
+    return out, new_state
+
+
+def rwkv_layer(params: Dict, x: jnp.ndarray, cfg,
+               state: Optional[Dict] = None
+               ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    tm_state = state["tm"] if state is not None else None
+    cm_state = state["cm"] if state is not None else None
+    a, tm_new = rwkv_time_mix(params["tm"], x, cfg, tm_state)
+    x = x + a
+    m, cm_new = rwkv_channel_mix(params["cm"], x, cfg, cm_state)
+    x = x + m
+    new = ({"tm": tm_new, "cm": cm_new} if state is not None else None)
+    return x, new
+
+
+def init_rwkv_state(cfg, batch: int, dtype=jnp.float32) -> Dict:
+    d, h, hk = cfg.d_model, cfg.rwkv_heads, cfg.rwkv_head_dim
+    return {"tm": {"shift": jnp.zeros((batch, d), dtype),
+                   "wkv": jnp.zeros((batch, h, hk, hk), jnp.float32)},
+            "cm": {"shift": jnp.zeros((batch, d), dtype)}}

@@ -1,0 +1,3 @@
+from repro.optim.adamw import (AdamW, adamw_init, adamw_update,
+                               cosine_schedule, linear_warmup,
+                               global_norm, clip_by_global_norm)

@@ -1,0 +1,52 @@
+"""Request batcher: collect single-query requests into device batches.
+
+TPU search is a batched beam (DESIGN.md §2.2); the batcher pads the
+pending queue to the nearest compiled batch-size bucket so jit caches a
+handful of shapes instead of one per request count.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class PendingRequest:
+    request_id: int
+    query: np.ndarray
+
+
+class RequestBatcher:
+    def __init__(self, dim: int, buckets: Sequence[int] = (8, 32, 128),
+                 max_wait: int = 64):
+        self.dim = dim
+        self.buckets = tuple(sorted(buckets))
+        self.max_wait = max_wait
+        self.queue: List[PendingRequest] = []
+        self._next_id = 0
+
+    def submit(self, query: np.ndarray) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self.queue.append(PendingRequest(rid, np.asarray(
+            query, np.float32)))
+        return rid
+
+    def ready(self) -> bool:
+        return (len(self.queue) >= self.buckets[-1]
+                or len(self.queue) >= self.max_wait
+                or len(self.queue) > 0)
+
+    def next_batch(self) -> Tuple[np.ndarray, List[int], int]:
+        """Returns (padded queries [B, D], request ids, valid count)."""
+        n = min(len(self.queue), self.buckets[-1])
+        bucket = next(b for b in self.buckets if b >= n)
+        take, self.queue = self.queue[:n], self.queue[n:]
+        q = np.zeros((bucket, self.dim), np.float32)
+        ids = []
+        for i, r in enumerate(take):
+            q[i] = r.query
+            ids.append(r.request_id)
+        return q, ids, n

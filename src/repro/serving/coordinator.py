@@ -1,0 +1,88 @@
+"""Vector-DB serving plane (Fig. 1(b)): segment servers + coordinator.
+
+A machine holds multiple independent segments (each with its own
+Starling index); the coordinator scatters a query batch to the relevant
+segments (all by default; a partition-pruning hook mirrors the
+query-dispatch optimizations of Pyramid/LANNS), gathers per-segment
+top-k and merges hierarchically — exactly the structure the on-mesh
+``make_search_step`` reproduces with shard_map (segments <-> model
+ranks, merge <-> all-gather).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.device_search import DeviceSegment, device_anns
+from repro.core.iostats import IOStats
+
+
+def merge_topk(ids: Sequence[np.ndarray], dists: Sequence[np.ndarray],
+               offsets: Sequence[int], k: int
+               ) -> Tuple[np.ndarray, np.ndarray]:
+    """Merge per-segment results into global top-k.
+
+    ids[i]/dists[i]: [Q, k_i] from segment i; offsets[i]: id-space base
+    of segment i. Invalid slots: id < 0 / dist inf."""
+    gids = np.concatenate(
+        [np.where(i >= 0, i + off, -1) for i, off in zip(ids, offsets)],
+        axis=1)
+    gd = np.concatenate(dists, axis=1)
+    gd = np.where(gids >= 0, gd, np.inf)
+    order = np.argsort(gd, axis=1)[:, :k]
+    return (np.take_along_axis(gids, order, axis=1),
+            np.take_along_axis(gd, order, axis=1))
+
+
+@dataclasses.dataclass
+class SegmentServer:
+    """One segment + its device arrays + search knobs."""
+    segment: DeviceSegment
+    offset: int                   # base of this segment's id space
+    num_vectors: int
+    k_default: int = 10
+    candidates: int = 64
+    max_hops: int = 256
+    metric: str = "l2"
+    fetch_width: int = 2          # blocks fetched per DMA round-trip
+    #                               (see EXPERIMENTS §Perf cell 3)
+
+    def search(self, queries: np.ndarray, k: Optional[int] = None
+               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        import jax.numpy as jnp
+        k = k or self.k_default
+        ids, dists, io, _ = device_anns(
+            self.segment, jnp.asarray(queries, jnp.float32), k=k,
+            candidates=self.candidates, max_hops=self.max_hops,
+            metric=self.metric, fetch_width=self.fetch_width)
+        return np.asarray(ids), np.asarray(dists), np.asarray(io)
+
+
+class QueryCoordinator:
+    """Scatter -> per-segment search -> hierarchical merge."""
+
+    def __init__(self, servers: List[SegmentServer],
+                 prune_fn: Optional[Callable] = None):
+        self.servers = servers
+        self.prune_fn = prune_fn          # (queries) -> segment indices
+
+    def search(self, queries: np.ndarray, k: int = 10
+               ) -> Tuple[np.ndarray, np.ndarray, Dict]:
+        targets = (self.prune_fn(queries) if self.prune_fn
+                   else list(range(len(self.servers))))
+        ids, dists, offs, total_io = [], [], [], 0
+        for si in targets:
+            s = self.servers[si]
+            i, d, io = s.search(queries, k)
+            ids.append(i)
+            dists.append(d)
+            offs.append(s.offset)
+            total_io += int(io.sum())
+        gi, gd = merge_topk(ids, dists, offs, k)
+        stats = {"segments_searched": len(targets),
+                 "total_block_reads": total_io,
+                 "mean_block_reads_per_query":
+                     total_io / max(queries.shape[0], 1)}
+        return gi, gd, stats

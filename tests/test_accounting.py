@@ -1,0 +1,68 @@
+"""Space/byte accounting: Example 2, Eq. 8/10, segment budgets (§2.2,
+§4.1, §6.4)."""
+import numpy as np
+import pytest
+
+from repro.configs.starling_segment import PAPER_DATASETS
+from repro.core.params import LayoutParams
+
+
+@pytest.mark.parametrize("name", list(PAPER_DATASETS))
+def test_example2_block_math(name):
+    """Reproduce the paper's per-dataset (gamma, eps, rho) exactly
+    (Example 2 + Tab. 16)."""
+    n, dim, dtype_b, lam, eta, eps_want, rho_want = PAPER_DATASETS[name]
+    lp = LayoutParams(block_kb=eta)
+    eps = lp.verts_per_block(dim, lam, dtype_bytes=dtype_b)
+    assert eps == eps_want
+    rho = lp.num_blocks(n, dim, lam, dtype_bytes=dtype_b)
+    assert rho == rho_want
+
+
+def test_bigann_example2_exact_numbers():
+    """BIGANN: gamma = (128 + 4 + 31*4)/1024 KB -> eps=16, rho=2,062,500."""
+    lp = LayoutParams(block_kb=4)
+    gamma_bytes = 128 * 1 + 4 + 31 * 4
+    assert gamma_bytes == 256
+    assert lp.verts_per_block(128, 31, dtype_bytes=1) == 16
+    assert lp.num_blocks(33_000_000, 128, 31, dtype_bytes=1) == 2_062_500
+
+
+def test_segment_budget_accounting(small_segment):
+    seg = small_segment
+    # Eq. 10 components all positive and memory < disk
+    mem = seg.memory_bytes()
+    disk = seg.disk_bytes()
+    assert 0 < mem < disk
+    ok = seg.check_budget()
+    assert ok["memory_ok"] and ok["disk_ok"]
+    # mapping charge is exactly 8 bytes/vertex (block id + slot, int32)
+    assert seg.view.layout.mapping_bytes() == seg.num_vectors * 8
+
+
+def test_disk_bytes_are_block_aligned(small_segment):
+    seg = small_segment
+    store = seg.view.store
+    assert seg.disk_bytes() == int(store.num_blocks * store.block_kb
+                                   * 1024)
+
+
+def test_build_times_recorded(small_segment):
+    t = small_segment.build_times
+    for key in ("disk_graph_s", "shuffling_s", "memory_graph_s", "pq_s"):
+        assert key in t and t[key] >= 0
+    # paper: shuffling is a small fraction of graph construction
+    assert t["shuffling_s"] < t["disk_graph_s"]
+
+
+def test_save_load_roundtrip(small_segment, tmp_path, small_data):
+    from repro.core.segment import load_segment, save_segment
+    from repro.core.search import anns
+    x, q = small_data
+    path = str(tmp_path / "seg.npz")
+    save_segment(small_segment, path)
+    seg2 = load_segment(path, small_segment.params)
+    ids1, _, _ = anns(small_segment.view, q[:4], 5,
+                      small_segment.params.search)
+    ids2, _, _ = anns(seg2.view, q[:4], 5, small_segment.params.search)
+    np.testing.assert_array_equal(ids1, ids2)

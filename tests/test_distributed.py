@@ -1,0 +1,111 @@
+"""Distribution substrate: sharding rules, HLO analyzer, compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec
+
+from repro.distributed.compress import (compress_with_feedback, dequantize,
+                                        ef_init, quantize)
+from repro.distributed.hlo import HloAnalyzer, analyze_hlo
+from repro.distributed.sharding import (SINGLE_POD_RULES, logical_spec)
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def test_logical_spec_divisibility_fallback():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    # divisible dims shard; indivisible fall back to replication
+    spec = logical_spec((256, 4096), ("vocab", "fsdp"),
+                        SINGLE_POD_RULES, mesh)
+    assert spec == PartitionSpec("model", "data")
+    spec = logical_spec((4, 100), ("heads", "ff"), SINGLE_POD_RULES, mesh)
+    assert spec == PartitionSpec(None, None)      # 4 % 16, 100 % 16 != 0
+
+
+def test_logical_spec_no_axis_reuse():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    # both dims map to model -> second dim must not reuse the axis
+    spec = logical_spec((64, 32), ("heads", "ff"), SINGLE_POD_RULES, mesh)
+    assert spec == PartitionSpec("model", None)
+
+
+def test_hlo_analyzer_scan_flops_exact():
+    def scanned(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        out, _ = jax.lax.scan(body, x, None, length=7)
+        return out
+    x = jnp.ones((64, 128), jnp.float32)
+    w = jnp.ones((128, 128), jnp.float32)
+    txt = jax.jit(scanned).lower(x, w).compile().as_text()
+    t = analyze_hlo(txt)
+    assert t.flops == pytest.approx(7 * 2 * 64 * 128 * 128)
+
+
+def test_hlo_analyzer_collectives_synthetic():
+    hlo = """
+HloModule test, entry_computation_layout={()->f32[]}
+
+ENTRY %main.1 () -> f32[] {
+  %x = f32[1024]{0} parameter(0)
+  %ag = f32[16384]{0} all-gather(%x), replica_groups=[8,16]<=[128], dimensions={0}
+  %ar = f32[1024]{0} all-reduce(%x), replica_groups=[8,16]<=[128], to_apply=%add
+  %rs = f32[64]{0} reduce-scatter(%x), replica_groups=[8,16]<=[128], dimensions={0}
+}
+"""
+    t = analyze_hlo(hlo)
+    per = t.per_collective
+    assert per["all-gather"]["bytes"] == 16384 * 4 // 16
+    assert per["all-reduce"]["bytes"] == 1024 * 4
+    assert per["reduce-scatter"]["bytes"] == 64 * 4 * 16
+
+
+def test_quantize_roundtrip_error_bound():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal(1000), jnp.float32)
+    q, s = quantize(g)
+    err = jnp.abs(dequantize(q, s) - g)
+    assert float(err.max()) <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_preserves_signal():
+    """Sum of dequantized grads + final error == sum of raw grads."""
+    rng = np.random.default_rng(1)
+    grads = [jnp.asarray(rng.standard_normal(64) * 10 ** i, jnp.float32)
+             for i in range(3)]
+    errors = ef_init({"g": grads[0]})
+    total_sent = jnp.zeros(64)
+    total_true = jnp.zeros(64)
+    e = errors["g"]
+    for g in grads:
+        q, s, e = (lambda out: (out[0]["x"], out[1]["x"], out[2]["x"]))(
+            compress_with_feedback({"x": g}, {"x": e}))
+        total_sent = total_sent + dequantize(q, s)
+        total_true = total_true + g
+    np.testing.assert_allclose(np.asarray(total_sent + e),
+                               np.asarray(total_true), rtol=1e-5,
+                               atol=1e-4)
+
+
+def test_compressed_psum_shardmap():
+    """int8 gradient all-reduce under shard_map on a 1-device mesh."""
+    from jax.experimental.shard_map import shard_map
+    from repro.distributed.compress import compressed_psum
+    mesh = jax.make_mesh((1,), ("data",))
+    g = {"w": jnp.arange(8, dtype=jnp.float32)}
+    e = ef_init(g)
+
+    def f(g, e):
+        return compressed_psum(g, e, "data")
+
+    out, new_e = shard_map(
+        f, mesh=mesh,
+        in_specs=(PartitionSpec(), PartitionSpec()),
+        out_specs=(PartitionSpec(), PartitionSpec()))(g, e)
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.arange(8), atol=0.05)

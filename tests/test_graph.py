@@ -1,0 +1,71 @@
+"""Graph-index construction invariants (Vamana/NSG/HNSW flavours)."""
+import numpy as np
+import pytest
+
+from repro.core import distances as D
+from repro.core import graph as G
+from repro.core.params import GraphParams
+from repro.data.vectors import clustered_vectors
+
+
+@pytest.fixture(scope="module")
+def vecs():
+    return clustered_vectors(600, 16, num_clusters=8, seed=7)
+
+
+@pytest.mark.parametrize("algo", ["vamana", "nsg", "hnsw"])
+def test_build_invariants(vecs, algo):
+    p = GraphParams(max_degree=12, build_beam=24, algo=algo)
+    g = G.build_graph(vecs, p)
+    n = g.num_vertices
+    assert n == vecs.shape[0]
+    assert (g.deg >= 0).all() and (g.deg <= g.max_degree).all()
+    valid = g.adj[g.adj >= 0]
+    assert valid.max() < n
+    # no self loops
+    rows = np.repeat(np.arange(n), g.deg)
+    assert not (g.adj[g.adj >= 0] == rows).any()
+    assert g.deg.mean() >= 2
+
+
+def test_greedy_search_finds_near_neighbor(vecs):
+    p = GraphParams(max_degree=16, build_beam=32, algo="vamana")
+    g = G.build_graph(vecs, p)
+    q = vecs[:8] + 0.01
+    ids, dists, _ = G.greedy_search_batch(
+        vecs, g.adj, g.deg, g.entry, q, beam=24)
+    truth = D.brute_force_knn(vecs, q, 1)
+    hits = sum(int(truth[i, 0]) in set(ids[i].tolist()) for i in range(8))
+    assert hits >= 7
+
+
+def test_robust_prune_degree_bound(vecs):
+    cand = np.arange(1, 100, dtype=np.int32)
+    cd = D.point_to_points(vecs[0], vecs[cand]).astype(np.float32)
+    sel = G.robust_prune(0, cand, cd, vecs, max_degree=8, alpha=1.2)
+    assert sel.shape[0] <= 8
+    assert 0 not in sel.tolist()
+    assert len(set(sel.tolist())) == sel.shape[0]
+
+
+def test_nsg_reachability(vecs):
+    p = GraphParams(max_degree=10, build_beam=20, algo="nsg")
+    g = G.build_graph(vecs, p)
+    seen = np.zeros(g.num_vertices, bool)
+    stack = [g.entry]
+    seen[g.entry] = True
+    while stack:
+        u = stack.pop()
+        for v in g.adj[u, : g.deg[u]]:
+            if not seen[v]:
+                seen[v] = True
+                stack.append(int(v))
+    assert seen.all()
+
+
+def test_hnsw_layers(vecs):
+    p = GraphParams(max_degree=12, build_beam=24, algo="hnsw")
+    h = G.build_hnsw(vecs, p)
+    assert len(h.layers) >= 1
+    sizes = [ids.size for ids in h.level_ids]
+    assert sizes == sorted(sizes, reverse=True)

@@ -1,0 +1,88 @@
+"""Block-layout invariants + shuffling properties (§4.1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import layout as L
+from repro.core.graph import Graph
+from repro.core.params import GraphParams
+
+
+def random_graph(n: int, deg: int, seed: int = 0) -> Graph:
+    rng = np.random.default_rng(seed)
+    adj = np.full((n, deg), -1, np.int32)
+    degs = rng.integers(1, deg + 1, size=n).astype(np.int32)
+    for u in range(n):
+        nbrs = rng.choice(n - 1, size=degs[u], replace=False)
+        nbrs[nbrs >= u] += 1                  # no self loops
+        adj[u, : degs[u]] = nbrs
+    return Graph(adj=adj, deg=degs, entry=0)
+
+
+@settings(deadline=None, max_examples=20)
+@given(n=st.integers(10, 200), eps=st.integers(2, 9),
+       deg=st.integers(2, 8), seed=st.integers(0, 10_000))
+def test_layout_bijection_property(n, eps, deg, seed):
+    """Every shuffle scheme yields a bijection V -> (block, slot)."""
+    g = random_graph(n, deg, seed)
+    for scheme in ("none", "bnp", "bnf"):
+        lay = L.make_layout(g, eps, scheme, bnf_iters=2)
+        lay.validate()
+        orr = L.overlap_ratio(g, lay)
+        assert 0.0 <= orr <= 1.0
+
+
+@settings(deadline=None, max_examples=10)
+@given(n=st.integers(20, 120), eps=st.integers(2, 6),
+       seed=st.integers(0, 1000))
+def test_bnf_improves_over_sequential(n, eps, seed):
+    g = random_graph(n, 6, seed)
+    base = L.overlap_ratio(g, L.layout_sequential(g, eps))
+    bnf = L.overlap_ratio(g, L.layout_bnf(g, eps, iters=4)[0])
+    assert bnf >= base - 1e-9
+
+
+def test_bns_monotone_lemma42():
+    """Lemma 4.2: OR(G) non-decreasing over BNS iterations."""
+    g = random_graph(60, 5, seed=3)
+    _, history = L.layout_bns(g, eps=4, iters=3, tau=-1.0)
+    for a, b in zip(history, history[1:]):
+        assert b >= a - 1e-9
+
+
+def test_bnp_neighbors_padded():
+    """BNP puts the first vertex's neighbors in its block (Example 4)."""
+    g = random_graph(50, 3, seed=1)
+    lay = L.layout_bnp(g, eps=4)
+    b0 = set(lay.blocks[lay.block_of[0]].tolist())
+    nbrs = set(g.adj[0, : g.deg[0]].tolist())
+    assert 0 in b0
+    assert len(b0 & nbrs) >= min(len(nbrs), 3)
+
+
+def test_shuffling_beats_baseline_on_real_graph(small_segment):
+    """Paper Fig. 9: BNF locality >> ID-contiguous baseline on a real
+    vector graph; the built segment's stored OR must match recompute."""
+    seg = small_segment
+    g = seg.graph
+    eps = seg.view.layout.verts_per_block
+    seq_or = L.overlap_ratio(g, L.layout_sequential(g, eps))
+    assert seg.overlap_ratio > seq_or + 0.05
+    assert seg.overlap_ratio == pytest.approx(
+        L.overlap_ratio(g, seg.view.layout), abs=1e-5)
+
+
+def test_kmeans_packer_worse_than_bnf(small_segment, small_data):
+    """§7: naive k-means packing loses to graph-aware shuffling."""
+    x, _ = small_data
+    seg = small_segment
+    eps = seg.view.layout.verts_per_block
+    km = L.overlap_ratio(seg.graph, L.layout_kmeans(x, seg.graph, eps))
+    assert seg.overlap_ratio > km
+
+
+def test_gp3_gain_order_variant(small_segment):
+    g = small_segment.graph
+    eps = small_segment.view.layout.verts_per_block
+    lay = L.make_layout(g, eps, "gp3", bnf_iters=2)
+    lay.validate()

@@ -1,0 +1,195 @@
+"""Per-arch smoke tests (assignment requirement): reduced config, one
+forward + one train step on CPU, asserting output shapes + no NaNs; plus
+decode-path consistency for every family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, SMOKE_CONFIGS
+from repro.models import lm
+
+
+def _batch(cfg, key, b=2, s=32):
+    tokens = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, 1)}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            key, (b, cfg.patch_tokens, cfg.d_model), jnp.float32)
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            key, (b, cfg.num_mem_tokens, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_shapes_no_nan(arch):
+    cfg = SMOKE_CONFIGS[arch]
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(cfg, key)
+    batch = _batch(cfg, key)
+    logits, _, aux = lm.forward(
+        cfg, params, batch["tokens"],
+        patch_embeds=batch.get("patch_embeds"),
+        frames=batch.get("frames"))
+    assert logits.shape == (2, batch["tokens"].shape[1],
+                            cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    """One optimizer step: loss finite, params change, no NaNs."""
+    from repro.launch.train import default_optimizer, make_train_step
+    from repro.optim import adamw_init
+    cfg = SMOKE_CONFIGS[arch]
+    key = jax.random.PRNGKey(1)
+    params = lm.init_params(cfg, key)
+    opt_state = adamw_init(params)
+    step = make_train_step(cfg, default_optimizer())
+    batch = _batch(cfg, key)
+    new_params, new_opt, metrics = jax.jit(step)(params, opt_state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    leaves0 = jax.tree.leaves(params)
+    leaves1 = jax.tree.leaves(new_params)
+    changed = any(not np.allclose(np.asarray(a), np.asarray(b))
+                  for a, b in zip(leaves0, leaves1))
+    assert changed
+    for leaf in leaves1:
+        assert bool(jnp.isfinite(leaf.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_full_forward(arch):
+    """prefill + token-by-token decode == teacher-forced forward."""
+    cfg = SMOKE_CONFIGS[arch]
+    key = jax.random.PRNGKey(2)
+    params = lm.init_params(cfg, key)
+    b, s, mx = 2, 16, 24
+    batch = _batch(cfg, key, b, s)
+    tokens = batch["tokens"]
+    kw = {k: v for k, v in batch.items()
+          if k in ("patch_embeds", "frames")}
+    full, _, _ = lm.forward(cfg, params, tokens, **kw)
+    pre = s - 4
+    lp, cache = lm.prefill(cfg, params, tokens[:, :pre], mx,
+                           cache_dtype=jnp.float32, **kw)
+    outs = [lp]
+    for t in range(pre, s):
+        lg, cache = lm.decode_step(cfg, params, cache, tokens[:, t:t + 1])
+        outs.append(lg)
+    inc = jnp.concatenate(outs, axis=1)
+    diff = jnp.max(jnp.abs(full.astype(jnp.float32)
+                           - inc.astype(jnp.float32)))
+    scale = jnp.max(jnp.abs(full.astype(jnp.float32))) + 1e-6
+    assert float(diff) <= 0.05 * float(scale) + 0.05
+
+
+def test_grad_accum_equivalence():
+    """accum=2 must equal accum=1 up to numerical noise."""
+    import dataclasses
+    from repro.launch.train import default_optimizer, make_train_step
+    from repro.optim import adamw_init
+    cfg = SMOKE_CONFIGS["stablelm-3b"]
+    key = jax.random.PRNGKey(3)
+    params = lm.init_params(cfg, key)
+    batch = _batch(cfg, key, b=4, s=16)
+    opt = default_optimizer()
+    p1, _, m1 = make_train_step(cfg, opt)(params, adamw_init(params),
+                                          batch)
+    cfg2 = dataclasses.replace(cfg, grad_accum=2)
+    p2, _, m2 = make_train_step(cfg2, opt)(params, adamw_init(params),
+                                           batch)
+    assert float(m1["grad_norm"]) == pytest.approx(
+        float(m2["grad_norm"]), rel=2e-2)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=5e-2, atol=5e-4)
+
+
+def test_blockwise_attention_matches_plain():
+    from repro.models import layers as Lyr
+    rng = np.random.default_rng(0)
+    b, sq, h, hkv, hd = 2, 256, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((b, sq, hkv, h // hkv, hd)),
+                    jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, sq, hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, sq, hkv, hd)), jnp.float32)
+    pos = jnp.arange(sq)
+    for window in (0, 32):
+        w = jnp.asarray(window, jnp.int32)
+        plain = Lyr._plain_attention(q, k, v, pos, pos, None, w, True)
+        block = Lyr._blockwise_attention(q, k, v, pos, pos, None, w, True)
+        np.testing.assert_allclose(np.asarray(plain, np.float32),
+                                   np.asarray(block, np.float32),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_chunked_ce_matches_direct():
+    """_chunked_ce == naive CE over full logits."""
+    cfg = SMOKE_CONFIGS["minitron-8b"]
+    key = jax.random.PRNGKey(4)
+    params = lm.init_params(cfg, key)
+    tokens = jax.random.randint(key, (2, 64), 0, cfg.vocab_size)
+    labels = jnp.roll(tokens, -1, 1)
+    x, _, _ = lm._forward_hidden(cfg, params, tokens)
+    ce = lm._chunked_ce(cfg, params, x, labels)
+    logits, _, _ = lm.forward(cfg, params, tokens)
+    lg = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    naive = jnp.mean(logz - gold)
+    assert float(ce) == pytest.approx(float(naive), rel=1e-3)
+
+
+def test_num_params_analytic_close_to_actual():
+    for arch in ("stablelm-3b", "rwkv6-1.6b", "zamba2-1.2b"):
+        cfg = SMOKE_CONFIGS[arch]
+        params = lm.init_params(cfg, jax.random.PRNGKey(0))
+        actual = sum(np.prod(l.shape) for l in jax.tree.leaves(params))
+        analytic = cfg.num_params()
+        assert abs(actual - analytic) / actual < 0.35, arch
+
+
+def test_capacity_dispatch_matches_dense_at_full_capacity():
+    """§Perf it2: capacity gather dispatch == dense dispatch when the
+    per-expert capacity covers every token (no drops). Compared at the
+    block level: full-model comparison is chaotic because bf16 noise
+    flips later layers' discrete top-k routing decisions."""
+    import dataclasses
+    from repro.models import layers as Lyr
+    cfg = SMOKE_CONFIGS["qwen3-moe-235b-a22b"]
+    key = jax.random.PRNGKey(7)
+    params = lm.init_params(cfg, key)
+    moe_params = jax.tree.map(lambda a: a[0], params["layers"]["moe"])
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 64, cfg.d_model),
+                          jnp.float32)
+    cfg_cap = dataclasses.replace(
+        cfg, moe_dispatch="capacity",
+        moe_capacity_factor=float(cfg.num_experts)
+        / cfg.experts_per_token)
+    dense, aux1 = Lyr.moe_block(moe_params, x, cfg)
+    cap, aux2 = Lyr.moe_block(moe_params, x, cfg_cap)
+    np.testing.assert_allclose(np.asarray(dense, np.float32),
+                               np.asarray(cap, np.float32),
+                               rtol=2e-3, atol=2e-3)
+    assert float(aux1) == pytest.approx(float(aux2), rel=1e-4)
+
+
+def test_capacity_dispatch_trains_with_drops():
+    import dataclasses
+    cfg = dataclasses.replace(SMOKE_CONFIGS["moonshot-v1-16b-a3b"],
+                              moe_dispatch="capacity",
+                              moe_capacity_factor=1.25)
+    key = jax.random.PRNGKey(8)
+    params = lm.init_params(cfg, key)
+    tokens = jax.random.randint(key, (2, 64), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, 1)}
+    loss, _ = lm.loss_fn(cfg, params, batch)
+    g = jax.grad(lambda p: lm.loss_fn(cfg, p, batch)[0])(params)
+    assert bool(jnp.isfinite(loss))
+    for leaf in jax.tree.leaves(g):
+        assert bool(jnp.isfinite(leaf.astype(jnp.float32)).all())

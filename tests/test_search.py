@@ -1,0 +1,127 @@
+"""Host search-path tests: ANNS recall, RS, baseline comparison, I/O
+accounting (§5, §6.2, §6.3)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import baseline as B
+from repro.core import distances as D
+from repro.core.search import (anns, average_precision, range_search,
+                               recall_at_k)
+
+
+@pytest.fixture(scope="module")
+def truth(small_data):
+    x, q = small_data
+    return D.brute_force_knn(x, q, 10)
+
+
+def test_anns_recall_floor(small_segment, small_data, truth):
+    x, q = small_data
+    ids, _, stats = anns(small_segment.view, q, 10,
+                         small_segment.params.search)
+    assert recall_at_k(ids, truth) >= 0.85
+    assert all(s.block_reads > 0 for s in stats)
+
+
+def test_block_search_beats_vertex_baseline_io(small_segment, small_data,
+                                               truth):
+    """Tab. 2: Starling's vertex utilization is far above the baseline's
+    1/eps, and recall is comparable at the same candidate budget."""
+    x, q = small_data
+    seg = small_segment
+    ids_s, _, st_s = anns(seg.view, q, 10, seg.params.search)
+    p_base = dataclasses.replace(seg.params.search, use_block_search=False,
+                                 use_nav_graph=False)
+    ids_b, _, st_b = B.vertex_anns(seg.view, q, 10, p_base)
+    xi_s = np.mean([s.vertex_utilization for s in st_s])
+    xi_b = np.mean([s.vertex_utilization for s in st_b])
+    eps = seg.view.store.verts_per_block
+    assert xi_b == pytest.approx(1.0 / eps, abs=0.02)
+    assert xi_s > 2.0 * xi_b
+    assert recall_at_k(ids_s, truth) >= recall_at_k(ids_b, truth) - 0.05
+
+
+def test_nav_graph_shortens_path(small_segment, small_data):
+    """Fig. 10: query-aware entry points cut hops/IOs."""
+    x, q = small_data
+    seg = small_segment
+    p_on = seg.params.search
+    p_off = dataclasses.replace(p_on, use_nav_graph=False)
+    _, _, st_on = anns(seg.view, q, 10, p_on)
+    _, _, st_off = anns(seg.view, q, 10, p_off)
+    hops_on = np.mean([s.hops for s in st_on])
+    hops_off = np.mean([s.hops for s in st_off])
+    assert hops_on <= hops_off * 1.05
+
+
+def test_range_search_ap(small_segment, small_data):
+    x, q = small_data
+    d_gt = D.pairwise(q, x)
+    radius = float(np.quantile(d_gt, 0.002))
+    gt = D.brute_force_range(x, q, radius)
+    res, stats = range_search(seg := small_segment.view, q, radius,
+                              small_segment.params.search)
+    # all returned results must truly be in range (AP definition Eq. 3)
+    for r, qi in zip(res, range(q.shape[0])):
+        if r.size:
+            dd = D.point_to_points(q[qi], x[r])
+            assert (dd <= radius + 1e-4).all()
+    ap = average_precision(res, gt)
+    assert ap >= 0.7
+
+
+def test_rs_cheaper_than_repeated_anns(small_segment, small_data):
+    """§5.3: native RS avoids the baseline's repeated re-traversal."""
+    x, q = small_data
+    d_gt = D.pairwise(q, x)
+    radius = float(np.quantile(d_gt, 0.004))
+    seg = small_segment
+    _, st_rs = range_search(seg.view, q, radius, seg.params.search)
+    p_base = dataclasses.replace(seg.params.search,
+                                 use_block_search=False,
+                                 use_nav_graph=False)
+    _, st_rep = B.vertex_range_search(seg.view, q, radius, p_base)
+    io_rs = np.mean([s.block_reads for s in st_rs])
+    io_rep = np.mean([s.block_reads for s in st_rep])
+    assert io_rs < io_rep
+
+
+def test_pq_routing_reduces_io(small_segment, small_data):
+    """Fig. 11(c): exact-distance routing costs far more block reads."""
+    x, q = small_data
+    seg = small_segment
+    p_pq = seg.params.search
+    p_exact = dataclasses.replace(p_pq, use_pq_routing=False)
+    _, _, st_pq = anns(seg.view, q[:6], 10, p_pq)
+    _, _, st_ex = anns(seg.view, q[:6], 10, p_exact)
+    io_pq = np.mean([s.block_reads for s in st_pq])
+    io_ex = np.mean([s.block_reads for s in st_ex])
+    assert io_pq < io_ex
+
+
+def test_hot_cache_reduces_baseline_io(small_segment, small_data):
+    x, q = small_data
+    seg = small_segment
+    p = dataclasses.replace(seg.params.search, use_block_search=False,
+                            use_nav_graph=False)
+    hot = B.build_hot_cache(seg.view, ratio=0.2)
+    _, _, st_cold = B.vertex_anns(seg.view, q, 10, p)
+    _, _, st_hot = B.vertex_anns(seg.view, q, 10, p, hot=hot)
+    assert (np.mean([s.block_reads for s in st_hot])
+            <= np.mean([s.block_reads for s in st_cold]))
+
+
+def test_iostats_latency_model(small_segment, small_data):
+    from repro.core.iostats import NVME_SEGMENT, TPU_HBM_SEGMENT
+    x, q = small_data
+    _, _, stats = anns(small_segment.view, q[:4], 10,
+                       small_segment.params.search)
+    s = stats[0]
+    for cm in (NVME_SEGMENT, TPU_HBM_SEGMENT):
+        serial = cm.latency_us(s, pipeline=False)
+        piped = cm.latency_us(s, pipeline=True)
+        assert piped <= serial
+        br = cm.breakdown(s)
+        assert br["total_us"] == pytest.approx(serial, rel=1e-6)

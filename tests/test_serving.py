@@ -1,0 +1,74 @@
+"""Serving plane: multi-segment coordinator, merge, batcher (Fig. 1(b),
+§6.7 scalability structure)."""
+import numpy as np
+import pytest
+
+from repro.core import device_search as DS
+from repro.core import distances as D
+from repro.core.segment import build_segment
+from repro.core.search import recall_at_k
+from repro.data.vectors import clustered_vectors, query_set
+from repro.serving import QueryCoordinator, RequestBatcher, SegmentServer
+from repro.serving.coordinator import merge_topk
+from tests.conftest import SMALL_SEGMENT
+
+
+@pytest.fixture(scope="module")
+def two_segments():
+    xs = [clustered_vectors(1200, 32, num_clusters=12, seed=s)
+          for s in (0, 1)]
+    servers = []
+    off = 0
+    for x in xs:
+        seg = build_segment(x, SMALL_SEGMENT)
+        servers.append(SegmentServer(
+            segment=DS.from_segment(seg), offset=off,
+            num_vectors=x.shape[0], candidates=48))
+        off += x.shape[0]
+    return xs, servers
+
+
+def test_merge_topk_correct():
+    ids = [np.asarray([[0, 1]]), np.asarray([[0, -1]])]
+    dd = [np.asarray([[0.5, 2.0]]), np.asarray([[1.0, np.inf]])]
+    gi, gd = merge_topk(ids, dd, offsets=[0, 100], k=3)
+    np.testing.assert_array_equal(gi[0], [0, 100, 1])
+    np.testing.assert_allclose(gd[0], [0.5, 1.0, 2.0])
+
+
+def test_coordinator_recall_over_union(two_segments):
+    xs, servers = two_segments
+    union = np.concatenate(xs, axis=0)
+    q = query_set(union, 16, seed=3)
+    coord = QueryCoordinator(servers)
+    gi, gd, stats = coord.search(q, k=10)
+    truth = D.brute_force_knn(union, q, 10)
+    assert recall_at_k(gi, truth) >= 0.75
+    assert stats["segments_searched"] == 2
+    assert stats["total_block_reads"] > 0
+
+
+def test_coordinator_pruning_hook(two_segments):
+    xs, servers = two_segments
+    q = query_set(xs[0], 4, seed=4)
+    coord = QueryCoordinator(servers, prune_fn=lambda queries: [0])
+    _, _, stats = coord.search(q, k=5)
+    assert stats["segments_searched"] == 1
+
+
+def test_batcher_buckets():
+    b = RequestBatcher(dim=8, buckets=(4, 16))
+    for _ in range(6):
+        b.submit(np.zeros(8))
+    q, ids, n = b.next_batch()
+    assert n == 6 and q.shape == (16, 8) and len(ids) == 6
+    q, ids, n = b.next_batch() if b.queue else (None, [], 0)
+    assert n == 0
+
+
+def test_batcher_single_request_pads_to_smallest_bucket():
+    b = RequestBatcher(dim=4, buckets=(8, 32))
+    b.submit(np.ones(4))
+    q, ids, n = b.next_batch()
+    assert q.shape == (8, 4) and n == 1
+    assert np.allclose(q[0], 1.0) and np.allclose(q[1:], 0.0)
