@@ -1,0 +1,18 @@
+# Tier-1 verification and common dev entry points.
+
+PY ?= python
+
+.PHONY: test bench bench-io dev-deps
+
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+bench:
+	PYTHONPATH=src $(PY) -m benchmarks.run
+
+bench-io:
+	PYTHONPATH=src $(PY) -m benchmarks.run --only io_cache_hit_rate_sweep
+	PYTHONPATH=src $(PY) -m benchmarks.run --only io_prefetch_width_sweep
+
+dev-deps:
+	$(PY) -m pip install -r requirements-dev.txt

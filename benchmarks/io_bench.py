@@ -1,0 +1,91 @@
+"""repro.io benchmarks: cache hit rate and modeled latency vs memory
+budget (GoVector-style curve), plus a prefetch-width sweep.
+
+Caching and prefetching never change *which* blocks the search demands
+— results are bit-identical to the uncached path (asserted here) — they
+change what each demand read costs. So these benches report the
+hardware-independent counters (hit rate, round trips, prefetched
+blocks) plus modeled NVMe/TPU latency through the calibrated cost
+models.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks import common
+from repro.configs.starling_segment import SEGMENT_BENCH_CACHED
+from repro.core.iostats import IOStats, NVME_SEGMENT, TPU_HBM_SEGMENT
+from repro.core.search import anns, recall_at_k
+from repro.io import cached_view
+
+# every sweep point is a variation of the checked-in cached config, so
+# the benches exercise exactly the production wiring
+BASE_CACHE = SEGMENT_BENCH_CACHED.cache
+
+
+def _run(view, seg, q, k=10):
+    ids, dd, stats = anns(view, q, k, seg.params.search)
+    tot = IOStats()
+    for s in stats:
+        tot.merge(s)
+    return ids, dd, stats, tot
+
+
+def io_cache_hit_rate_sweep():
+    """Hit rate / modeled latency vs cache budget (fraction of the block
+    file), LRU vs LFU — the GoVector Fig.-style curve."""
+    seg = common.bench_segment()
+    q = common.queries()
+    truth = common.ground_truth()
+    ids_u, _, st_u, tot_u = _run(seg.view, seg, q)
+    rec_u = recall_at_k(ids_u, truth)
+    lat_u = float(np.mean([NVME_SEGMENT.latency_us(s, pipeline=True)
+                           for s in st_u]))
+    common.record("io_cache_sweep", budget_frac=0.0, policy="none",
+                  hit_rate=0.0, recall_at_10=rec_u,
+                  latency_us_nvme=lat_u, latency_reduction=0.0,
+                  mean_io=common.mean_io(st_u))
+    for frac in (0.02, 0.05, 0.10, 0.20, 0.40):
+        for policy in ("lru", "lfu"):
+            cp = dataclasses.replace(BASE_CACHE, budget_frac=frac,
+                                     policy=policy)
+            view = cached_view(seg.view, seg.graph, cp)
+            ids, _, st, tot = _run(view, seg, q)
+            assert np.array_equal(ids, ids_u), \
+                "cache changed search results"
+            lat = float(np.mean([NVME_SEGMENT.latency_us(s, pipeline=True)
+                                 for s in st]))
+            common.record(
+                "io_cache_sweep", budget_frac=frac, policy=policy,
+                hit_rate=tot.cache_hit_rate,
+                recall_at_10=recall_at_k(ids, truth),
+                latency_us_nvme=lat,
+                latency_reduction=1.0 - lat / lat_u,
+                mean_io=common.mean_io(st),
+                round_trips_per_query=tot.io_round_trips / q.shape[0],
+                prefetched_per_query=tot.prefetched_blocks / q.shape[0],
+                cache_mem_bytes=view.store.memory_bytes())
+
+
+def io_prefetch_width_sweep():
+    """Round trips / latency vs speculative fetch width at a fixed 10%
+    cache budget (page-aligned batching, arXiv:2509.25487)."""
+    seg = common.bench_segment()
+    q = common.queries()
+    for width in (0, 1, 2, 4, 8):
+        cp = dataclasses.replace(BASE_CACHE, prefetch_width=width)
+        view = cached_view(seg.view, seg.graph, cp)
+        _, _, st, tot = _run(view, seg, q)
+        lat_nvme = float(np.mean([NVME_SEGMENT.latency_us(s, pipeline=True)
+                                  for s in st]))
+        lat_tpu = float(np.mean([TPU_HBM_SEGMENT.latency_us(s,
+                                                            pipeline=True)
+                                 for s in st]))
+        common.record(
+            "io_prefetch_sweep", prefetch_width=width,
+            hit_rate=tot.cache_hit_rate,
+            round_trips_per_query=tot.io_round_trips / q.shape[0],
+            prefetched_per_query=tot.prefetched_blocks / q.shape[0],
+            latency_us_nvme=lat_nvme, latency_us_tpu=lat_tpu)

@@ -14,7 +14,7 @@ import sys
 import time
 import traceback
 
-from benchmarks import device_bench, paper_tables
+from benchmarks import device_bench, io_bench, paper_tables
 
 BENCHES = [
     paper_tables.fig9_block_shuffling,
@@ -32,6 +32,8 @@ BENCHES = [
     paper_tables.appC_bnf_params,
     paper_tables.appF_bnf_vs_bns,
     paper_tables.appG_partitioners,
+    io_bench.io_cache_hit_rate_sweep,
+    io_bench.io_prefetch_width_sweep,
     device_bench.device_vs_host,
     device_bench.starling_fetch_width,
     device_bench.batched_beam_throughput,

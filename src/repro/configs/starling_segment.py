@@ -8,8 +8,11 @@ parameters (Λ, η, ε, ρ) for the Example-2 style accounting tests.
 """
 from __future__ import annotations
 
-from repro.core.params import (GraphParams, LayoutParams, NavGraphParams,
-                               PQParams, SearchParams, SegmentParams)
+import dataclasses
+
+from repro.core.params import (CacheParams, GraphParams, LayoutParams,
+                               NavGraphParams, PQParams, SearchParams,
+                               SegmentParams)
 
 # container-scale segment used by benchmarks: same knob values as the
 # paper's BIGANN column wherever scale-independent (σ=0.3, φ=0.5, β=8,
@@ -25,6 +28,18 @@ SEGMENT_BENCH = SegmentParams(
     search=SearchParams(candidate_size=48, pruning_ratio=0.3,
                         rs_ratio=0.5),
     metric="l2",
+)
+
+# the same segment with the repro.io block cache on: 10% of the block
+# file as cache budget (a quarter pinned to the entry-neighborhood hot
+# set), LRU dynamics, 4-wide batched prefetch. Segments built from this
+# config get a cache-fronted view; benchmarks/io_bench.py sweeps around
+# these values, and a HostSegmentServer over such a segment shares the
+# cache across queries.
+SEGMENT_BENCH_CACHED = dataclasses.replace(
+    SEGMENT_BENCH,
+    cache=CacheParams(budget_frac=0.10, policy="lru", pin_fraction=0.25,
+                      prefetch_width=4),
 )
 
 # the paper's full-size per-dataset index parameters (Tab. 16): used by

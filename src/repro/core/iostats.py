@@ -18,8 +18,11 @@ import dataclasses
 
 @dataclasses.dataclass
 class IOStats:
-    block_reads: int = 0        # number of block fetches (the paper's I/Os)
+    block_reads: int = 0        # demand block accesses (the paper's I/Os)
     io_round_trips: int = 0     # batched fetches issued (≤ block_reads)
+    cache_hits: int = 0         # demand reads served by the BlockCache
+    cache_misses: int = 0       # demand reads that went to "disk"
+    prefetched_blocks: int = 0  # speculative fetches coalesced into trips
     vertices_fetched: int = 0   # ε per block read
     vertices_used: int = 0      # distance-evaluated full-precision vertices
     hops: int = 0               # total expansions (== block reads)
@@ -29,6 +32,15 @@ class IOStats:
     pq_comps: int = 0           # ADC distance computations
 
     def merge(self, other: "IOStats") -> None:
+        new_trips = self.io_round_trips + other.io_round_trips
+        new_reads = self.block_reads + other.block_reads
+        if new_trips > new_reads:
+            # validate before mutating so a caught error leaves the
+            # accumulator untouched
+            raise ValueError(
+                f"io_round_trips ({new_trips}) would exceed block_reads "
+                f"({new_reads}) after merge — a batched fetch path issued "
+                "more round trips than demand reads")
         for f in dataclasses.fields(self):
             if f.name == "hops_to_best":
                 self.hops_to_best = max(self.hops_to_best,
@@ -36,6 +48,14 @@ class IOStats:
                 continue
             setattr(self, f.name,
                     getattr(self, f.name) + getattr(other, f.name))
+
+    @property
+    def cache_hit_rate(self) -> float:
+        """Fraction of demand reads served by the block cache."""
+        tracked = self.cache_hits + self.cache_misses
+        if tracked == 0:
+            return 0.0
+        return self.cache_hits / tracked
 
     @property
     def vertex_utilization(self) -> float:
@@ -47,15 +67,42 @@ class IOStats:
 
 @dataclasses.dataclass(frozen=True)
 class CostModel:
-    """Latency model; times in microseconds."""
-    t_block_io: float           # one block fetch
+    """Latency model; times in microseconds.
+
+    Cache-aware I/O pricing (repro.io): demand reads served by the
+    ``BlockCache`` cost ``t_cache_hit`` (memory latency) instead of
+    ``t_block_io``; a batched round trip pays one full ``t_block_io``
+    plus ``t_batch_block`` per extra coalesced block (queue-depth
+    amortization on NVMe / contiguous DMA on TPU). Stats with no cache
+    counters price every ``block_reads`` at ``t_block_io`` — the seed's
+    behavior, so uncached figures are unchanged.
+    """
+    t_block_io: float           # one block fetch round trip
     t_dist: float               # one full-precision distance (D-dim)
     t_pq: float                 # one ADC distance
     t_hop_other: float = 0.2    # queue maintenance per hop
+    t_cache_hit: float = 0.0    # demand read served from memory
+    t_batch_block: float = 0.0  # extra block coalesced into a round trip
+    #                             (0.0 → priced as a full t_block_io)
     name: str = "model"
 
+    def _io_time(self, s: IOStats) -> float:
+        # Demand misses sit on the critical path: each pays a full round
+        # trip. Speculative fetches are issued while the current block is
+        # being ranked (§5.1 overlap) — they cost bandwidth, not latency:
+        # t_batch_block per coalesced block. Hits are memory copies.
+        # Reads with no cache accounting (uncached paths, and the
+        # uncached share of merged mixed stats) price as misses, so
+        # block_reads - cache_hits is the full-latency count either way.
+        full_reads = max(s.block_reads - s.cache_hits, 0)
+        t_batch = self.t_batch_block if self.t_batch_block else \
+            self.t_block_io
+        return (full_reads * self.t_block_io
+                + s.prefetched_blocks * t_batch
+                + s.cache_hits * self.t_cache_hit)
+
     def latency_us(self, s: IOStats, pipeline: bool = False) -> float:
-        t_io = s.block_reads * self.t_block_io
+        t_io = self._io_time(s)
         t_comp = s.dist_comps * self.t_dist + s.pq_comps * self.t_pq
         t_other = s.hops * self.t_hop_other
         if pipeline:
@@ -65,7 +112,7 @@ class CostModel:
         return t_io + t_comp + t_other
 
     def breakdown(self, s: IOStats, pipeline: bool = False) -> dict:
-        t_io = s.block_reads * self.t_block_io
+        t_io = self._io_time(s)
         t_comp = s.dist_comps * self.t_dist + s.pq_comps * self.t_pq
         t_other = s.hops * self.t_hop_other
         total = self.latency_us(s, pipeline)
@@ -75,11 +122,17 @@ class CostModel:
 
 
 # The paper's segment: NVMe 4KB random read ~90–100 µs per round-trip,
-# ~0.05 µs per 128-d L2 on one core, ADC ~0.01 µs.
+# ~0.05 µs per 128-d L2 on one core, ADC ~0.01 µs. A cache hit is a DRAM
+# copy of one 4 KB block (~0.5 µs); an extra block coalesced into an
+# in-flight round trip rides the same queue slot (~18 µs).
 NVME_SEGMENT = CostModel(t_block_io=95.0, t_dist=0.055, t_pq=0.012,
+                         t_cache_hit=0.5, t_batch_block=18.0,
                          name="nvme")
 
 # TPU regime (DESIGN.md §2): 4 KB HBM→VMEM DMA ≈ 1.2 µs latency-bound,
-# VPU block ranking ≈ 0.02 µs/vector amortized, ADC ≈ 0.002 µs via LUT tiles.
+# VPU block ranking ≈ 0.02 µs/vector amortized, ADC ≈ 0.002 µs via LUT
+# tiles. A hit is a VMEM-resident tile; coalesced blocks stream at HBM
+# bandwidth (~0.35 µs per extra 4 KB).
 TPU_HBM_SEGMENT = CostModel(t_block_io=1.2, t_dist=0.02, t_pq=0.002,
+                            t_cache_hit=0.05, t_batch_block=0.35,
                             name="tpu-hbm")

@@ -96,6 +96,47 @@ class SearchParams:
 
 
 @dataclasses.dataclass(frozen=True)
+class CacheParams:
+    """Block-cache + prefetch knobs (the repro.io subsystem).
+
+    The cache budget is memory reserved for η-KB block residency and is
+    charged as C_cache against the Eq. 10 segment memory budget. Either
+    give an absolute ``budget_bytes`` or a ``budget_frac`` of the block
+    file (``BlockStore.disk_bytes()``); both zero disables caching and
+    the search path behaves exactly as the seed.
+    """
+    budget_bytes: int = 0         # absolute cache budget
+    budget_frac: float = 0.0      # fraction of disk_bytes (if bytes == 0)
+    policy: str = "lru"           # lru | lfu
+    pin_fraction: float = 0.25    # share of capacity pinned to the
+    #                               build-time entry-neighborhood hot set
+    prefetch_width: int = 4       # speculative blocks coalesced per
+    #                               batched round trip (0 → no prefetch)
+
+    def __post_init__(self):
+        # ValueError (not assert) so invalid configs fail under -O too,
+        # matching BlockCache's own validation
+        if self.policy not in ("lru", "lfu"):
+            raise ValueError(
+                f"unknown eviction policy {self.policy!r} (lru | lfu)")
+        if not (0.0 <= self.pin_fraction <= 1.0
+                and 0.0 <= self.budget_frac <= 1.0
+                and self.budget_bytes >= 0 and self.prefetch_width >= 0):
+            raise ValueError(
+                "CacheParams out of range: pin_fraction/budget_frac in "
+                "[0, 1], budget_bytes/prefetch_width >= 0")
+
+    @property
+    def enabled(self) -> bool:
+        return self.budget_bytes > 0 or self.budget_frac > 0.0
+
+    def resolve_budget(self, disk_bytes: int) -> int:
+        if self.budget_bytes > 0:
+            return self.budget_bytes
+        return int(self.budget_frac * disk_bytes)
+
+
+@dataclasses.dataclass(frozen=True)
 class SegmentBudget:
     """Per-segment space budget (§2.2: ≤2 GB DRAM, ≤10 GB disk)."""
     memory_bytes: int = 2 << 30
@@ -109,6 +150,7 @@ class SegmentParams:
     pq: PQParams = dataclasses.field(default_factory=PQParams)
     nav: NavGraphParams = dataclasses.field(default_factory=NavGraphParams)
     search: SearchParams = dataclasses.field(default_factory=SearchParams)
+    cache: CacheParams = dataclasses.field(default_factory=CacheParams)
     budget: SegmentBudget = dataclasses.field(default_factory=SegmentBudget)
     metric: str = "l2"            # l2 | ip
 

@@ -25,6 +25,8 @@ from repro.core.iostats import IOStats
 from repro.core.layout import BlockLayout
 from repro.core.navgraph import NavGraph
 from repro.core.params import SearchParams
+from repro.io.cached_store import CachedBlockStore
+from repro.io.prefetch import PrefetchEngine
 from repro.pq import PQCodebook, adc_lut, adc_distance
 
 
@@ -131,6 +133,29 @@ def block_search_query(seg: SegmentView, q: np.ndarray, k: int,
     use_pq = p.use_pq_routing and seg.pq_codes is not None
     lut = adc_lut(q, seg.pq_cb) if use_pq else None
 
+    C = cand if cand is not None else _CandidateSet(p.candidate_size)
+    R: Dict[int, float] = result if result is not None else {}
+    P: List[Tuple[float, int]] = kicked if kicked is not None else []
+    expanded: set = set()
+
+    # repro.io: when the view's store is cache-fronted, all block reads go
+    # through it (hit/miss/round-trip accounting) and demand misses carry
+    # speculative fetches of the top unvisited candidates' blocks.
+    cached = store if isinstance(store, CachedBlockStore) else None
+    prefetcher = (PrefetchEngine(cached, layout.block_of)
+                  if cached is not None and cached.prefetch_width > 0
+                  else None)
+
+    def fetch(bid: int, speculate: bool = True):
+        """One demand block read with unified I/O accounting."""
+        if cached is None:
+            out = store.read_block(bid)
+            stats.block_reads += 1
+            return out
+        if prefetcher is not None and speculate:
+            return prefetcher.read(bid, C, stats)
+        return cached.read_demand(bid, stats)
+
     def route_dist(ids: np.ndarray) -> np.ndarray:
         """Candidate-queue key: ADC if PQ routing, else exact via block
         reads (the Fig. 11(c) ablation — prohibitively many I/Os)."""
@@ -140,19 +165,13 @@ def block_search_query(seg: SegmentView, q: np.ndarray, k: int,
         out = np.empty(len(ids), np.float32)
         for j, v in enumerate(ids):
             bid = int(layout.block_of[v])
-            vids, vecs, _, _ = store.read_block(bid)
-            stats.block_reads += 1
+            vids, vecs, _, _ = fetch(bid, speculate=False)
             stats.vertices_fetched += int((vids >= 0).sum())
             slot = int(layout.slot_of[v])
             out[j] = D.point_to_points(q, vecs[slot][None, :], seg.metric)[0]
             stats.dist_comps += 1
             stats.vertices_used += 1
         return out
-
-    C = cand if cand is not None else _CandidateSet(p.candidate_size)
-    R: Dict[int, float] = result if result is not None else {}
-    P: List[Tuple[float, int]] = kicked if kicked is not None else []
-    expanded: set = set()
 
     entry = _entry_points(seg, q, p)
     ed = route_dist(entry)
@@ -174,8 +193,7 @@ def block_search_query(seg: SegmentView, q: np.ndarray, k: int,
         stats.hops += 1
 
         bid = int(layout.block_of[u])
-        vids, vecs, degs, nbrs = store.read_block(bid)   # DR
-        stats.block_reads += 1
+        vids, vecs, degs, nbrs = fetch(bid)              # DR
         valid = vids >= 0
         stats.vertices_fetched += int(valid.sum())
 

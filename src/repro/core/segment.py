@@ -23,6 +23,7 @@ from repro.core import navgraph as NG
 from repro.core.blockstore import BlockStore, build_store
 from repro.core.params import SegmentParams
 from repro.core.search import SegmentView
+from repro.io.cached_store import CachedBlockStore, cached_view
 from repro.pq import PQCodebook, encode_pq, train_pq
 
 
@@ -39,13 +40,18 @@ class Segment:
         return self.graph.num_vertices
 
     def memory_bytes(self) -> int:
-        """Eq. 10: C_graph + C_mapping + C_PQ&others."""
+        """Eq. 10: C_graph + C_mapping + C_PQ&others + C_cache.
+
+        C_cache is the repro.io block-cache budget: reserved DRAM for
+        η-KB block residency, charged whether or not it is full."""
         c_graph = (self.view.nav.memory_bytes()
                    if self.view.nav is not None else 0)
         c_mapping = self.view.layout.mapping_bytes()
         c_pq = (self.view.pq_codes.nbytes + self.view.pq_cb.memory_bytes()
                 if self.view.pq_codes is not None else 0)
-        return c_graph + c_mapping + c_pq
+        c_cache = (self.view.store.memory_bytes()
+                   if isinstance(self.view.store, CachedBlockStore) else 0)
+        return c_graph + c_mapping + c_pq + c_cache
 
     def disk_bytes(self) -> int:
         return self.view.store.disk_bytes()
@@ -90,6 +96,8 @@ def build_segment(x: np.ndarray, params: SegmentParams,
     view = SegmentView(store=store, layout=lay, nav=nav,
                        pq_codes=codes, pq_cb=cb, metric=params.metric,
                        entry=g.entry)
+    if params.cache.enabled:
+        view = cached_view(view, g, params.cache)
     return Segment(view=view, graph=g, params=params, build_times=times,
                    overlap_ratio=L.overlap_ratio(g, lay))
 
@@ -136,5 +144,7 @@ def load_segment(path: str, params: SegmentParams) -> Segment:
     view = SegmentView(store=store, layout=lay, nav=nav,
                        pq_codes=z["pq_codes"], pq_cb=cb,
                        metric=str(z["metric"]), entry=int(z["entry"]))
+    if params.cache.enabled:
+        view = cached_view(view, g, params.cache)
     return Segment(view=view, graph=g, params=params, build_times={},
                    overlap_ratio=float(z["overlap"]))

@@ -1,0 +1,36 @@
+"""repro.io — block-cache + batched-prefetch I/O subsystem.
+
+Starling's segment cost model (Eq. 4) is I/O-bound: T_io = #I/Os ×
+t_block_io dominates on NVMe. This package attacks #effective-I/Os at
+*unchanged recall* — caching and batching never change which blocks the
+search reads, only what each read costs:
+
+  * ``BlockCache`` (``cache.py``) — a byte-budgeted resident set of
+    block ids with LRU/LFU eviction and static pinning of the
+    build-time hot set around the navigation-graph entry neighborhood.
+    Its capacity is *memory*, so it is charged as a fourth term of the
+    Eq. 10 segment memory budget (C_graph + C_mapping + C_PQ&others +
+    C_cache) — see ``SegmentParams.cache`` and ``Segment.memory_bytes``.
+  * ``CachedBlockStore`` (``cached_store.py``) — drop-in for
+    ``BlockStore.read_block`` that accounts ``cache_hits`` /
+    ``cache_misses`` / ``io_round_trips`` into ``IOStats``.
+  * ``PrefetchEngine`` (``prefetch.py``) — speculatively fetches the
+    blocks of the top unvisited candidates and coalesces them with the
+    demand miss into one batched round trip.
+
+The serving plane shares one ``CachedBlockStore`` per segment server
+across queries (``serving.coordinator.HostSegmentServer``), which is
+where the hit rate actually comes from: inter-query locality on the
+entry neighborhood and cluster-hot blocks.
+"""
+from repro.io.cache import (BlockCache, EvictionPolicy, LFUPolicy,
+                            LRUPolicy, hot_block_pin_set)
+from repro.io.cached_store import (CachedBlockStore, cached_view,
+                                   make_cached_store)
+from repro.io.prefetch import PrefetchEngine
+
+__all__ = [
+    "BlockCache", "EvictionPolicy", "LRUPolicy", "LFUPolicy",
+    "hot_block_pin_set", "CachedBlockStore", "cached_view",
+    "make_cached_store", "PrefetchEngine",
+]

@@ -1,0 +1,210 @@
+"""Memory-budgeted block cache with pluggable eviction (repro.io).
+
+The cache holds *block ids* — block payloads already live in the host
+arrays of ``BlockStore``, so residency here models which η-KB blocks a
+real segment server would keep in its DRAM pool. Capacity is expressed
+in bytes and charged against the segment's Eq. 10 memory budget
+(C_graph + C_mapping + C_PQ&others + C_cache); see
+``Segment.memory_bytes``.
+
+Eviction policies:
+  * ``lru`` — least-recently-used (default; matches the access locality
+    the BNF/BNS shuffles create).
+  * ``lfu`` — least-frequently-used with LRU tie-break (GoVector-style
+    frequency retention for skewed query streams).
+  * static pinning — ``pinned`` blocks are preloaded at build time and
+    never evicted; ``hot_block_pin_set`` measures traversal frequency
+    around the navigation-graph entry neighborhood, since every query's
+    first hops land there (Fig. 10: entry points come from the μ-sample).
+"""
+from __future__ import annotations
+
+from collections import Counter, OrderedDict
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+class EvictionPolicy:
+    """Tracks non-pinned residents and picks eviction victims."""
+
+    def on_insert(self, b: int) -> None:
+        raise NotImplementedError
+
+    def on_access(self, b: int) -> None:
+        raise NotImplementedError
+
+    def victim(self) -> int:
+        raise NotImplementedError
+
+    def remove(self, b: int) -> None:
+        raise NotImplementedError
+
+    def __len__(self) -> int:
+        raise NotImplementedError
+
+
+class LRUPolicy(EvictionPolicy):
+    def __init__(self):
+        self._order: "OrderedDict[int, None]" = OrderedDict()
+
+    def on_insert(self, b: int) -> None:
+        self._order[b] = None
+        self._order.move_to_end(b)
+
+    def on_access(self, b: int) -> None:
+        if b in self._order:
+            self._order.move_to_end(b)
+
+    def victim(self) -> int:
+        return next(iter(self._order))
+
+    def remove(self, b: int) -> None:
+        self._order.pop(b, None)
+
+    def __len__(self) -> int:
+        return len(self._order)
+
+
+class LFUPolicy(EvictionPolicy):
+    """Least-frequently-used; ties broken by least-recent access."""
+
+    def __init__(self):
+        self._freq: Dict[int, int] = {}
+        self._tick_of: Dict[int, int] = {}
+        self._tick = 0
+
+    def _touch(self, b: int) -> None:
+        self._tick += 1
+        self._tick_of[b] = self._tick
+
+    def on_insert(self, b: int) -> None:
+        self._freq[b] = self._freq.get(b, 0) + 1
+        self._touch(b)
+
+    def on_access(self, b: int) -> None:
+        if b in self._freq:
+            self._freq[b] += 1
+            self._touch(b)
+
+    def victim(self) -> int:
+        return min(self._freq,
+                   key=lambda b: (self._freq[b], self._tick_of[b]))
+
+    def remove(self, b: int) -> None:
+        self._freq.pop(b, None)
+        self._tick_of.pop(b, None)
+
+    def __len__(self) -> int:
+        return len(self._freq)
+
+
+POLICIES = {"lru": LRUPolicy, "lfu": LFUPolicy}
+
+
+class BlockCache:
+    """Byte-budgeted set of resident block ids.
+
+    ``capacity_bytes // block_bytes`` blocks fit; ``pinned`` blocks are
+    preloaded (a build-time warm-up, not query-time I/O) and never
+    evicted. The dynamic remainder of the capacity is managed by the
+    eviction policy.
+    """
+
+    def __init__(self, capacity_bytes: int, block_bytes: int,
+                 policy: str = "lru",
+                 pinned: Iterable[int] = ()):
+        if block_bytes <= 0:
+            raise ValueError("block_bytes must be positive")
+        if policy not in POLICIES:
+            raise ValueError(f"unknown eviction policy {policy!r}; "
+                             f"choose from {sorted(POLICIES)}")
+        self.capacity_bytes = int(capacity_bytes)
+        self.block_bytes = int(block_bytes)
+        self.capacity_blocks = max(self.capacity_bytes // self.block_bytes,
+                                   0)
+        self.policy_name = policy
+        self._policy: EvictionPolicy = POLICIES[policy]()
+        self.pinned = set(list(dict.fromkeys(int(b) for b in pinned))
+                          [: self.capacity_blocks])
+        self._resident = set(self.pinned)
+        self.evictions = 0
+
+    # -------------------------------------------------------------- state
+    def __contains__(self, b: int) -> bool:
+        return b in self._resident
+
+    def __len__(self) -> int:
+        return len(self._resident)
+
+    @property
+    def resident(self) -> frozenset:
+        return frozenset(self._resident)
+
+    def resident_bytes(self) -> int:
+        return len(self._resident) * self.block_bytes
+
+    def memory_bytes(self) -> int:
+        """Eq. 10 charge: the full budget is reserved, not just residency."""
+        return self.capacity_bytes
+
+    # ------------------------------------------------------------- access
+    def lookup(self, b: int) -> bool:
+        """Demand access: True on hit (and refreshes the policy)."""
+        if b in self._resident:
+            self._policy.on_access(b)
+            return True
+        return False
+
+    def admit(self, b: int) -> None:
+        """Insert a fetched block, evicting a victim if over capacity."""
+        if self.capacity_blocks == 0 or b in self._resident:
+            return
+        # pinned blocks are resident from construction and never evicted,
+        # so b is always un-pinned here
+        while (len(self._resident) >= self.capacity_blocks
+               and len(self._policy) > 0):
+            v = self._policy.victim()
+            self._policy.remove(v)
+            self._resident.discard(v)
+            self.evictions += 1
+        if len(self._resident) < self.capacity_blocks:
+            self._resident.add(b)
+            self._policy.on_insert(b)
+
+
+def hot_block_pin_set(block_of: np.ndarray, adj: np.ndarray,
+                      deg: np.ndarray,
+                      seed_ids: Sequence[int],
+                      max_blocks: int,
+                      hops: int = 1) -> List[int]:
+    """Build-time hot set: blocks by traversal frequency around the
+    navigation-graph entry neighborhood.
+
+    ``seed_ids`` are the vertices queries enter through (the nav-graph
+    μ-sample, or the medoid when navigation is off). Every search's first
+    expansions read the seeds' blocks and their disk-graph neighbors'
+    blocks, so we count those touches — seeds weighted above neighbors —
+    and pin the ``max_blocks`` most frequent.
+    """
+    if max_blocks <= 0 or len(seed_ids) == 0:
+        return []
+    counts: Counter = Counter()
+    frontier = [int(v) for v in seed_ids]
+    weight = 1 << hops
+    for _ in range(hops + 1):
+        for v in frontier:
+            counts[int(block_of[v])] += weight
+        if weight == 1:
+            break
+        nxt: List[int] = []
+        seen = set(frontier)
+        for v in frontier:
+            for w in adj[v, : deg[v]]:
+                w = int(w)
+                if w >= 0 and w not in seen:
+                    seen.add(w)
+                    nxt.append(w)
+        frontier = nxt
+        weight >>= 1
+    return [b for b, _ in counts.most_common(max_blocks)]

@@ -1,0 +1,149 @@
+"""Cache-fronted block store (repro.io).
+
+``CachedBlockStore`` is a drop-in for ``BlockStore``: same
+``read_block`` signature, same array attributes (``vid``/``vecs``/
+``meta``/``packed()`` delegate to the wrapped store), so every existing
+consumer — the host search, the DiskANN baseline, ``save_segment``,
+``device_search.from_segment`` — works unchanged. What it adds is
+accounting and batching:
+
+  * every demand read is a cache ``lookup``; hits cost memory latency in
+    the cost model, misses fetch from "disk" and ``admit`` the block;
+  * a miss issues exactly one I/O round trip, and speculative prefetch
+    targets can be coalesced into that same trip (``read_demand`` with
+    ``prefetch=...``), which is what finally populates
+    ``IOStats.io_round_trips`` (≤ ``block_reads`` by construction:
+    at most one trip per demand read);
+  * per-query counters flow into the ``IOStats`` passed to
+    ``read_demand`` (or the ``stats_sink`` attribute for drop-in
+    ``read_block`` callers); lifetime totals accumulate in ``.total`` so
+    a serving plane sharing one store across queries can report a
+    cache hit rate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.blockstore import BlockStore
+from repro.core.iostats import IOStats
+from repro.io.cache import BlockCache, hot_block_pin_set
+
+
+class CachedBlockStore:
+    def __init__(self, base: BlockStore, cache: BlockCache,
+                 prefetch_width: int = 0,
+                 record_fetches: bool = False):
+        self.base = base
+        self.cache = cache
+        self.prefetch_width = int(prefetch_width)
+        self.stats_sink: Optional[IOStats] = None
+        self.total = IOStats()          # lifetime counters across queries
+        # (kind, block) log of disk fetches, kind in {"miss", "prefetch"};
+        # test hook for the never-fetch-twice invariant.
+        self.fetch_log: Optional[List[Tuple[str, int]]] = \
+            [] if record_fetches else None
+
+    # ------------------------------------------------------- delegation
+    def __getattr__(self, name):
+        # only consulted for attributes not set on self: num_blocks,
+        # verts_per_block, dim, vid, vecs, meta, packed, disk_bytes, ...
+        return getattr(self.base, name)
+
+    def memory_bytes(self) -> int:
+        """Eq. 10 charge of the cache (full reserved budget)."""
+        return self.cache.memory_bytes()
+
+    # ------------------------------------------------------------ reads
+    def read_block(self, b: int):
+        """Drop-in demand read; accounts into ``stats_sink`` if set."""
+        return self.read_demand(b, self.stats_sink)
+
+    def read_demand(self, b: int, stats: Optional[IOStats] = None,
+                    prefetch: Sequence[int] = ()):
+        """Demand-read block ``b``; coalesce ``prefetch`` blocks (already
+        filtered to non-resident ids) into the same round trip.
+
+        At most one round trip is issued per demand read, so
+        ``io_round_trips <= block_reads`` holds structurally.
+        """
+        hit = self.cache.lookup(b)
+        targets = [p for p in prefetch if p != b and p not in self.cache]
+        trip = (not hit) or bool(targets)
+        self._account(stats, hit=hit, trip=trip,
+                      prefetched=len(targets))
+        if not hit:
+            self.cache.admit(b)
+            if self.fetch_log is not None:
+                self.fetch_log.append(("miss", b))
+        for p in targets:
+            self.cache.admit(p)
+            if self.fetch_log is not None:
+                self.fetch_log.append(("prefetch", p))
+        return self.base.read_block(b)
+
+    def _account(self, stats: Optional[IOStats], hit: bool, trip: bool,
+                 prefetched: int) -> None:
+        for s in (stats, self.total):
+            if s is None:
+                continue
+            s.block_reads += 1
+            if hit:
+                s.cache_hits += 1
+            else:
+                s.cache_misses += 1
+            if trip:
+                s.io_round_trips += 1
+            s.prefetched_blocks += prefetched
+
+    # ------------------------------------------------------------ stats
+    @property
+    def hit_rate(self) -> float:
+        return self.total.cache_hit_rate
+
+
+def make_cached_store(store: BlockStore, cache_params,
+                      block_of: Optional[np.ndarray] = None,
+                      adj: Optional[np.ndarray] = None,
+                      deg: Optional[np.ndarray] = None,
+                      seed_ids: Optional[Sequence[int]] = None,
+                      record_fetches: bool = False) -> CachedBlockStore:
+    """Wrap ``store`` per ``CacheParams``: resolve the byte budget, pin
+    the build-time hot set (needs ``block_of``/``adj``/``deg``/
+    ``seed_ids``; skipped when absent), pick the eviction policy."""
+    budget = cache_params.resolve_budget(store.disk_bytes())
+    block_bytes = max(int(store.block_kb * 1024), 1)
+    pinned: Sequence[int] = ()
+    if (cache_params.pin_fraction > 0 and block_of is not None
+            and adj is not None and deg is not None
+            and seed_ids is not None and len(seed_ids) > 0):
+        pin_blocks = int(cache_params.pin_fraction
+                         * (budget // block_bytes))
+        pinned = hot_block_pin_set(block_of, adj, deg, seed_ids,
+                                   max_blocks=pin_blocks)
+    cache = BlockCache(budget, block_bytes,
+                       policy=cache_params.policy, pinned=pinned)
+    return CachedBlockStore(store, cache,
+                            prefetch_width=cache_params.prefetch_width,
+                            record_fetches=record_fetches)
+
+
+def cached_view(view, graph, cache_params, record_fetches: bool = False):
+    """The one way to cache-front a ``SegmentView`` (used by the segment
+    builder, the serving plane, benchmarks, and tests alike).
+
+    Seeds the build-time hot set from the navigation-graph sample — the
+    entry neighborhood every query traverses first — falling back to the
+    static entry when navigation is off. ``view`` is duck-typed (kept
+    untyped to avoid a circular import with ``core.search``).
+    """
+    seeds = (view.nav.sample_ids if view.nav is not None
+             else np.asarray([view.entry], np.int64))
+    store = make_cached_store(view.store, cache_params,
+                              block_of=view.layout.block_of,
+                              adj=graph.adj, deg=graph.deg,
+                              seed_ids=seeds,
+                              record_fetches=record_fetches)
+    return dataclasses.replace(view, store=store)

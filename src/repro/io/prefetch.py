@@ -1,0 +1,66 @@
+"""Speculative batched prefetch for the block search (repro.io).
+
+Starling's beam expands candidates in ascending key order, so the blocks
+of the *top unvisited* entries of the candidate set C are — with high
+probability — the very next demand reads. ``PrefetchEngine`` exploits
+that: on each demand read it walks C front-to-back, collects up to
+``width`` distinct non-resident blocks of unvisited candidates, and
+coalesces them with the demand fetch into a single batched I/O round
+trip (one NVMe queue submission / one strided HBM DMA). The cost model
+prices the extras at ``t_batch_block`` ≪ ``t_block_io``, which is the
+page-aligned-batching argument of arXiv:2509.25487.
+
+A block is never speculatively fetched twice: the engine keeps a
+per-query ``issued`` set and also skips anything already cache-resident.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Set
+
+import numpy as np
+
+from repro.io.cached_store import CachedBlockStore
+
+
+class PrefetchEngine:
+    """Per-query speculative fetcher bound to one ``CachedBlockStore``.
+
+    ``cand`` ducks as the search's ``_CandidateSet``: ordered parallel
+    lists ``ids``/``visited`` sorted ascending by key.
+    """
+
+    def __init__(self, store: CachedBlockStore, block_of: np.ndarray,
+                 width: Optional[int] = None):
+        self.store = store
+        self.block_of = block_of
+        self.width = store.prefetch_width if width is None else int(width)
+        self.issued: Set[int] = set()
+
+    def begin_query(self) -> None:
+        self.issued.clear()
+
+    def targets(self, cand, exclude: Optional[int] = None) -> List[int]:
+        """Blocks of the top-``width`` unvisited candidates that are
+        neither resident, nor already speculatively fetched this query,
+        nor the demand block itself."""
+        if self.width <= 0:
+            return []
+        out: List[int] = []
+        for i in range(len(cand.ids)):
+            if len(out) >= self.width:
+                break
+            if cand.visited[i]:
+                continue
+            b = int(self.block_of[cand.ids[i]])
+            if (b == exclude or b in self.issued or b in out
+                    or b in self.store.cache):
+                continue
+            out.append(b)
+        self.issued.update(out)
+        return out
+
+    def read(self, b: int, cand, stats) -> tuple:
+        """Demand-read ``b``, piggybacking speculative targets from
+        ``cand`` onto the same round trip."""
+        return self.store.read_demand(b, stats,
+                                      prefetch=self.targets(cand, b))

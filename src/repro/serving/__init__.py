@@ -1,3 +1,3 @@
-from repro.serving.coordinator import (QueryCoordinator, SegmentServer,
-                                       merge_topk)
+from repro.serving.coordinator import (HostSegmentServer, QueryCoordinator,
+                                       SegmentServer, merge_topk)
 from repro.serving.batcher import RequestBatcher

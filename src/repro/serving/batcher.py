@@ -19,6 +19,11 @@ class PendingRequest:
 
 
 class RequestBatcher:
+    """``max_wait`` is a deadline in scheduler ticks: each ``ready()``
+    poll with a non-empty queue counts one tick, so a partial batch is
+    flushed after at most ``max_wait`` polls instead of waiting forever
+    for the largest bucket to fill."""
+
     def __init__(self, dim: int, buckets: Sequence[int] = (8, 32, 128),
                  max_wait: int = 64):
         self.dim = dim
@@ -26,6 +31,7 @@ class RequestBatcher:
         self.max_wait = max_wait
         self.queue: List[PendingRequest] = []
         self._next_id = 0
+        self._waited = 0
 
     def submit(self, query: np.ndarray) -> int:
         rid = self._next_id
@@ -35,15 +41,22 @@ class RequestBatcher:
         return rid
 
     def ready(self) -> bool:
-        return (len(self.queue) >= self.buckets[-1]
-                or len(self.queue) >= self.max_wait
-                or len(self.queue) > 0)
+        """True when the largest bucket can be filled, or when pending
+        requests have waited ``max_wait`` polls (deadline flush)."""
+        if not self.queue:
+            self._waited = 0
+            return False
+        if len(self.queue) >= self.buckets[-1]:
+            return True
+        self._waited += 1
+        return self._waited >= self.max_wait
 
     def next_batch(self) -> Tuple[np.ndarray, List[int], int]:
         """Returns (padded queries [B, D], request ids, valid count)."""
         n = min(len(self.queue), self.buckets[-1])
         bucket = next(b for b in self.buckets if b >= n)
         take, self.queue = self.queue[:n], self.queue[n:]
+        self._waited = 0
         q = np.zeros((bucket, self.dim), np.float32)
         ids = []
         for i, r in enumerate(take):

@@ -17,6 +17,9 @@ import numpy as np
 
 from repro.core.device_search import DeviceSegment, device_anns
 from repro.core.iostats import IOStats
+from repro.core.params import SearchParams
+from repro.core.search import SegmentView, anns
+from repro.io.cached_store import CachedBlockStore
 
 
 def merge_topk(ids: Sequence[np.ndarray], dists: Sequence[np.ndarray],
@@ -60,6 +63,50 @@ class SegmentServer:
         return np.asarray(ids), np.asarray(dists), np.asarray(io)
 
 
+@dataclasses.dataclass
+class HostSegmentServer:
+    """Host-path segment server with ONE block cache shared across all
+    queries it serves (repro.io deployment, Fig. 1(b)).
+
+    ``view.store`` should be a ``CachedBlockStore`` (build the segment
+    with ``SegmentParams.cache`` enabled); because the store object is
+    shared, residency survives between requests and the hit rate comes
+    from inter-query locality on the entry neighborhood. With an
+    uncached view this degrades gracefully to the seed behavior.
+    """
+    view: SegmentView
+    params: SearchParams
+    offset: int                   # base of this segment's id space
+    num_vectors: int
+    k_default: int = 10
+
+    @classmethod
+    def from_segment(cls, seg, offset: int) -> "HostSegmentServer":
+        return cls(view=seg.view, params=seg.params.search, offset=offset,
+                   num_vectors=seg.num_vectors)
+
+    def search(self, queries: np.ndarray, k: Optional[int] = None
+               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        ids, dists, stats = anns(self.view, queries,
+                                 k or self.k_default, self.params)
+        self.last_stats = stats
+        io = np.asarray([s.block_reads for s in stats], np.int64)
+        return ids, dists, io
+
+    def cache_stats(self) -> Dict[str, float]:
+        """Lifetime cache counters of the shared store (empty if
+        uncached)."""
+        store = self.view.store
+        if not isinstance(store, CachedBlockStore):
+            return {}
+        t = store.total
+        return {"cache_hits": t.cache_hits,
+                "cache_misses": t.cache_misses,
+                "io_round_trips": t.io_round_trips,
+                "prefetched_blocks": t.prefetched_blocks,
+                "hit_rate": t.cache_hit_rate}
+
+
 class QueryCoordinator:
     """Scatter -> per-segment search -> hierarchical merge."""
 
@@ -67,6 +114,8 @@ class QueryCoordinator:
                  prune_fn: Optional[Callable] = None):
         self.servers = servers
         self.prune_fn = prune_fn          # (queries) -> segment indices
+        self._cache_seen: Dict[int, Tuple[int, int]] = {}  # per-server
+        #   (hits, misses) lifetime watermark for per-call delta reporting
 
     def search(self, queries: np.ndarray, k: int = 10
                ) -> Tuple[np.ndarray, np.ndarray, Dict]:
@@ -85,4 +134,20 @@ class QueryCoordinator:
                  "total_block_reads": total_io,
                  "mean_block_reads_per_query":
                      total_io / max(queries.shape[0], 1)}
+        # repro.io: aggregate shared-cache counters from servers that
+        # expose them, as deltas so every key in the dict is per-call
+        # (the cache itself stays warm across calls — only the
+        # reporting is scoped to this batch)
+        hits = misses = 0
+        for si in targets:
+            cs = getattr(self.servers[si], "cache_stats", lambda: {})()
+            before = self._cache_seen.get(si, (0, 0))
+            now = (cs.get("cache_hits", 0), cs.get("cache_misses", 0))
+            self._cache_seen[si] = now
+            hits += now[0] - before[0]
+            misses += now[1] - before[1]
+        if hits or misses:
+            stats["cache_hits"] = hits
+            stats["cache_misses"] = misses
+            stats["cache_hit_rate"] = hits / (hits + misses)
         return gi, gd, stats

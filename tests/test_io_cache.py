@@ -1,0 +1,229 @@
+"""repro.io: block cache, cached store, batched prefetch (Eq. 4/Eq. 10
+accounting; caching must never change search results)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import distances as D
+from repro.core.iostats import IOStats, NVME_SEGMENT
+from repro.core.params import CacheParams
+from repro.core.search import anns, recall_at_k
+from repro.io import (BlockCache, CachedBlockStore, LFUPolicy, LRUPolicy,
+                      PrefetchEngine, cached_view, hot_block_pin_set,
+                      make_cached_store)
+from tests.conftest import SMALL_SEGMENT
+
+
+def _wrap(seg, cp: CacheParams, record_fetches: bool = False):
+    return cached_view(seg.view, seg.graph, cp,
+                       record_fetches=record_fetches)
+
+
+@pytest.fixture(scope="module")
+def cached_small_view(small_segment):
+    return _wrap(small_segment,
+                 CacheParams(budget_frac=0.15, policy="lru",
+                             pin_fraction=0.25, prefetch_width=4))
+
+
+# ------------------------------------------------------------ BlockCache
+
+def test_lru_eviction_order():
+    c = BlockCache(capacity_bytes=3 * 1024, block_bytes=1024, policy="lru")
+    for b in (1, 2, 3):
+        assert not c.lookup(b)
+        c.admit(b)
+    assert c.lookup(1)            # 1 becomes most-recent; LRU is now 2
+    c.admit(4)
+    assert 2 not in c and 1 in c and 3 in c and 4 in c
+    assert c.evictions == 1
+
+
+def test_lfu_eviction_prefers_cold_blocks():
+    c = BlockCache(capacity_bytes=3 * 1024, block_bytes=1024, policy="lfu")
+    for b in (1, 2, 3):
+        c.admit(b)
+    for _ in range(3):
+        c.lookup(1)
+    c.lookup(3)
+    c.admit(4)                    # 2 has the lowest frequency
+    assert 2 not in c and 1 in c and 3 in c and 4 in c
+
+
+def test_pinned_blocks_never_evicted():
+    c = BlockCache(capacity_bytes=2 * 1024, block_bytes=1024, policy="lru",
+                   pinned=[7])
+    assert 7 in c                 # preloaded at build time
+    for b in range(20):
+        c.lookup(b)
+        c.admit(b)
+    assert 7 in c
+    assert len(c) <= c.capacity_blocks
+
+
+def test_zero_budget_cache_never_hits():
+    c = BlockCache(capacity_bytes=0, block_bytes=1024)
+    c.admit(1)
+    assert not c.lookup(1) and len(c) == 0
+
+
+def test_hot_pin_set_covers_seed_blocks(small_segment):
+    seg = small_segment
+    lay, g = seg.view.layout, seg.graph
+    seeds = seg.view.nav.sample_ids[:8]
+    pins = hot_block_pin_set(lay.block_of, g.adj, g.deg, seeds,
+                             max_blocks=1000)
+    seed_blocks = {int(lay.block_of[v]) for v in seeds}
+    assert seed_blocks <= set(pins)
+
+
+# ------------------------------------------------- accounting invariants
+
+def test_hit_miss_accounting_invariant(cached_small_view, small_segment,
+                                       small_data):
+    _, q = small_data
+    _, _, stats = anns(cached_small_view, q, 10,
+                        small_segment.params.search)
+    merged = IOStats()
+    for s in stats:
+        assert s.block_reads == s.cache_hits + s.cache_misses
+        assert s.io_round_trips <= s.block_reads
+        assert s.io_round_trips >= 1 and s.block_reads >= 1
+        merged.merge(s)
+    assert merged.block_reads == merged.cache_hits + merged.cache_misses
+    assert 0.0 < merged.cache_hit_rate < 1.0
+    total = cached_small_view.store.total
+    assert total.block_reads >= merged.block_reads  # lifetime ≥ this batch
+
+
+def test_merge_rejects_excess_round_trips():
+    a = IOStats(block_reads=2, io_round_trips=2)
+    with pytest.raises(ValueError):
+        a.merge(IOStats(block_reads=0, io_round_trips=1))
+
+
+def test_cached_search_identical_to_uncached(cached_small_view, small_segment,
+                                             small_data):
+    """The cache is transparent: exact same ids and distances."""
+    _, q = small_data
+    p = small_segment.params.search
+    ids_u, dd_u, _ = anns(small_segment.view, q, 10, p)
+    ids_c, dd_c, _ = anns(cached_small_view, q, 10, p)
+    np.testing.assert_array_equal(ids_u, ids_c)
+    np.testing.assert_allclose(dd_u, dd_c)
+
+
+def test_prefetch_never_fetches_twice(small_segment, small_data):
+    """With an eviction-free budget every block reaches 'disk' at most
+    once, whether by demand miss or speculative prefetch."""
+    _, q = small_data
+    view = _wrap(small_segment,
+                 CacheParams(budget_frac=1.0, prefetch_width=4),
+                 record_fetches=True)
+    anns(view, q, 10, small_segment.params.search)
+    log = view.store.fetch_log
+    blocks = [b for _, b in log]
+    assert len(blocks) == len(set(blocks))
+    assert any(kind == "prefetch" for kind, _ in log)
+
+
+def test_prefetch_engine_targets_top_unvisited(small_segment):
+    store = make_cached_store(small_segment.view.store,
+                              CacheParams(budget_frac=0.5,
+                                          prefetch_width=2))
+    block_of = small_segment.view.layout.block_of
+    eng = PrefetchEngine(store, block_of)
+
+    class Cand:
+        ids = [5, 9, 17, 23]
+        visited = [True, False, False, False]
+    t1 = eng.targets(Cand)
+    assert len(t1) <= 2
+    assert int(block_of[5]) not in t1        # visited candidate skipped
+    t2 = eng.targets(Cand)                   # same query: nothing re-issued
+    assert not set(t1) & set(t2)
+    eng.begin_query()
+    assert eng.issued == set()
+
+
+# ----------------------------------------------------------- cost model
+
+def test_cost_model_prices_hits_at_memory_latency():
+    miss_only = IOStats(block_reads=10, cache_misses=10, io_round_trips=10,
+                        hops=10)
+    half_hits = IOStats(block_reads=10, cache_hits=5, cache_misses=5,
+                        io_round_trips=5, hops=10)
+    lat_miss = NVME_SEGMENT.latency_us(miss_only)
+    lat_hits = NVME_SEGMENT.latency_us(half_hits)
+    assert lat_hits < lat_miss
+    # untracked stats price like all-miss (seed behavior unchanged)
+    legacy = IOStats(block_reads=10, hops=10)
+    assert NVME_SEGMENT.latency_us(legacy) == pytest.approx(lat_miss)
+
+
+def test_coalesced_prefetch_cheaper_than_extra_trips():
+    s = IOStats(block_reads=10, cache_hits=4, cache_misses=6,
+                io_round_trips=6, prefetched_blocks=8)
+    batched = NVME_SEGMENT._io_time(s)
+    unbatched = ((s.cache_misses + s.prefetched_blocks)
+                 * NVME_SEGMENT.t_block_io)
+    assert batched < unbatched
+
+
+# ----------------------------------------------- segment integration
+
+@pytest.fixture(scope="module")
+def tiny_cached_segment():
+    from repro.core.segment import build_segment
+    from repro.data.vectors import clustered_vectors
+    x = clustered_vectors(600, 16, num_clusters=8, seed=2)
+    p = dataclasses.replace(
+        SMALL_SEGMENT,
+        cache=CacheParams(budget_frac=0.2, policy="lfu",
+                          pin_fraction=0.5, prefetch_width=2))
+    return build_segment(x, p), x
+
+
+def test_build_segment_charges_cache_against_eq10(tiny_cached_segment):
+    seg, x = tiny_cached_segment
+    store = seg.view.store
+    assert isinstance(store, CachedBlockStore)
+    uncached = dataclasses.replace(seg, view=dataclasses.replace(
+        seg.view, store=store.base))
+    assert (seg.memory_bytes()
+            == uncached.memory_bytes() + store.memory_bytes())
+    assert store.memory_bytes() == store.cache.capacity_bytes
+    assert seg.check_budget()["memory_ok"]
+
+
+def test_cached_segment_save_load_roundtrip(tiny_cached_segment, tmp_path):
+    from repro.core.segment import load_segment, save_segment
+    seg, x = tiny_cached_segment
+    path = str(tmp_path / "seg.npz")
+    save_segment(seg, path)
+    seg2 = load_segment(path, seg.params)
+    assert isinstance(seg2.view.store, CachedBlockStore)
+    q = x[:4] + 0.01
+    ids1, _, _ = anns(seg.view, q, 5, seg.params.search)
+    ids2, _, _ = anns(seg2.view, q, 5, seg.params.search)
+    np.testing.assert_array_equal(ids1, ids2)
+
+
+def test_shared_cache_warms_across_batches(small_segment, small_data):
+    """Serving plane: one cache per segment server — the second batch
+    benefits from blocks resident after the first."""
+    from repro.serving import HostSegmentServer, QueryCoordinator
+    _, q = small_data
+    view = _wrap(small_segment,
+                 CacheParams(budget_frac=0.3, prefetch_width=4))
+    server = HostSegmentServer(view=view,
+                               params=small_segment.params.search,
+                               offset=0,
+                               num_vectors=small_segment.num_vectors)
+    coord = QueryCoordinator([server])
+    _, _, stats1 = coord.search(q[:12], k=10)
+    rate1 = stats1["cache_hit_rate"]
+    _, _, stats2 = coord.search(q[:12], k=10)   # identical batch, warm
+    assert stats2["cache_hit_rate"] > rate1
+    assert stats2["cache_hits"] > stats1["cache_hits"]

@@ -1,6 +1,10 @@
 """Block-layout invariants + shuffling properties (§4.1)."""
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis; rest of the suite runs without")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import layout as L

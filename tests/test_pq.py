@@ -1,5 +1,10 @@
 """Product-quantization properties (§5.1 PQ routing)."""
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis; rest of the suite runs without")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import distances as D

@@ -72,3 +72,22 @@ def test_batcher_single_request_pads_to_smallest_bucket():
     q, ids, n = b.next_batch()
     assert q.shape == (8, 4) and n == 1
     assert np.allclose(q[0], 1.0) and np.allclose(q[1:], 0.0)
+
+
+def test_batcher_ready_waits_for_deadline():
+    """A partial batch is NOT ready until max_wait polls elapse."""
+    b = RequestBatcher(dim=4, buckets=(4, 8), max_wait=3)
+    assert not b.ready()                  # empty queue: never ready
+    b.submit(np.zeros(4))
+    assert not b.ready() and not b.ready()
+    assert b.ready()                      # deadline flush on 3rd poll
+    _, _, n = b.next_batch()
+    assert n == 1
+    assert not b.ready()                  # wait counter reset
+
+
+def test_batcher_ready_immediate_on_full_bucket():
+    b = RequestBatcher(dim=4, buckets=(4, 8), max_wait=1000)
+    for _ in range(8):
+        b.submit(np.zeros(4))
+    assert b.ready()                      # largest bucket full: no wait
