@@ -2,10 +2,16 @@
 
 PY ?= python
 
-.PHONY: test bench bench-io dev-deps
+.PHONY: test test-fast bench bench-io dev-deps
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
+
+# fast lane: skips the build-heavy tests marked @pytest.mark.slow
+# (full-size segment builds, jit compiles); the full suite still runs
+# via `make test` and the scheduled CI lane
+test-fast:
+	PYTHONPATH=src $(PY) -m pytest -x -q -m "not slow"
 
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run
@@ -13,6 +19,8 @@ bench:
 bench-io:
 	PYTHONPATH=src $(PY) -m benchmarks.run --only io_cache_hit_rate_sweep
 	PYTHONPATH=src $(PY) -m benchmarks.run --only io_prefetch_width_sweep
+	PYTHONPATH=src $(PY) -m benchmarks.run --only io_queue_depth_sweep
+	PYTHONPATH=src $(PY) -m benchmarks.run --only io_tier2_budget_sweep
 
 dev-deps:
 	$(PY) -m pip install -r requirements-dev.txt

@@ -1,11 +1,13 @@
 """repro.io benchmarks: cache hit rate and modeled latency vs memory
-budget (GoVector-style curve), plus a prefetch-width sweep.
+budget (GoVector-style curve), a prefetch-width sweep, and the async
+subsystem sweeps — queue depth and tier-2 budget share.
 
-Caching and prefetching never change *which* blocks the search demands
-— results are bit-identical to the uncached path (asserted here) — they
-change what each demand read costs. So these benches report the
-hardware-independent counters (hit rate, round trips, prefetched
-blocks) plus modeled NVMe/TPU latency through the calibrated cost
+Caching, prefetching and async overlap never change *which* blocks the
+search demands — results are bit-identical to the uncached path
+(asserted here) — they change what each demand read costs. So these
+benches report the hardware-independent counters (hit rate, round
+trips, prefetched blocks, in-flight peaks, tier-2 hits, completion
+reorders) plus modeled NVMe/TPU latency through the calibrated cost
 models.
 """
 from __future__ import annotations
@@ -15,7 +17,8 @@ import dataclasses
 import numpy as np
 
 from benchmarks import common
-from repro.configs.starling_segment import SEGMENT_BENCH_CACHED
+from repro.configs.starling_segment import (SEGMENT_BENCH_ASYNC,
+                                            SEGMENT_BENCH_CACHED)
 from repro.core.iostats import IOStats, NVME_SEGMENT, TPU_HBM_SEGMENT
 from repro.core.search import anns, recall_at_k
 from repro.io import cached_view
@@ -23,6 +26,7 @@ from repro.io import cached_view
 # every sweep point is a variation of the checked-in cached config, so
 # the benches exercise exactly the production wiring
 BASE_CACHE = SEGMENT_BENCH_CACHED.cache
+ASYNC_CACHE = SEGMENT_BENCH_ASYNC.cache
 
 
 def _run(view, seg, q, k=10):
@@ -89,3 +93,70 @@ def io_prefetch_width_sweep():
             round_trips_per_query=tot.io_round_trips / q.shape[0],
             prefetched_per_query=tot.prefetched_blocks / q.shape[0],
             latency_us_nvme=lat_nvme, latency_us_tpu=lat_tpu)
+
+
+def _mean_lat(st, cost=NVME_SEGMENT):
+    return float(np.mean([cost.latency_us(s, pipeline=True) for s in st]))
+
+
+def io_queue_depth_sweep():
+    """Async + tiered vs the PR 1 synchronous prefetch at the SAME 10%
+    memory budget: modeled latency vs queue depth. The acceptance bar —
+    depth >= 4 must beat the synchronous baseline — is asserted, as is
+    bit-identical results against the uncached oracle."""
+    seg = common.bench_segment()
+    q = common.queries()
+    ids_u, _, st_u, _ = _run(seg.view, seg, q)
+    lat_u = _mean_lat(st_u)
+    # PR 1 baseline: synchronous coalesced prefetch, single tier
+    view_s = cached_view(seg.view, seg.graph, BASE_CACHE)
+    ids_s, _, st_s, tot_s = _run(view_s, seg, q)
+    assert np.array_equal(ids_s, ids_u), "sync cache changed results"
+    lat_sync = _mean_lat(st_s)
+    common.record("io_queue_depth_sweep", queue_depth=0, mode="sync",
+                  hit_rate=tot_s.cache_hit_rate, latency_us_nvme=lat_sync,
+                  latency_reduction_vs_uncached=1.0 - lat_sync / lat_u)
+    for depth in (1, 2, 4, 8, 16):
+        cp = dataclasses.replace(ASYNC_CACHE, queue_depth=depth)
+        view = cached_view(seg.view, seg.graph, cp)
+        ids, _, st, tot = _run(view, seg, q)
+        assert np.array_equal(ids, ids_u), "async path changed results"
+        lat = _mean_lat(st)
+        if depth >= 4:
+            assert lat < lat_sync, (
+                f"queue depth {depth} ({lat:.1f}us) must beat the "
+                f"synchronous prefetch baseline ({lat_sync:.1f}us)")
+        common.record(
+            "io_queue_depth_sweep", queue_depth=depth, mode="async",
+            hit_rate=tot.cache_hit_rate,
+            tier2_hits_per_query=tot.tier2_hits / q.shape[0],
+            inflight_peak=tot.inflight_peak,
+            inflight_joins_per_query=tot.inflight_joins / q.shape[0],
+            reorders_per_query=tot.completion_reorders / q.shape[0],
+            latency_us_nvme=lat, latency_us_tpu=_mean_lat(
+                st, TPU_HBM_SEGMENT),
+            latency_reduction_vs_sync=1.0 - lat / lat_sync,
+            latency_reduction_vs_uncached=1.0 - lat / lat_u)
+
+
+def io_tier2_budget_sweep():
+    """Tier-2 share of a FIXED 10% budget: how much of the block file a
+    compressed PQ-space summary tier keeps reachable without a disk
+    trip (GoVector, arXiv:2508.15694). tier2_frac=0 is the single-tier
+    async path; every point is bit-identical to the uncached oracle."""
+    seg = common.bench_segment()
+    q = common.queries()
+    ids_u, _, _, _ = _run(seg.view, seg, q)
+    for t2 in (0.0, 0.125, 0.25, 0.5):
+        cp = dataclasses.replace(ASYNC_CACHE, tier2_frac=t2)
+        view = cached_view(seg.view, seg.graph, cp)
+        ids, _, st, tot = _run(view, seg, q)
+        assert np.array_equal(ids, ids_u), "tiered path changed results"
+        common.record(
+            "io_tier2_budget_sweep", tier2_frac=t2,
+            hit_rate=tot.cache_hit_rate,
+            tier1_hits_per_query=tot.cache_hits / q.shape[0],
+            tier2_hits_per_query=tot.tier2_hits / q.shape[0],
+            misses_per_query=tot.cache_misses / q.shape[0],
+            latency_us_nvme=_mean_lat(st),
+            cache_mem_bytes=view.store.memory_bytes())

@@ -34,6 +34,8 @@ BENCHES = [
     paper_tables.appG_partitioners,
     io_bench.io_cache_hit_rate_sweep,
     io_bench.io_prefetch_width_sweep,
+    io_bench.io_queue_depth_sweep,
+    io_bench.io_tier2_budget_sweep,
     device_bench.device_vs_host,
     device_bench.starling_fetch_width,
     device_bench.batched_beam_throughput,

@@ -42,6 +42,21 @@ SEGMENT_BENCH_CACHED = dataclasses.replace(
                       prefetch_width=4),
 )
 
+# the async + tiered deployment at the SAME 10% memory budget: a quarter
+# of the budget becomes a compressed PQ-space summary tier (~16x more
+# blocks per byte; a tier-2 hit re-ranks without a disk trip), and
+# fetches go through an 8-deep event-clock AsyncFetchQueue — speculative
+# reads stay in flight while the current block is ranked, complete out
+# of submission order, and concurrent queries dedup in-flight fetches of
+# the same block. benchmarks/io_bench.py sweeps queue depth and tier-2
+# share around this point against the synchronous SEGMENT_BENCH_CACHED.
+SEGMENT_BENCH_ASYNC = dataclasses.replace(
+    SEGMENT_BENCH,
+    cache=CacheParams(budget_frac=0.10, policy="lru", pin_fraction=0.25,
+                      prefetch_width=4, tier2_frac=0.25,
+                      tier2_compression=16, queue_depth=8),
+)
+
 # the paper's full-size per-dataset index parameters (Tab. 16): used by
 # the byte-accounting tests (γ, ε, ρ must reproduce Example 2 exactly)
 PAPER_DATASETS = {

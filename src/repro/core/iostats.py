@@ -4,12 +4,34 @@ Everything the paper measures flows through this module:
 
   * ``IOStats`` — per-query counters: block reads (mean I/Os), vertices
     fetched vs vertices used (vertex-utilization ξ, Tab. 2), hops (path
-    length ℓ), distance computations.
+    length ℓ), distance computations, cache-tier hits, and the async
+    fetch-queue counters (``inflight_peak``, ``tier2_hits``,
+    ``completion_reorders``, ``inflight_joins``).
   * ``CostModel`` — T_total = T_io + T_comp + T_other (Eq. 4), with an
     overlap factor for the I/O–compute pipeline (§5.1). Two presets:
     the paper's NVMe segment and the TPU HBM-block regime of DESIGN.md §2 —
     latencies are *model parameters*, so every latency/QPS figure derived
     from them is clearly labeled modeled-not-measured on this CPU container.
+
+Pricing summary (repro.io):
+
+  * demand misses (and legacy uncached reads) pay a full ``t_block_io``
+    round trip; tier-1 cache hits pay ``t_cache_hit``; tier-2 hits —
+    demand reads served by a compressed PQ-space block summary — pay
+    ``t_tier2_hit`` (decompress + re-rank, no disk trip);
+  * synchronous coalesced prefetch pays ``t_batch_block`` per extra
+    block, except that a round trip with *no* demand miss (a cache hit
+    whose trip exists only to carry speculative blocks) pays one full
+    ``t_block_io`` for its first block — a trip cannot be cheaper than
+    the queue submission it models;
+  * asynchronous speculative fetches are priced by queue occupancy:
+    a fetch submitted with ``o`` fetches in flight contributes
+    ``t_batch_block / o`` of serial time (``queue_occ_weight`` sums the
+    ``1/o`` terms), so deep queues amortize toward zero serial cost
+    while shallow queues degrade to the flat synchronous price;
+  * a demand read that joins an already-in-flight fetch
+    (``inflight_joins``) pays only the modeled residual service time
+    (``join_residual`` × ``t_block_io``) instead of a new round trip.
 """
 from __future__ import annotations
 
@@ -20,9 +42,20 @@ import dataclasses
 class IOStats:
     block_reads: int = 0        # demand block accesses (the paper's I/Os)
     io_round_trips: int = 0     # batched fetches issued (≤ block_reads)
-    cache_hits: int = 0         # demand reads served by the BlockCache
+    cache_hits: int = 0         # demand reads served by tier 1 (full blocks)
+    tier2_hits: int = 0         # demand reads served by tier 2 (compressed
+    #                             PQ-space summaries — re-rank, no disk trip)
     cache_misses: int = 0       # demand reads that went to "disk"
-    prefetched_blocks: int = 0  # speculative fetches coalesced into trips
+    prefetched_blocks: int = 0  # sync speculative fetches coalesced into trips
+    queue_fetches: int = 0      # fetches submitted through the async queue
+    #                             (demand + speculative)
+    queue_occ_weight: float = 0.0  # Σ 1/occupancy over async speculative
+    #                                fetches (serial-share weight)
+    inflight_peak: int = 0      # max fetches simultaneously in flight
+    inflight_joins: int = 0     # demand misses that joined an in-flight
+    #                             fetch (cross-query dedup wins)
+    join_residual: float = 0.0  # Σ residual service fraction over joins
+    completion_reorders: int = 0  # completions delivered out of submit order
     vertices_fetched: int = 0   # ε per block read
     vertices_used: int = 0      # distance-evaluated full-precision vertices
     hops: int = 0               # total expansions (== block reads)
@@ -30,6 +63,9 @@ class IOStats:
     #                             found (the paper's path length)
     dist_comps: int = 0         # full-precision distance computations
     pq_comps: int = 0           # ADC distance computations
+
+    # merged with max(), not +: peaks and hop marks are not additive
+    _MAX_FIELDS = ("hops_to_best", "inflight_peak")
 
     def merge(self, other: "IOStats") -> None:
         new_trips = self.io_round_trips + other.io_round_trips
@@ -42,20 +78,21 @@ class IOStats:
                 f"({new_reads}) after merge — a batched fetch path issued "
                 "more round trips than demand reads")
         for f in dataclasses.fields(self):
-            if f.name == "hops_to_best":
-                self.hops_to_best = max(self.hops_to_best,
-                                        other.hops_to_best)
+            if f.name in self._MAX_FIELDS:
+                setattr(self, f.name, max(getattr(self, f.name),
+                                          getattr(other, f.name)))
                 continue
             setattr(self, f.name,
                     getattr(self, f.name) + getattr(other, f.name))
 
     @property
     def cache_hit_rate(self) -> float:
-        """Fraction of demand reads served by the block cache."""
-        tracked = self.cache_hits + self.cache_misses
+        """Fraction of demand reads served by either cache tier."""
+        hits = self.cache_hits + self.tier2_hits
+        tracked = hits + self.cache_misses
         if tracked == 0:
             return 0.0
-        return self.cache_hits / tracked
+        return hits / tracked
 
     @property
     def vertex_utilization(self) -> float:
@@ -81,25 +118,42 @@ class CostModel:
     t_dist: float               # one full-precision distance (D-dim)
     t_pq: float                 # one ADC distance
     t_hop_other: float = 0.2    # queue maintenance per hop
-    t_cache_hit: float = 0.0    # demand read served from memory
+    t_cache_hit: float = 0.0    # demand read served from memory (tier 1)
     t_batch_block: float = 0.0  # extra block coalesced into a round trip
     #                             (0.0 → priced as a full t_block_io)
+    t_tier2_hit: float = 0.0    # demand read served by a compressed
+    #                             PQ-space summary (decompress + re-rank)
     name: str = "model"
 
     def _io_time(self, s: IOStats) -> float:
         # Demand misses sit on the critical path: each pays a full round
-        # trip. Speculative fetches are issued while the current block is
-        # being ranked (§5.1 overlap) — they cost bandwidth, not latency:
-        # t_batch_block per coalesced block. Hits are memory copies.
+        # trip. Synchronous speculative fetches coalesce into an already
+        # paid-for trip at t_batch_block each — unless the trip carried
+        # *only* speculative blocks (a cache hit with prefetch targets),
+        # in which case its first block pays the full t_block_io the trip
+        # itself costs. Async speculative fetches are priced by queue
+        # occupancy: t_batch_block/o of serial time each (the 1/o terms
+        # are pre-summed in queue_occ_weight), so depth amortizes them.
+        # Joins of in-flight fetches pay only the modeled residual.
+        # Hits are memory copies; tier-2 hits are decompress + re-rank.
         # Reads with no cache accounting (uncached paths, and the
-        # uncached share of merged mixed stats) price as misses, so
-        # block_reads - cache_hits is the full-latency count either way.
-        full_reads = max(s.block_reads - s.cache_hits, 0)
+        # uncached share of merged mixed stats) price as misses.
         t_batch = self.t_batch_block if self.t_batch_block else \
             self.t_block_io
+        full_reads = max(s.block_reads - s.cache_hits - s.tier2_hits
+                        - s.inflight_joins, 0)
+        # trips beyond one-per-miss are speculative-only (hit + prefetch);
+        # async demand submissions count one trip per non-joined miss, so
+        # adding inflight_joins back keeps the sync surplus exact.
+        spec_trips = min(max(s.io_round_trips - s.cache_misses
+                            + s.inflight_joins, 0), s.prefetched_blocks)
         return (full_reads * self.t_block_io
-                + s.prefetched_blocks * t_batch
-                + s.cache_hits * self.t_cache_hit)
+                + spec_trips * self.t_block_io
+                + (s.prefetched_blocks - spec_trips) * t_batch
+                + s.queue_occ_weight * t_batch
+                + s.join_residual * self.t_block_io
+                + s.cache_hits * self.t_cache_hit
+                + s.tier2_hits * self.t_tier2_hit)
 
     def latency_us(self, s: IOStats, pipeline: bool = False) -> float:
         t_io = self._io_time(s)
@@ -124,15 +178,17 @@ class CostModel:
 # The paper's segment: NVMe 4KB random read ~90–100 µs per round-trip,
 # ~0.05 µs per 128-d L2 on one core, ADC ~0.01 µs. A cache hit is a DRAM
 # copy of one 4 KB block (~0.5 µs); an extra block coalesced into an
-# in-flight round trip rides the same queue slot (~18 µs).
+# in-flight round trip rides the same queue slot (~18 µs). A tier-2 hit
+# decompresses a ~256 B PQ-space summary and re-ranks (~2.5 µs).
 NVME_SEGMENT = CostModel(t_block_io=95.0, t_dist=0.055, t_pq=0.012,
                          t_cache_hit=0.5, t_batch_block=18.0,
-                         name="nvme")
+                         t_tier2_hit=2.5, name="nvme")
 
 # TPU regime (DESIGN.md §2): 4 KB HBM→VMEM DMA ≈ 1.2 µs latency-bound,
 # VPU block ranking ≈ 0.02 µs/vector amortized, ADC ≈ 0.002 µs via LUT
 # tiles. A hit is a VMEM-resident tile; coalesced blocks stream at HBM
-# bandwidth (~0.35 µs per extra 4 KB).
+# bandwidth (~0.35 µs per extra 4 KB); a tier-2 hit is a VMEM LUT
+# re-rank of the resident summary tile.
 TPU_HBM_SEGMENT = CostModel(t_block_io=1.2, t_dist=0.02, t_pq=0.002,
                             t_cache_hit=0.05, t_batch_block=0.35,
-                            name="tpu-hbm")
+                            t_tier2_hit=0.08, name="tpu-hbm")

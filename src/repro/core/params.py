@@ -99,19 +99,32 @@ class SearchParams:
 class CacheParams:
     """Block-cache + prefetch knobs (the repro.io subsystem).
 
-    The cache budget is memory reserved for η-KB block residency and is
+    The cache budget is memory reserved for block residency and is
     charged as C_cache against the Eq. 10 segment memory budget. Either
     give an absolute ``budget_bytes`` or a ``budget_frac`` of the block
     file (``BlockStore.disk_bytes()``); both zero disables caching and
     the search path behaves exactly as the seed.
+
+    ``tier2_frac`` carves a share of the budget into a second tier of
+    compressed PQ-space block summaries at ``block_bytes //
+    tier2_compression`` each (a tier-2 hit re-ranks without a disk
+    trip); ``queue_depth`` > 0 switches the fetch path from
+    synchronous-coalesced to the event-clock ``AsyncFetchQueue`` with
+    that many fetches in flight.
     """
     budget_bytes: int = 0         # absolute cache budget
     budget_frac: float = 0.0      # fraction of disk_bytes (if bytes == 0)
     policy: str = "lru"           # lru | lfu
-    pin_fraction: float = 0.25    # share of capacity pinned to the
+    pin_fraction: float = 0.25    # share of tier-1 capacity pinned to the
     #                               build-time entry-neighborhood hot set
-    prefetch_width: int = 4       # speculative blocks coalesced per
-    #                               batched round trip (0 → no prefetch)
+    prefetch_width: int = 4       # speculative blocks per demand read:
+    #                               coalesced into the round trip (sync)
+    #                               or put in flight (async); 0 → none
+    tier2_frac: float = 0.0       # share of the budget reserved for the
+    #                               compressed summary tier (0 → 1 tier)
+    tier2_compression: int = 16   # full-block bytes per summary byte
+    queue_depth: int = 0          # max in-flight fetches on the async
+    #                               queue (0 → synchronous fetch path)
 
     def __post_init__(self):
         # ValueError (not assert) so invalid configs fail under -O too,
@@ -125,6 +138,12 @@ class CacheParams:
             raise ValueError(
                 "CacheParams out of range: pin_fraction/budget_frac in "
                 "[0, 1], budget_bytes/prefetch_width >= 0")
+        if not (0.0 <= self.tier2_frac < 1.0):
+            raise ValueError("tier2_frac must be in [0, 1): tier 1 "
+                             "needs a non-empty share of the budget")
+        if self.tier2_compression < 1 or self.queue_depth < 0:
+            raise ValueError(
+                "tier2_compression must be >= 1 and queue_depth >= 0")
 
     @property
     def enabled(self) -> bool:

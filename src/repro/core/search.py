@@ -121,11 +121,14 @@ def block_search_query(seg: SegmentView, q: np.ndarray, k: int,
                        cand: Optional[_CandidateSet] = None,
                        result: Optional[Dict[int, float]] = None,
                        kicked: Optional[List[Tuple[float, int]]] = None,
+                       expanded: Optional[set] = None,
                        stats: Optional[IOStats] = None) -> SearchResult:
     """One ANNS query via block search (Algorithm 2).
 
-    ``cand``/``result``/``kicked`` allow the RS driver (§5.3) to resume a
-    previous search without recomputation.
+    ``cand``/``result``/``kicked``/``expanded`` allow the RS driver
+    (§5.3) to resume a previous search without recomputation — the
+    ``expanded`` set in particular must survive rounds, or reseeded
+    kicked vertices re-read blocks already expanded earlier.
     """
     store, layout = seg.store, seg.layout
     eps = store.verts_per_block
@@ -136,11 +139,14 @@ def block_search_query(seg: SegmentView, q: np.ndarray, k: int,
     C = cand if cand is not None else _CandidateSet(p.candidate_size)
     R: Dict[int, float] = result if result is not None else {}
     P: List[Tuple[float, int]] = kicked if kicked is not None else []
-    expanded: set = set()
+    expanded = expanded if expanded is not None else set()
 
     # repro.io: when the view's store is cache-fronted, all block reads go
     # through it (hit/miss/round-trip accounting) and demand misses carry
-    # speculative fetches of the top unvisited candidates' blocks.
+    # speculative fetches of the top unvisited candidates' blocks — either
+    # coalesced into the demand round trip (sync) or submitted to the
+    # shared AsyncFetchQueue so they stay in flight while this block is
+    # ranked, completing out of submission order (§5.1 pipeline).
     cached = store if isinstance(store, CachedBlockStore) else None
     prefetcher = (PrefetchEngine(cached, layout.block_of)
                   if cached is not None and cached.prefetch_width > 0
@@ -273,9 +279,11 @@ def range_search_query(seg: SegmentView, q: np.ndarray, radius: float,
     C = _CandidateSet(p.candidate_size)
     R: Dict[int, float] = {}
     P: List[Tuple[float, int]] = []
+    E: set = set()    # expanded vertices survive rounds — reseeded
+    #                   kicked vertices must not re-read their blocks
 
     block_search_query(seg, q, k=1, p=p, cand=C, result=R, kicked=P,
-                       stats=stats)
+                       expanded=E, stats=stats)
     for _ in range(p.rs_max_rounds):
         in_range = sum(1 for d_ in R.values() if d_ <= radius)
         if in_range / max(C.cap, 1) < p.rs_ratio:       # Eq. 7 not met
@@ -287,7 +295,7 @@ def range_search_query(seg: SegmentView, q: np.ndarray, radius: float,
         for kk, vv in reseed:
             C.push(kk, vv)
         block_search_query(seg, q, k=1, p=p, cand=C, result=R, kicked=P,
-                           stats=stats)
+                           expanded=E, stats=stats)
 
     hits = [(v, d_) for v, d_ in R.items() if d_ <= radius]
     hits.sort(key=lambda kv: kv[1])

@@ -1,9 +1,9 @@
-"""repro.io — block-cache + batched-prefetch I/O subsystem.
+"""repro.io — block-cache + async batched-prefetch I/O subsystem.
 
 Starling's segment cost model (Eq. 4) is I/O-bound: T_io = #I/Os ×
 t_block_io dominates on NVMe. This package attacks #effective-I/Os at
-*unchanged recall* — caching and batching never change which blocks the
-search reads, only what each read costs:
+*unchanged recall* — caching, batching and async overlap never change
+which blocks the search reads, only what each read costs:
 
   * ``BlockCache`` (``cache.py``) — a byte-budgeted resident set of
     block ids with LRU/LFU eviction and static pinning of the
@@ -11,26 +11,45 @@ search reads, only what each read costs:
     Its capacity is *memory*, so it is charged as a fourth term of the
     Eq. 10 segment memory budget (C_graph + C_mapping + C_PQ&others +
     C_cache) — see ``SegmentParams.cache`` and ``Segment.memory_bytes``.
+  * ``TieredBlockCache`` (``cache.py``) — tier 1 full η-KB blocks over
+    tier 2 compressed PQ-space block summaries at ~1/16 the bytes
+    (GoVector-style): a tier-2 hit re-ranks without a disk trip, so
+    tight budgets keep far more of the segment reachable from memory.
   * ``CachedBlockStore`` (``cached_store.py``) — drop-in for
     ``BlockStore.read_block`` that accounts ``cache_hits`` /
-    ``cache_misses`` / ``io_round_trips`` into ``IOStats``.
+    ``tier2_hits`` / ``cache_misses`` / ``io_round_trips`` into
+    ``IOStats``.
   * ``PrefetchEngine`` (``prefetch.py``) — speculatively fetches the
-    blocks of the top unvisited candidates and coalesces them with the
-    demand miss into one batched round trip.
+    blocks of the top unvisited candidates: coalesced into the demand
+    round trip (sync) or put in flight ahead of the demand wait
+    (async).
+  * ``AsyncFetchQueue`` (``async_fetch.py``) — event-clock model of
+    in-flight fetches with completion-order delivery: submissions
+    return tickets, the search overlaps ranking with outstanding
+    fetches and consumes completions out of submission order
+    (``IOStats.completion_reorders``), and demand reads of blocks
+    already in flight join the existing ticket
+    (``IOStats.inflight_joins``) — the cross-query dedup the serving
+    plane's shared queue provides.
 
 The serving plane shares one ``CachedBlockStore`` per segment server
-across queries (``serving.coordinator.HostSegmentServer``), which is
-where the hit rate actually comes from: inter-query locality on the
-entry neighborhood and cluster-hot blocks.
+across queries (``serving.coordinator.HostSegmentServer``) and may
+share one ``AsyncFetchQueue`` across servers
+(``serving.coordinator.attach_shared_fetch_queue``), which is where
+the hit rate and the in-flight dedup actually come from: inter-query
+locality on the entry neighborhood and cluster-hot blocks.
 """
+from repro.io.async_fetch import AsyncFetchQueue, FetchTicket
 from repro.io.cache import (BlockCache, EvictionPolicy, LFUPolicy,
-                            LRUPolicy, hot_block_pin_set)
+                            LRUPolicy, TieredBlockCache,
+                            hot_block_pin_set)
 from repro.io.cached_store import (CachedBlockStore, cached_view,
                                    make_cached_store)
 from repro.io.prefetch import PrefetchEngine
 
 __all__ = [
-    "BlockCache", "EvictionPolicy", "LRUPolicy", "LFUPolicy",
-    "hot_block_pin_set", "CachedBlockStore", "cached_view",
+    "AsyncFetchQueue", "FetchTicket",
+    "BlockCache", "TieredBlockCache", "EvictionPolicy", "LRUPolicy",
+    "LFUPolicy", "hot_block_pin_set", "CachedBlockStore", "cached_view",
     "make_cached_store", "PrefetchEngine",
 ]

@@ -7,13 +7,25 @@ consumer — the host search, the DiskANN baseline, ``save_segment``,
 ``device_search.from_segment`` — works unchanged. What it adds is
 accounting and batching:
 
-  * every demand read is a cache ``lookup``; hits cost memory latency in
-    the cost model, misses fetch from "disk" and ``admit`` the block;
-  * a miss issues exactly one I/O round trip, and speculative prefetch
-    targets can be coalesced into that same trip (``read_demand`` with
-    ``prefetch=...``), which is what finally populates
-    ``IOStats.io_round_trips`` (≤ ``block_reads`` by construction:
-    at most one trip per demand read);
+  * every demand read is a cache lookup; tier-1 hits cost memory
+    latency in the cost model, tier-2 hits (``TieredBlockCache``) serve
+    from a compressed PQ-space summary at ``t_tier2_hit`` with *no*
+    disk trip, misses fetch from "disk" and ``admit`` the block;
+  * synchronous path (no queue): a miss issues exactly one I/O round
+    trip and speculative prefetch targets coalesce into that same trip
+    (``read_demand`` with ``prefetch=...``); a trip carrying *only*
+    speculative blocks (demand hit + prefetch) still counts — its first
+    block pays the full ``t_block_io`` in the cost model, a trip is
+    never cheaper than the queue submission it models;
+  * asynchronous path (``queue`` set): ``read_demand`` becomes
+    submit/wait against the shared ``AsyncFetchQueue`` — speculative
+    targets go in flight *before* the demand wait so they overlap its
+    service window, completions deliver (admit + account) out of
+    submission order, and a demand read of a block already in flight
+    joins the existing ticket instead of issuing a new trip;
+  * ``io_round_trips <= block_reads`` holds structurally on both paths:
+    at most one trip per demand read (hits, tier-2 hits and joins issue
+    none);
   * per-query counters flow into the ``IOStats`` passed to
     ``read_demand`` (or the ``stats_sink`` attribute for drop-in
     ``read_block`` callers); lifetime totals accumulate in ``.total`` so
@@ -23,22 +35,26 @@ accounting and batching:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core.blockstore import BlockStore
 from repro.core.iostats import IOStats
-from repro.io.cache import BlockCache, hot_block_pin_set
+from repro.io.async_fetch import AsyncFetchQueue, FetchTicket
+from repro.io.cache import BlockCache, TieredBlockCache, hot_block_pin_set
 
 
 class CachedBlockStore:
-    def __init__(self, base: BlockStore, cache: BlockCache,
+    def __init__(self, base: BlockStore,
+                 cache: Union[BlockCache, TieredBlockCache],
                  prefetch_width: int = 0,
+                 queue: Optional[AsyncFetchQueue] = None,
                  record_fetches: bool = False):
         self.base = base
         self.cache = cache
         self.prefetch_width = int(prefetch_width)
+        self.queue = queue
         self.stats_sink: Optional[IOStats] = None
         self.total = IOStats()          # lifetime counters across queries
         # (kind, block) log of disk fetches, kind in {"miss", "prefetch"};
@@ -53,50 +69,155 @@ class CachedBlockStore:
         return getattr(self.base, name)
 
     def memory_bytes(self) -> int:
-        """Eq. 10 charge of the cache (full reserved budget)."""
+        """Eq. 10 charge of the cache (full reserved budget, all tiers)."""
         return self.cache.memory_bytes()
 
     # ------------------------------------------------------------ reads
+    def _lookup_tier(self, b: int) -> int:
+        """1 = full-block hit, 2 = compressed-summary hit, 0 = miss —
+        both cache classes speak the lookup_tier protocol."""
+        return self.cache.lookup_tier(b)
+
     def read_block(self, b: int):
         """Drop-in demand read; accounts into ``stats_sink`` if set."""
         return self.read_demand(b, self.stats_sink)
 
     def read_demand(self, b: int, stats: Optional[IOStats] = None,
                     prefetch: Sequence[int] = ()):
-        """Demand-read block ``b``; coalesce ``prefetch`` blocks (already
-        filtered to non-resident ids) into the same round trip.
-
-        At most one round trip is issued per demand read, so
-        ``io_round_trips <= block_reads`` holds structurally.
+        """Demand-read block ``b``; speculate ``prefetch`` blocks
+        (already filtered to non-resident ids). Dispatches to the async
+        submit/wait path when an ``AsyncFetchQueue`` is attached,
+        otherwise coalesces the speculation into the demand round trip.
         """
-        hit = self.cache.lookup(b)
+        if self.queue is not None:
+            return self._read_async(b, stats, prefetch)
+        tier = self._lookup_tier(b)
         targets = [p for p in prefetch if p != b and p not in self.cache]
-        trip = (not hit) or bool(targets)
-        self._account(stats, hit=hit, trip=trip,
+        trip = (tier == 0) or bool(targets)
+        self._account(stats, tier=tier, trip=trip,
                       prefetched=len(targets))
-        if not hit:
+        if tier == 0:
             self.cache.admit(b)
-            if self.fetch_log is not None:
-                self.fetch_log.append(("miss", b))
+            self._log("miss", b)
         for p in targets:
             self.cache.admit(p)
-            if self.fetch_log is not None:
-                self.fetch_log.append(("prefetch", p))
+            self._log("prefetch", p)
         return self.base.read_block(b)
 
-    def _account(self, stats: Optional[IOStats], hit: bool, trip: bool,
-                 prefetched: int) -> None:
+    # ------------------------------------------------------- async path
+    def _key(self, b: int) -> tuple:
+        """In-flight identity on a shared queue: namespaced by the
+        backing store, so equal block ids of *different* segments never
+        conflate, while views over the same base dedup as intended."""
+        return (id(self.base), b)
+
+    def _read_async(self, b: int, stats: Optional[IOStats],
+                    prefetch: Sequence[int] = ()):
+        """Submit/wait demand read against the shared fetch queue.
+
+        Order matters: speculative targets are submitted *before* the
+        demand wait so their service windows overlap it (§5.1 — the
+        occupancy the cost model prices). A block already in flight —
+        from this query's speculation or another query on the shared
+        queue — is joined, not re-fetched."""
+        q = self.queue
+        tier = self._lookup_tier(b)
+        if tier:
+            self._account(stats, tier=tier, trip=False, prefetched=0)
+            self._speculate(prefetch, b, stats)
+            self._deliver(q.poll(), stats)
+            return self.base.read_block(b)
+        ticket = q.get(b, key=self._key(b))
+        joined = ticket is not None
+        residual = ticket.residual(q.clock) if joined else 0.0
+        if not joined:
+            while q.free_slots <= 0:
+                self._deliver(q.wait_any(), stats)
+            ticket, _ = q.submit(b, kind="demand", key=self._key(b),
+                                 owner=self)
+            self._log("miss", b)
+        self._bump(stats, "queue_fetches", 0 if joined else 1)
+        self._account(stats, tier=0, trip=not joined, prefetched=0,
+                      joined=joined, residual=residual)
+        self._speculate(prefetch, b, stats)
+        self._deliver(q.wait(ticket), stats)
+        # a joined ticket delivers into its submitter's cache; this
+        # store received the payload too, so it admits as well
+        self.cache.admit(b)
+        return self.base.read_block(b)
+
+    def _speculate(self, prefetch: Sequence[int], demand: int,
+                   stats: Optional[IOStats]) -> None:
+        q = self.queue
+        for p in prefetch:
+            if q.free_slots <= 0:
+                break
+            if (p == demand or p in self.cache
+                    or q.in_flight(p, key=self._key(p))):
+                continue
+            _, occ = q.submit(p, kind="speculative", key=self._key(p),
+                              owner=self)
+            self._log("prefetch", p)
+            for s in (stats, self.total):
+                if s is None:
+                    continue
+                s.queue_fetches += 1
+                s.queue_occ_weight += 1.0 / occ
+                s.inflight_peak = max(s.inflight_peak, occ)
+
+    def _deliver(self, completions: List[FetchTicket],
+                 stats: Optional[IOStats]) -> None:
+        """Consume queue completions: admit each block into its
+        *submitter's* cache (tickets from other stores sharing the
+        queue complete here too) and account out-of-order deliveries
+        against the stats of whoever drove the clock."""
+        for t in completions:
+            target = t.owner if t.owner is not None else self
+            target.cache.admit(t.block)
+            if t.reordered:
+                for s in (stats, self.total):
+                    if s is not None:
+                        s.completion_reorders += 1
+
+    def attach_queue(self, queue: Optional[AsyncFetchQueue]) -> None:
+        """Switch to a (shared) fetch queue, first draining any private
+        one so its in-flight blocks are still admitted and accounted —
+        silently orphaning tickets would re-fetch them later."""
+        if self.queue is not None and self.queue is not queue:
+            self._deliver(self.queue.drain(), None)
+        self.queue = queue
+
+    # ------------------------------------------------------- accounting
+    def _log(self, kind: str, b: int) -> None:
+        if self.fetch_log is not None:
+            self.fetch_log.append((kind, b))
+
+    def _bump(self, stats: Optional[IOStats], field: str, n: int) -> None:
+        for s in (stats, self.total):
+            if s is not None:
+                setattr(s, field, getattr(s, field) + n)
+
+    def _account(self, stats: Optional[IOStats], tier: int, trip: bool,
+                 prefetched: int, joined: bool = False,
+                 residual: float = 0.0) -> None:
         for s in (stats, self.total):
             if s is None:
                 continue
             s.block_reads += 1
-            if hit:
+            if tier == 1:
                 s.cache_hits += 1
+            elif tier == 2:
+                s.tier2_hits += 1
             else:
                 s.cache_misses += 1
             if trip:
                 s.io_round_trips += 1
+            if joined:
+                s.inflight_joins += 1
+                s.join_residual += residual
             s.prefetched_blocks += prefetched
+            if self.queue is not None:
+                s.inflight_peak = max(s.inflight_peak, len(self.queue))
 
     # ------------------------------------------------------------ stats
     @property
@@ -109,28 +230,46 @@ def make_cached_store(store: BlockStore, cache_params,
                       adj: Optional[np.ndarray] = None,
                       deg: Optional[np.ndarray] = None,
                       seed_ids: Optional[Sequence[int]] = None,
+                      queue: Optional[AsyncFetchQueue] = None,
                       record_fetches: bool = False) -> CachedBlockStore:
-    """Wrap ``store`` per ``CacheParams``: resolve the byte budget, pin
-    the build-time hot set (needs ``block_of``/``adj``/``deg``/
-    ``seed_ids``; skipped when absent), pick the eviction policy."""
+    """Wrap ``store`` per ``CacheParams``: resolve the byte budget,
+    split it across tiers (``tier2_frac`` > 0 → ``TieredBlockCache``
+    with compressed PQ-space summaries), pin the build-time hot set
+    (needs ``block_of``/``adj``/``deg``/``seed_ids``; skipped when
+    absent), pick the eviction policy, and attach the async fetch queue
+    (``queue_depth`` > 0, or a shared ``queue`` from the serving
+    plane)."""
     budget = cache_params.resolve_budget(store.disk_bytes())
     block_bytes = max(int(store.block_kb * 1024), 1)
+    tier2_bytes = int(budget * getattr(cache_params, "tier2_frac", 0.0))
+    tier1_bytes = budget - tier2_bytes
     pinned: Sequence[int] = ()
     if (cache_params.pin_fraction > 0 and block_of is not None
             and adj is not None and deg is not None
             and seed_ids is not None and len(seed_ids) > 0):
         pin_blocks = int(cache_params.pin_fraction
-                         * (budget // block_bytes))
+                         * (tier1_bytes // block_bytes))
         pinned = hot_block_pin_set(block_of, adj, deg, seed_ids,
                                    max_blocks=pin_blocks)
-    cache = BlockCache(budget, block_bytes,
-                       policy=cache_params.policy, pinned=pinned)
+    if tier2_bytes > 0:
+        cache = TieredBlockCache(
+            tier1_bytes, tier2_bytes, block_bytes,
+            compression=cache_params.tier2_compression,
+            policy=cache_params.policy, pinned=pinned)
+    else:
+        cache = BlockCache(budget, block_bytes,
+                           policy=cache_params.policy, pinned=pinned)
+    if queue is None and cache_params.queue_depth > 0:
+        queue = AsyncFetchQueue(depth=cache_params.queue_depth)
     return CachedBlockStore(store, cache,
                             prefetch_width=cache_params.prefetch_width,
+                            queue=queue,
                             record_fetches=record_fetches)
 
 
-def cached_view(view, graph, cache_params, record_fetches: bool = False):
+def cached_view(view, graph, cache_params,
+                queue: Optional[AsyncFetchQueue] = None,
+                record_fetches: bool = False):
     """The one way to cache-front a ``SegmentView`` (used by the segment
     builder, the serving plane, benchmarks, and tests alike).
 
@@ -145,5 +284,6 @@ def cached_view(view, graph, cache_params, record_fetches: bool = False):
                               block_of=view.layout.block_of,
                               adj=graph.adj, deg=graph.deg,
                               seed_ids=seeds,
+                              queue=queue,
                               record_fetches=record_fetches)
     return dataclasses.replace(view, store=store)

@@ -3,15 +3,23 @@
 Starling's beam expands candidates in ascending key order, so the blocks
 of the *top unvisited* entries of the candidate set C are — with high
 probability — the very next demand reads. ``PrefetchEngine`` exploits
-that: on each demand read it walks C front-to-back, collects up to
-``width`` distinct non-resident blocks of unvisited candidates, and
-coalesces them with the demand fetch into a single batched I/O round
-trip (one NVMe queue submission / one strided HBM DMA). The cost model
-prices the extras at ``t_batch_block`` ≪ ``t_block_io``, which is the
-page-aligned-batching argument of arXiv:2509.25487.
+that: on each demand read it walks C front-to-back and collects up to
+``width`` distinct non-resident blocks of unvisited candidates. On the
+synchronous path they coalesce with the demand fetch into a single
+batched I/O round trip (one NVMe queue submission / one strided HBM
+DMA), priced at ``t_batch_block`` ≪ ``t_block_io`` — the page-aligned
+batching argument of arXiv:2509.25487. On the async path
+(``AsyncFetchQueue`` attached to the store) they are submitted as
+in-flight fetches that overlap the demand service window, priced by
+queue occupancy.
 
-A block is never speculatively fetched twice: the engine keeps a
-per-query ``issued`` set and also skips anything already cache-resident.
+A block is never speculatively fetched twice: the engine keeps an
+``issued`` set and skips anything already cache-resident (either tier)
+or already in flight on the store's queue. The engine is constructed
+per query inside ``block_search_query`` — that construction *is* the
+per-query reset, which is why there is no ``begin_query`` method;
+cross-query dedup is the job of the shared cache and fetch queue, not
+of this engine.
 """
 from __future__ import annotations
 
@@ -36,24 +44,29 @@ class PrefetchEngine:
         self.width = store.prefetch_width if width is None else int(width)
         self.issued: Set[int] = set()
 
-    def begin_query(self) -> None:
-        self.issued.clear()
-
     def targets(self, cand, exclude: Optional[int] = None) -> List[int]:
         """Blocks of the top-``width`` unvisited candidates that are
-        neither resident, nor already speculatively fetched this query,
-        nor the demand block itself."""
+        neither resident, nor in flight, nor already speculatively
+        fetched this query, nor the demand block itself."""
         if self.width <= 0:
             return []
+        queue = self.store.queue
+        width = self.width
+        if queue is not None:
+            # never mark more targets issued than the queue can take
+            # (one slot reserved for the demand fetch itself)
+            width = min(width, max(queue.free_slots - 1, 0))
         out: List[int] = []
         for i in range(len(cand.ids)):
-            if len(out) >= self.width:
+            if len(out) >= width:
                 break
             if cand.visited[i]:
                 continue
             b = int(self.block_of[cand.ids[i]])
             if (b == exclude or b in self.issued or b in out
-                    or b in self.store.cache):
+                    or b in self.store.cache
+                    or (queue is not None
+                        and queue.in_flight(b, key=self.store._key(b)))):
                 continue
             out.append(b)
         self.issued.update(out)
@@ -61,6 +74,7 @@ class PrefetchEngine:
 
     def read(self, b: int, cand, stats) -> tuple:
         """Demand-read ``b``, piggybacking speculative targets from
-        ``cand`` onto the same round trip."""
+        ``cand`` — coalesced into the same round trip (sync) or put in
+        flight ahead of the demand wait (async)."""
         return self.store.read_demand(b, stats,
                                       prefetch=self.targets(cand, b))

@@ -1,3 +1,5 @@
 from repro.serving.coordinator import (HostSegmentServer, QueryCoordinator,
-                                       SegmentServer, merge_topk)
+                                       SegmentServer,
+                                       attach_shared_fetch_queue,
+                                       merge_topk)
 from repro.serving.batcher import RequestBatcher

@@ -19,6 +19,7 @@ from repro.core.device_search import DeviceSegment, device_anns
 from repro.core.iostats import IOStats
 from repro.core.params import SearchParams
 from repro.core.search import SegmentView, anns
+from repro.io.async_fetch import AsyncFetchQueue
 from repro.io.cached_store import CachedBlockStore
 
 
@@ -101,10 +102,42 @@ class HostSegmentServer:
             return {}
         t = store.total
         return {"cache_hits": t.cache_hits,
+                "tier2_hits": t.tier2_hits,
                 "cache_misses": t.cache_misses,
                 "io_round_trips": t.io_round_trips,
                 "prefetched_blocks": t.prefetched_blocks,
+                "queue_fetches": t.queue_fetches,
+                "inflight_peak": t.inflight_peak,
+                "inflight_joins": t.inflight_joins,
+                "completion_reorders": t.completion_reorders,
                 "hit_rate": t.cache_hit_rate}
+
+
+def attach_shared_fetch_queue(servers: Sequence["HostSegmentServer"],
+                              depth: int = 8) -> AsyncFetchQueue:
+    """Share ONE AsyncFetchQueue across every cache-fronted server view.
+
+    This is the serving-plane half of the async subsystem: with a
+    common queue, concurrent queries (and co-located segments backed by
+    the same store) dedup in-flight fetches of the same block — a
+    demand read arriving while the block is still in flight joins the
+    existing ticket (``IOStats.inflight_joins``) instead of issuing a
+    new round trip. Returns the queue so callers can inspect its
+    lifetime counters (``submitted``/``delivered``/``reorders``/
+    ``inflight_peak``)."""
+    q = AsyncFetchQueue(depth=depth)
+    attached = 0
+    for s in servers:
+        view = getattr(s, "view", None)
+        if view is not None and isinstance(view.store, CachedBlockStore):
+            # drains any private queue first so its in-flight fetches
+            # are delivered, not orphaned
+            view.store.attach_queue(q)
+            attached += 1
+    if attached == 0:
+        raise ValueError("no cache-fronted HostSegmentServer views to "
+                         "attach the shared fetch queue to")
+    return q
 
 
 class QueryCoordinator:
@@ -142,7 +175,9 @@ class QueryCoordinator:
         for si in targets:
             cs = getattr(self.servers[si], "cache_stats", lambda: {})()
             before = self._cache_seen.get(si, (0, 0))
-            now = (cs.get("cache_hits", 0), cs.get("cache_misses", 0))
+            # tier-2 summary hits count as hits: they avoid the disk trip
+            now = (cs.get("cache_hits", 0) + cs.get("tier2_hits", 0),
+                   cs.get("cache_misses", 0))
             self._cache_seen[si] = now
             hits += now[0] - before[0]
             misses += now[1] - before[1]

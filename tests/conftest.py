@@ -6,6 +6,13 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 import pytest
 
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: build-heavy test (segment/graph builds, jit compiles); "
+        "deselected by `make test-fast` / the fast CI lane")
+
 from repro.core.params import (GraphParams, LayoutParams, NavGraphParams,
                                PQParams, SegmentParams)
 from repro.data.vectors import clustered_vectors, query_set

@@ -23,6 +23,7 @@ def _train(cfg, step_fn, params, opt_state, pipe, steps):
     return params, opt_state
 
 
+@pytest.mark.slow   # jit-compiles a full train step (~6s)
 def test_checkpoint_restart_bitexact(tmp_path):
     """Train 6 steps straight == train 3, checkpoint, restore, train 3."""
     cfg = SMOKE_CONFIGS["gemma3-1b"]

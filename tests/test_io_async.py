@@ -1,0 +1,371 @@
+"""repro.io.async_fetch + TieredBlockCache: event-clock queue semantics,
+tier invariants, occupancy pricing, and the bit-identical guarantee of
+the async + tiered search path (PR 2)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.iostats import IOStats, NVME_SEGMENT
+from repro.core.params import CacheParams
+from repro.core.search import anns
+from repro.io import (AsyncFetchQueue, BlockCache, CachedBlockStore,
+                      TieredBlockCache, cached_view, make_cached_store)
+from repro.io.async_fetch import SERVICE_TICKS
+
+KB = 1024
+
+
+def _wrap(seg, cp: CacheParams, **kw):
+    return cached_view(seg.view, seg.graph, cp, **kw)
+
+
+# ------------------------------------------------------- AsyncFetchQueue
+
+def test_queue_submit_wait_delivers_in_completion_order():
+    # jitter forces completion order 2, 1, 3 regardless of submit order
+    jit = {1: 10.0, 2: 0.0, 3: 20.0}
+    q = AsyncFetchQueue(depth=4, jitter_fn=lambda b: jit[b])
+    t1, o1 = q.submit(1, "demand")
+    t2, o2 = q.submit(2)
+    t3, o3 = q.submit(3)
+    assert (o1, o2, o3) == (1, 2, 3)
+    assert q.inflight_peak == 3
+    done = q.wait(t3)
+    assert [t.block for t in done] == [2, 1, 3]
+    # 2 overtook 1 (and 1 overtook nothing still outstanding at its turn)
+    assert done[0].reordered and q.reorders >= 1
+    assert len(q) == 0 and q.delivered == 3
+
+
+def test_queue_dedups_inflight_and_prices_residual():
+    q = AsyncFetchQueue(depth=4, jitter_fn=lambda b: 0.0)
+    t, _ = q.submit(7, "demand")
+    assert q.in_flight(7) and q.get(7) is t
+    with pytest.raises(ValueError):
+        q.submit(7)                      # joins must go through get()
+    r = t.residual(q.clock)
+    assert 0.0 < r <= 1.0                # service still outstanding
+    q.wait(t)
+    assert t.residual(q.clock) == 0.0    # delivered → nothing left to wait
+
+def test_queue_depth_bounds_inflight():
+    q = AsyncFetchQueue(depth=2, jitter_fn=lambda b: 0.0)
+    q.submit(1)
+    q.submit(2)
+    assert q.free_slots == 0
+    with pytest.raises(ValueError):
+        q.submit(3)
+    q.wait_any()                         # make room
+    assert q.free_slots >= 1
+    q.submit(3)
+    assert q.inflight_peak == 2
+
+
+def test_queue_drain_empties():
+    q = AsyncFetchQueue(depth=8)
+    for b in range(5):
+        q.submit(b)
+    out = q.drain()
+    assert sorted(t.block for t in out) == list(range(5))
+    assert len(q) == 0
+
+
+# ------------------------------------------------------ TieredBlockCache
+
+def test_tier2_admit_on_tier1_evict():
+    c = TieredBlockCache(tier1_bytes=2 * KB, tier2_bytes=KB,
+                         block_bytes=KB, compression=16)
+    c.admit(1)
+    c.admit(2)
+    c.admit(3)                           # evicts 1 from t1 → demotes to t2
+    assert 1 in c.tier2 and 1 not in c.tier1
+    assert c.lookup_tier(2) == 1 and c.lookup_tier(3) == 1
+    assert c.tier2_admits >= 1
+
+
+def test_tier2_hit_promotes_to_tier1():
+    c = TieredBlockCache(tier1_bytes=2 * KB, tier2_bytes=KB,
+                         block_bytes=KB, compression=16)
+    for b in (1, 2, 3):
+        c.admit(b)
+    assert c.lookup_tier(1) == 2         # summary hit
+    assert 1 in c.tier1 and 1 not in c.tier2
+    assert c.tier2_promotions == 1
+    # the promotion displaced a t1 resident into t2
+    assert len(c.tier1) <= c.tier1.capacity_blocks
+
+
+def test_tier2_capacity_is_compressed():
+    c = TieredBlockCache(tier1_bytes=KB, tier2_bytes=KB,
+                         block_bytes=KB, compression=16)
+    assert c.tier2.capacity_blocks == 16 * c.tier1.capacity_blocks
+    assert c.memory_bytes() == 2 * KB    # Eq. 10: both budgets reserved
+
+
+def test_tiered_pinned_never_evicted():
+    c = TieredBlockCache(tier1_bytes=2 * KB, tier2_bytes=KB,
+                         block_bytes=KB, pinned=[42])
+    for b in range(60):
+        c.lookup_tier(b)
+        c.admit(b)
+    assert 42 in c.tier1
+    assert len(c.tier1) <= c.tier1.capacity_blocks
+    assert len(c.tier2) <= c.tier2.capacity_blocks
+
+
+def test_block_never_resident_in_both_tiers():
+    c = TieredBlockCache(tier1_bytes=2 * KB, tier2_bytes=2 * KB,
+                         block_bytes=KB, compression=2)
+    for b in (1, 2, 3, 4, 1, 2, 5):      # mix of misses, hits, promotions
+        c.lookup_tier(b)
+        c.admit(b)
+    both = {b for b in range(8) if b in c.tier1 and b in c.tier2}
+    assert both == set()
+
+
+# -------------------------------------------------- accounting + pricing
+
+def test_occupancy_pricing_amortizes_with_depth():
+    """Async speculative fetches: Σ1/o serial share — a deep queue
+    (small occ weight) must price below a shallow one (large weight)."""
+    base = dict(block_reads=10, cache_misses=10, io_round_trips=10,
+                queue_fetches=18)
+    shallow = IOStats(**base, queue_occ_weight=8.0)   # o ≈ 1
+    deep = IOStats(**base, queue_occ_weight=1.5)      # o ≈ 5–8
+    assert NVME_SEGMENT._io_time(deep) < NVME_SEGMENT._io_time(shallow)
+    # shallow degrades to (at most) the flat synchronous price
+    flat = IOStats(block_reads=10, cache_misses=10, io_round_trips=10,
+                   prefetched_blocks=8)
+    assert NVME_SEGMENT._io_time(shallow) == pytest.approx(
+        NVME_SEGMENT._io_time(flat))
+
+
+def test_tier2_hit_cheaper_than_miss_dearer_than_tier1():
+    cm = NVME_SEGMENT
+    t1 = IOStats(block_reads=1, cache_hits=1)
+    t2 = IOStats(block_reads=1, tier2_hits=1)
+    miss = IOStats(block_reads=1, cache_misses=1, io_round_trips=1)
+    assert (cm._io_time(t1) < cm._io_time(t2) < cm._io_time(miss))
+
+
+def test_join_prices_residual_not_full_trip():
+    cm = NVME_SEGMENT
+    join = IOStats(block_reads=1, cache_misses=1, inflight_joins=1,
+                   join_residual=0.5)
+    cold = IOStats(block_reads=1, cache_misses=1, io_round_trips=1)
+    assert cm._io_time(join) == pytest.approx(0.5 * cm.t_block_io)
+    assert cm._io_time(join) < cm._io_time(cold)
+
+
+def test_merge_maxes_inflight_peak_and_adds_async_counters():
+    a = IOStats(block_reads=2, cache_misses=2, io_round_trips=2,
+                inflight_peak=3, completion_reorders=1, tier2_hits=0,
+                queue_occ_weight=0.5)
+    b = IOStats(block_reads=1, tier2_hits=1, inflight_peak=5,
+                completion_reorders=2, queue_occ_weight=0.25)
+    a.merge(b)
+    assert a.inflight_peak == 5                      # max, not sum
+    assert a.completion_reorders == 3
+    assert a.queue_occ_weight == pytest.approx(0.75)
+    assert a.tier2_hits == 1
+    assert a.cache_hit_rate == pytest.approx(1 / 3)  # t2 counts as hit
+
+
+# --------------------------------------------- async search integration
+
+@pytest.fixture(scope="module")
+def async_view(small_segment):
+    return _wrap(small_segment,
+                 CacheParams(budget_frac=0.15, policy="lru",
+                             pin_fraction=0.25, prefetch_width=4,
+                             tier2_frac=0.25, queue_depth=8))
+
+
+def test_async_tiered_search_identical_to_uncached(async_view,
+                                                   small_segment,
+                                                   small_data):
+    _, q = small_data
+    p = small_segment.params.search
+    ids_u, dd_u, _ = anns(small_segment.view, q, 10, p)
+    ids_a, dd_a, _ = anns(async_view, q, 10, p)
+    np.testing.assert_array_equal(ids_u, ids_a)
+    np.testing.assert_allclose(dd_u, dd_a)
+
+
+def test_async_accounting_invariants(async_view, small_segment,
+                                     small_data):
+    _, q = small_data
+    _, _, stats = anns(async_view, q, 10, small_segment.params.search)
+    merged = IOStats()
+    for s in stats:
+        assert s.block_reads == (s.cache_hits + s.tier2_hits
+                                 + s.cache_misses)
+        assert s.io_round_trips <= s.block_reads    # enforced in merge too
+        assert s.inflight_joins <= s.cache_misses
+        assert s.inflight_peak <= async_view.store.queue.depth
+        merged.merge(s)
+    assert merged.tier2_hits > 0
+    assert merged.queue_fetches > 0
+    assert 0.0 < merged.cache_hit_rate < 1.0
+
+
+def test_async_never_fetches_twice(small_segment, small_data):
+    """Eviction-free budget: every block goes to 'disk' at most once,
+    whether by demand submission or speculative in-flight fetch."""
+    _, q = small_data
+    view = _wrap(small_segment,
+                 CacheParams(budget_frac=1.0, prefetch_width=4,
+                             queue_depth=8),
+                 record_fetches=True)
+    anns(view, q, 10, small_segment.params.search)
+    view.store.queue.drain()
+    blocks = [b for _, b in view.store.fetch_log]
+    assert len(blocks) == len(set(blocks))
+    assert any(k == "prefetch" for k, _ in view.store.fetch_log)
+
+
+def test_cross_query_join_of_inflight_fetch(small_segment):
+    """The serving-plane dedup seam: a demand read of a block another
+    query left in flight joins the ticket — no new round trip."""
+    store = make_cached_store(small_segment.view.store,
+                              CacheParams(budget_frac=0.5,
+                                          prefetch_width=0,
+                                          queue_depth=8))
+    q = store.queue
+    # "another query's" speculation, submitted under the store's key
+    q.submit(11, kind="speculative", key=store._key(11), owner=store)
+    s = IOStats()
+    store.read_demand(11, s)
+    assert s.inflight_joins == 1 and s.io_round_trips == 0
+    assert s.cache_misses == 1           # it did miss the cache
+    assert 0.0 < s.join_residual <= 1.0
+    # block was admitted on delivery: a re-read is now a cache hit
+    s2 = IOStats()
+    store.read_demand(11, s2)
+    assert s2.cache_hits == 1
+
+
+def test_shared_queue_keeps_store_namespaces_apart(small_segment):
+    """Equal block ids of DIFFERENT backing stores must not conflate on
+    a shared queue: no bogus joins, and each store's fetch lands in its
+    own cache."""
+    base1 = small_segment.view.store
+    base2 = dataclasses.replace(base1)   # distinct store, same shapes
+    cp = CacheParams(budget_frac=0.5, prefetch_width=0, queue_depth=8)
+    s1 = make_cached_store(base1, cp, record_fetches=True)
+    s2 = make_cached_store(base2, cp, record_fetches=True)
+    s2.attach_queue(s1.queue)            # share one queue
+    q = s1.queue
+    q.submit(7, kind="speculative", key=s1._key(7), owner=s1)
+    st = IOStats()
+    s2.read_demand(7, st)                # other store's block 7
+    assert st.inflight_joins == 0        # different namespace: no join
+    assert st.io_round_trips == 1        # a real fetch of its own
+    # s2's demand wait advanced the clock past s1's earlier-submitted
+    # speculation: that ticket delivered into its OWNER's cache (the
+    # owner-aware delivery seam), never into s2's accounting as a join
+    assert 7 in s1.cache and 7 in s2.cache
+    s1_stats = IOStats()
+    s1.read_demand(7, s1_stats)          # its own copy: plain hit
+    assert s1_stats.cache_hits == 1 and s1_stats.io_round_trips == 0
+    # never-fetch-twice per store: block 7 went to disk once per store
+    assert s2.fetch_log == [("miss", 7)]
+
+
+def test_joined_ticket_admits_into_both_caches(small_segment):
+    """Two views over the SAME base dedup in flight — and the joiner
+    must end up with the block resident too, or it re-fetches."""
+    base = small_segment.view.store
+    cp = CacheParams(budget_frac=0.5, prefetch_width=0, queue_depth=8)
+    s1 = make_cached_store(base, cp)
+    s2 = make_cached_store(base, cp)
+    s2.attach_queue(s1.queue)
+    s1.queue.submit(5, kind="speculative", key=s1._key(5), owner=s1)
+    st = IOStats()
+    s2.read_demand(5, st)                # same base: genuine join
+    assert st.inflight_joins == 1 and st.io_round_trips == 0
+    assert 5 in s1.cache                 # submitter got its delivery
+    assert 5 in s2.cache                 # joiner admitted the payload
+    st2 = IOStats()
+    s2.read_demand(5, st2)
+    assert st2.cache_hits == 1           # no re-fetch
+
+
+def test_attach_queue_drains_private_inflight(small_segment):
+    """Replacing a store's private queue must deliver its outstanding
+    fetches, not orphan them (they'd be silently re-fetched later)."""
+    base = small_segment.view.store
+    cp = CacheParams(budget_frac=0.5, prefetch_width=0, queue_depth=8)
+    s = make_cached_store(base, cp, record_fetches=True)
+    old = s.queue
+    old.submit(3, kind="speculative", key=s._key(3), owner=s)
+    assert 3 not in s.cache              # still in flight
+    s.attach_queue(AsyncFetchQueue(depth=8))
+    assert len(old) == 0                 # drained...
+    assert 3 in s.cache                  # ...and delivered, not dropped
+    st = IOStats()
+    s.read_demand(3, st)                 # no re-fetch after the switch
+    assert st.cache_hits == 1 and st.io_round_trips == 0
+
+
+def test_fully_pinned_tier1_falls_back_to_tier2():
+    """A tier 1 with no evictable victim (all pinned) must summarize
+    fetched blocks into tier 2 instead of dropping them — the tier-2
+    budget is charged into Eq. 10 and must be usable."""
+    c = TieredBlockCache(tier1_bytes=2 * KB, tier2_bytes=4 * KB,
+                         block_bytes=KB, compression=4, pinned=[100, 101])
+    assert not c.tier1.can_admit(5)
+    c.admit(5)
+    assert 5 in c.tier2                  # not lost
+    assert c.lookup_tier(5) == 2         # served without a disk trip...
+    assert 5 in c.tier2 and 5 not in c.tier1   # ...and NOT promoted out
+    assert 100 in c.tier1 and 101 in c.tier1
+
+
+def test_shared_queue_across_servers(small_segment, small_data):
+    from repro.serving import (HostSegmentServer, QueryCoordinator,
+                               attach_shared_fetch_queue)
+    _, q = small_data
+    views = [_wrap(small_segment,
+                   CacheParams(budget_frac=0.2, prefetch_width=4,
+                               tier2_frac=0.25, queue_depth=8))
+             for _ in range(2)]
+    servers = [HostSegmentServer(view=v,
+                                 params=small_segment.params.search,
+                                 offset=off,
+                                 num_vectors=small_segment.num_vectors)
+               for v, off in zip(views, (0, small_segment.num_vectors))]
+    shared = attach_shared_fetch_queue(servers, depth=8)
+    assert all(s.view.store.queue is shared for s in servers)
+    coord = QueryCoordinator(servers)
+    _, _, stats = coord.search(q[:8], k=10)
+    assert shared.submitted > 0
+    assert stats["cache_hits"] + stats["cache_misses"] > 0
+    tot = IOStats()
+    for s in servers:
+        tot.merge(s.view.store.total)    # merge invariant across servers
+    assert tot.io_round_trips <= tot.block_reads
+
+
+# ---------------------------------------------- permutation determinism
+# (the hypothesis-driven generalizations live in test_io_props.py, which
+# skips wholesale when hypothesis is absent — these stay always-on)
+
+@pytest.mark.parametrize("salt", [0, 3, 7])
+def test_completion_permutations_leave_results_identical(
+        salt, small_segment, small_data):
+    """Different jitter seeds permute completion order (reorder counts
+    differ) but search ids/dists are bit-identical: delivery timing only
+    moves residency and counters, never payloads."""
+    _, q = small_data
+    p = small_segment.params.search
+    ids_u, dd_u, _ = anns(small_segment.view, q[:6], 10, p)
+    queue = AsyncFetchQueue(depth=8, jitter_salt=salt)
+    view = _wrap(small_segment,
+                 CacheParams(budget_frac=0.15, prefetch_width=4,
+                             tier2_frac=0.25, queue_depth=8),
+                 queue=queue)
+    ids, dd, _ = anns(view, q[:6], 10, p)
+    np.testing.assert_array_equal(ids_u, ids)
+    np.testing.assert_allclose(dd_u, dd)

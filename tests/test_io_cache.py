@@ -143,8 +143,11 @@ def test_prefetch_engine_targets_top_unvisited(small_segment):
     assert int(block_of[5]) not in t1        # visited candidate skipped
     t2 = eng.targets(Cand)                   # same query: nothing re-issued
     assert not set(t1) & set(t2)
-    eng.begin_query()
-    assert eng.issued == set()
+    # the engine is per-query by construction: a fresh engine (what
+    # block_search_query builds) starts with a clean issued set
+    fresh = PrefetchEngine(store, block_of)
+    assert fresh.issued == set()
+    assert set(fresh.targets(Cand)) == set(t1)
 
 
 # ----------------------------------------------------------- cost model
@@ -169,6 +172,39 @@ def test_coalesced_prefetch_cheaper_than_extra_trips():
     unbatched = ((s.cache_misses + s.prefetched_blocks)
                  * NVME_SEGMENT.t_block_io)
     assert batched < unbatched
+
+
+def test_speculative_only_trip_pays_full_first_block():
+    """A round trip with no demand miss — a cache hit whose prefetch
+    targets forced the trip — prices its first block at t_block_io:
+    the trip cannot be cheaper than the queue submission it models."""
+    cm = NVME_SEGMENT
+    s = IOStats(block_reads=1, cache_hits=1, io_round_trips=1,
+                prefetched_blocks=3)
+    want = (cm.t_cache_hit + cm.t_block_io + 2 * cm.t_batch_block)
+    assert cm._io_time(s) == pytest.approx(want)
+    # with a demand miss on the trip, the speculative blocks all ride
+    # at t_batch_block — the miss already paid the round trip
+    s2 = IOStats(block_reads=1, cache_misses=1, io_round_trips=1,
+                 prefetched_blocks=3)
+    want2 = cm.t_block_io + 3 * cm.t_batch_block
+    assert cm._io_time(s2) == pytest.approx(want2)
+
+
+def test_hit_plus_prefetch_issues_priced_trip(small_segment):
+    """End to end: read_demand on a HIT with prefetch targets issues one
+    round trip whose pricing includes a full t_block_io."""
+    store = make_cached_store(small_segment.view.store,
+                              CacheParams(budget_frac=1.0,
+                                          prefetch_width=4))
+    s = IOStats()
+    store.read_demand(3, s)                    # miss: admits block 3
+    s = IOStats()
+    store.read_demand(3, s, prefetch=[5, 7])   # hit + speculative trip
+    assert s.cache_hits == 1 and s.cache_misses == 0
+    assert s.io_round_trips == 1 and s.prefetched_blocks == 2
+    t = NVME_SEGMENT._io_time(s)
+    assert t >= NVME_SEGMENT.t_block_io       # first spec block full price
 
 
 # ----------------------------------------------- segment integration

@@ -1,0 +1,76 @@
+"""Property-style tests for the PR 2 async/tiered I/O subsystem.
+
+Guarded hypothesis import, matching test_layout/test_pq: the whole
+module skips when hypothesis is absent; the deterministic versions of
+these checks live in test_io_async.py and always run.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis; rest of the suite runs without")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.params import CacheParams
+from repro.core.search import anns
+from repro.io import AsyncFetchQueue, TieredBlockCache, cached_view
+
+KB = 1024
+
+
+@given(ops=st.lists(st.tuples(st.sampled_from(["admit", "lookup"]),
+                              st.integers(0, 40)),
+                    min_size=1, max_size=120),
+       t1_blocks=st.integers(1, 4), t2_blocks=st.integers(0, 8),
+       pinned=st.lists(st.integers(0, 40), max_size=2))
+@settings(max_examples=60, deadline=None)
+def test_tiered_cache_invariants_hold(ops, t1_blocks, t2_blocks, pinned):
+    """Under arbitrary admit/lookup interleavings: residency stays
+    within each tier's budget, pinned blocks never leave tier 1,
+    tier-1 evictions land in tier 2, and no block is resident in both
+    tiers at once."""
+    c = TieredBlockCache(tier1_bytes=t1_blocks * KB,
+                         tier2_bytes=t2_blocks * KB,
+                         block_bytes=KB, compression=16, pinned=pinned)
+    for op, b in ops:
+        was_t1_full = len(c.tier1) >= c.tier1.capacity_blocks
+        t1_before = set(c.tier1.resident)
+        if op == "admit":
+            c.admit(b)
+            if (was_t1_full and b not in t1_before
+                    and c.tier2.capacity_blocks > 0
+                    and c.tier1.capacity_blocks > 0):
+                evicted = t1_before - set(c.tier1.resident)
+                # tier-1 victims demote into tier 2 (may then be evicted
+                # from tier 2, but they must have been admitted)
+                assert all(v in c.tier2 or c.tier2.evictions > 0
+                           for v in evicted)
+        else:
+            c.lookup_tier(b)
+        assert len(c.tier1) <= c.tier1.capacity_blocks
+        assert len(c.tier2) <= c.tier2.capacity_blocks
+        assert c.resident_bytes() <= c.memory_bytes()
+        for pb in c.tier1.pinned:
+            assert pb in c.tier1
+        assert not (c.tier1.resident & c.tier2.resident)
+
+
+@given(salt=st.integers(0, 63))
+@settings(max_examples=10, deadline=None)
+def test_completion_order_permutations_bit_identical(salt, small_segment,
+                                                     small_data):
+    """Any completion-order permutation (jitter seed) leaves search
+    ids/dists bit-identical to the uncached oracle: delivery timing
+    moves residency and counters, never payloads."""
+    _, q = small_data
+    p = small_segment.params.search
+    ids_u, dd_u, _ = anns(small_segment.view, q[:4], 10, p)
+    queue = AsyncFetchQueue(depth=8, jitter_salt=salt)
+    view = cached_view(small_segment.view, small_segment.graph,
+                       CacheParams(budget_frac=0.15, prefetch_width=4,
+                                   tier2_frac=0.25, queue_depth=8),
+                       queue=queue)
+    ids, dd, _ = anns(view, q[:4], 10, p)
+    np.testing.assert_array_equal(ids_u, ids)
+    np.testing.assert_allclose(dd_u, dd)

@@ -9,6 +9,11 @@ import pytest
 from repro.configs import ARCH_IDS, SMOKE_CONFIGS
 from repro.models import lm
 
+# every test here jit-compiles a model family — ~3 min of the suite's
+# ~4.5, and none of it touches the Starling search/IO paths. Runs in
+# `make test` and the scheduled full CI lane; skipped by `make test-fast`.
+pytestmark = pytest.mark.slow
+
 
 def _batch(cfg, key, b=2, s=32):
     tokens = jax.random.randint(key, (b, s), 0, cfg.vocab_size)

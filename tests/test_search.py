@@ -7,7 +7,9 @@ import pytest
 
 from repro.core import baseline as B
 from repro.core import distances as D
-from repro.core.search import (anns, average_precision, range_search,
+from repro.core.iostats import IOStats
+from repro.core.search import (_CandidateSet, anns, average_precision,
+                               block_search_query, range_search,
                                recall_at_k)
 
 
@@ -70,6 +72,36 @@ def test_range_search_ap(small_segment, small_data):
             assert (dd <= radius + 1e-4).all()
     ap = average_precision(res, gt)
     assert ap >= 0.7
+
+
+def test_rs_resume_does_not_reexpand_blocks(small_segment, small_data):
+    """Regression (PR 2): the RS driver threads the ``expanded`` set
+    through resumes. Reseeding an already-expanded vertex (what §5.3
+    step 4 does with kicked vertices) must not re-read its block —
+    before the fix every round rebuilt ``expanded`` empty and
+    ``block_reads`` re-counted prior rounds' expansions."""
+    x, q = small_data
+    seg = small_segment
+    p = seg.params.search
+    st = IOStats()
+    C = _CandidateSet(p.candidate_size)
+    R, P, E = {}, [], set()
+    block_search_query(seg.view, q[0], k=1, p=p, cand=C, result=R,
+                       kicked=P, expanded=E, stats=st)
+    assert E, "first round expanded nothing"
+    reads_round1 = st.block_reads
+    # reseed every expanded vertex still in C as unvisited — exactly the
+    # state a kicked-then-reseeded vertex comes back in
+    reseeded = 0
+    for i, vid in enumerate(C.ids):
+        if vid in E and C.visited[i]:
+            C.visited[i] = False
+            reseeded += 1
+    assert reseeded > 0
+    block_search_query(seg.view, q[0], k=1, p=p, cand=C, result=R,
+                       kicked=P, expanded=E, stats=st)
+    assert st.block_reads == reads_round1, (
+        "resumed round re-read blocks of already-expanded vertices")
 
 
 def test_rs_cheaper_than_repeated_anns(small_segment, small_data):
