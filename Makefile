@@ -2,7 +2,7 @@
 
 PY ?= python
 
-.PHONY: test test-fast bench bench-io dev-deps
+.PHONY: test test-fast test-device bench bench-io bench-device dev-deps
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -13,6 +13,12 @@ test:
 test-fast:
 	PYTHONPATH=src $(PY) -m pytest -x -q -m "not slow"
 
+# interpret-mode device lane: the Pallas kernels + the non-compiling
+# device-search helpers (the CI device lane runs exactly this)
+test-device:
+	PYTHONPATH=src $(PY) -m pytest -x -q -m "not slow" \
+		tests/test_kernels.py tests/test_device_search.py
+
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run
 
@@ -21,6 +27,16 @@ bench-io:
 	PYTHONPATH=src $(PY) -m benchmarks.run --only io_prefetch_width_sweep
 	PYTHONPATH=src $(PY) -m benchmarks.run --only io_queue_depth_sweep
 	PYTHONPATH=src $(PY) -m benchmarks.run --only io_tier2_budget_sweep
+
+# the device sweeps: tier-0 VMEM budget (modeled DMA cut at matched
+# recall), fetch width, RS round restarts, kernel micro, roofline render
+bench-device:
+	PYTHONPATH=src $(PY) -m benchmarks.run --only device_vs_host
+	PYTHONPATH=src $(PY) -m benchmarks.run --only device_tier0_budget_sweep
+	PYTHONPATH=src $(PY) -m benchmarks.run --only starling_fetch_width
+	PYTHONPATH=src $(PY) -m benchmarks.run --only device_range_search_rounds
+	PYTHONPATH=src $(PY) -m benchmarks.run --only kernel_micro
+	PYTHONPATH=src $(PY) -m benchmarks.run --only roofline_tables
 
 dev-deps:
 	$(PY) -m pip install -r requirements-dev.txt

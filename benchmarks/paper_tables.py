@@ -226,9 +226,12 @@ def tab3_multi_segment():
     for s in range(3):
         x = clustered_vectors(1500, C.DIM, num_clusters=16, seed=10 + s)
         seg = build_segment(x, SEGMENT_BENCH)
+        from repro.serving.coordinator import SERVE_DEVICE_SEARCH
         all_servers.append(SegmentServer(
             segment=DS.from_segment(seg), offset=off,
-            num_vectors=x.shape[0], candidates=48))
+            num_vectors=x.shape[0],
+            params=dataclasses.replace(SERVE_DEVICE_SEARCH,
+                                       candidates=48)))
         xs.append(x)
         off += x.shape[0]
     # jit warm-up so wall time reflects steady state, not compilation

@@ -90,6 +90,25 @@ def render(path: str = DEFAULT, mesh: str = "pod16x16",
     return "\n".join(out)
 
 
+def roofline_tables():
+    """``benchmarks.run`` entry: render the roofline tables for every
+    production mesh into ``results/roofline_report.md``. Skips
+    gracefully when no dry-run records exist yet (the dry-run needs
+    ``repro.launch.dryrun`` to have populated ``results/dryrun.jsonl``
+    — it is not part of the default bench pass)."""
+    if not os.path.exists(DEFAULT):
+        print(f"skip: {os.path.normpath(DEFAULT)} not found — run "
+              "`python -m repro.launch.dryrun` first")
+        return
+    sections = [render(DEFAULT, mesh) for mesh in
+                ("pod16x16", "pod2x16x16")]
+    out_path = os.path.join(os.path.dirname(DEFAULT),
+                            "roofline_report.md")
+    with open(out_path, "w") as f:
+        f.write("\n\n".join(sections) + "\n")
+    print(f"wrote {os.path.normpath(out_path)}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--path", default=DEFAULT)

@@ -14,7 +14,8 @@ import sys
 import time
 import traceback
 
-from benchmarks import device_bench, io_bench, paper_tables
+from benchmarks import (device_bench, io_bench, paper_tables,
+                        roofline_report)
 
 BENCHES = [
     paper_tables.fig9_block_shuffling,
@@ -37,9 +38,12 @@ BENCHES = [
     io_bench.io_queue_depth_sweep,
     io_bench.io_tier2_budget_sweep,
     device_bench.device_vs_host,
+    device_bench.device_tier0_budget_sweep,
     device_bench.starling_fetch_width,
+    device_bench.device_range_search_rounds,
     device_bench.batched_beam_throughput,
     device_bench.kernel_micro,
+    roofline_report.roofline_tables,
 ]
 
 

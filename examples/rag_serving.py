@@ -15,8 +15,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.configs.starling_segment import SEGMENT_BENCH
+from repro.configs.starling_segment import SEGMENT_BENCH_DEVICE
 from repro.core import device_search as DS
+from repro.core.params import DeviceSearchParams
 from repro.core.segment import build_segment
 from repro.data.vectors import clustered_vectors
 from repro.models import lm
@@ -34,9 +35,10 @@ def main():
 
     # corpus embeddings at the LM's width; the segment indexes them
     corpus = clustered_vectors(2000, cfg.d_model, num_clusters=16, seed=0)
-    seg = build_segment(corpus, SEGMENT_BENCH)
-    ds = DS.from_segment(seg)
-    print(f"segment ready: OR(G)={seg.overlap_ratio:.3f}")
+    seg = build_segment(corpus, SEGMENT_BENCH_DEVICE)
+    ds = DS.from_segment(seg)       # packs the tier-0 VMEM hot set
+    print(f"segment ready: OR(G)={seg.overlap_ratio:.3f} "
+          f"tier0={DS.tier0_bytes(ds)}B")
 
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     b, prompt_len, max_len = 2, 8, 8 + args.gen
@@ -45,7 +47,7 @@ def main():
     logits, cache = lm.prefill(cfg, params, prompt, max_len)
     tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
 
-    total_io = 0
+    total_io = total_t0 = 0
     for step in range(args.gen - 1):
         logits, cache = lm.decode_step(cfg, params, cache, tok)
         # every few tokens, embed the hidden query (here: the pre-logit
@@ -54,15 +56,19 @@ def main():
         if (step + 1) % args.retrieve_every == 0:
             q = np.asarray(
                 params["embed"])[np.asarray(tok[:, 0])].astype(np.float32)
-            ids, dists, io, _ = DS.device_anns(
-                ds, jnp.asarray(q), k=4, candidates=32, max_hops=64)
-            total_io += int(np.asarray(io).sum())
+            r = DS.device_anns(
+                ds, jnp.asarray(q),
+                DeviceSearchParams(k=4, candidates=32, max_hops=64))
+            total_io += int(np.asarray(r.io).sum())
+            total_t0 += int(np.asarray(r.tier0_hits).sum())
             print(f"  step {step+1}: retrieved ctx ids "
-                  f"{np.asarray(ids)[0].tolist()} "
-                  f"(block reads {np.asarray(io).tolist()})")
+                  f"{np.asarray(r.ids)[0].tolist()} "
+                  f"(cold DMAs {np.asarray(r.io).tolist()}, "
+                  f"tier-0 hits {np.asarray(r.tier0_hits).tolist()})")
         tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    print(f"decoded {args.gen} tokens x {b} seqs; "
-          f"total retrieval block reads: {total_io}")
+    print(f"decoded {args.gen} tokens x {b} seqs; total retrieval "
+          f"block touches: {total_io + total_t0} "
+          f"({total_io} cold DMAs + {total_t0} tier-0 hits)")
 
 
 if __name__ == "__main__":

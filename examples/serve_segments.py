@@ -5,6 +5,7 @@ batched while_loop) search path.
 
   PYTHONPATH=src python examples/serve_segments.py
 """
+import dataclasses
 import sys
 import time
 
@@ -19,6 +20,7 @@ from repro.core.search import recall_at_k
 from repro.core.segment import build_segment
 from repro.data.vectors import clustered_vectors, query_set
 from repro.serving import QueryCoordinator, RequestBatcher, SegmentServer
+from repro.serving.coordinator import SERVE_DEVICE_SEARCH
 
 
 def main():
@@ -29,9 +31,10 @@ def main():
         x = clustered_vectors(n_per, dim, num_clusters=16, seed=s)
         print(f"building segment {s} ({n_per} vectors) ...")
         seg = build_segment(x, SEGMENT_BENCH)
-        servers.append(SegmentServer(segment=DS.from_segment(seg),
-                                     offset=off, num_vectors=n_per,
-                                     candidates=48))
+        servers.append(SegmentServer(
+            segment=DS.from_segment(seg), offset=off, num_vectors=n_per,
+            params=dataclasses.replace(SERVE_DEVICE_SEARCH,
+                                       candidates=48)))
         xs.append(x)
         off += n_per
     union = np.concatenate(xs, axis=0)

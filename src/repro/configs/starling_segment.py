@@ -10,9 +10,9 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core.params import (CacheParams, GraphParams, LayoutParams,
-                               NavGraphParams, PQParams, SearchParams,
-                               SegmentParams)
+from repro.core.params import (CacheParams, DeviceSearchParams,
+                               GraphParams, LayoutParams, NavGraphParams,
+                               PQParams, SearchParams, SegmentParams)
 
 # container-scale segment used by benchmarks: same knob values as the
 # paper's BIGANN column wherever scale-independent (σ=0.3, φ=0.5, β=8,
@@ -56,6 +56,24 @@ SEGMENT_BENCH_ASYNC = dataclasses.replace(
                       prefetch_width=4, tier2_frac=0.25,
                       tier2_compression=16, queue_depth=8),
 )
+
+# the device deployment: the SAME segment with the tier-0 VMEM hot-tile
+# pack budgeted at 10% of the block file (selected from the shared
+# repro.io.hotset ranking; exact copies, so results stay bit-identical
+# to the uncached device path) and charged into Eq. 10 as C_tier0.
+# device_bench.py sweeps the tier-0 budget around this point.
+SEGMENT_BENCH_DEVICE = dataclasses.replace(
+    SEGMENT_BENCH,
+    cache=CacheParams(tier0_frac=0.10),
+)
+
+# the batched device-search knobs the benchmarks/serving dry-runs use:
+# the bench segment's Γ, paper σ, deep safety valve. DEVICE_SEARCH_WIDE
+# adds 2-wide DMA fetch (EXPERIMENTS §Perf cell 3 — fewer round trips,
+# same recall).
+DEVICE_SEARCH_BENCH = DeviceSearchParams(candidates=48, max_hops=256)
+DEVICE_SEARCH_WIDE = dataclasses.replace(DEVICE_SEARCH_BENCH,
+                                         fetch_width=2)
 
 # the paper's full-size per-dataset index parameters (Tab. 16): used by
 # the byte-accounting tests (γ, ε, ρ must reproduce Example 2 exactly)

@@ -4,13 +4,25 @@ The host implementation (``core/search.py``) is the per-query oracle; this
 module is the batched, jit'd production path:
 
   * one ``lax.while_loop`` over hops for a whole query batch;
-  * each hop gathers one block tile per query (the HBM->VMEM DMA that
-    models one 4 KB disk read), exact-ranks all resident vertices
-    (the ``block_topk`` kernel semantics), expands the sigma-pruned best
-    residents, and routes new candidates by memory-resident PQ-ADC;
+  * each hop runs the pluggable *fetch stage*: probe the tier-0 VMEM
+    hot-tile pack first (a hit serves the block without the HBM->VMEM
+    DMA that models one 4 KB disk read; counted in ``tier0_hits``),
+    gather cold blocks from HBM exactly as the uncached path would
+    (counted in ``io``), exact-rank all resident vertices (the fused
+    ``tier0_fetch`` kernel), expand the sigma-pruned best residents,
+    and route new candidates by memory-resident PQ-ADC;
   * entry points come from an in-memory navigation-graph beam search;
-  * per-query block-DMA counters are carried exactly (the paper's
-    "mean I/Os").
+  * per-query DMA / tier-0-hit / round-trip counters are carried
+    exactly (the paper's "mean I/Os" splits across the hierarchy).
+
+Tier 0 (DESIGN.md §3): ``DeviceSegment`` carries a packed copy of the
+hottest blocks — selected at build time from the same
+``repro.io.hotset`` ranking that pins the host tier-1 cache — plus a
+block->hot-slot index map. The pack holds exact copies, so tier-0
+budget never changes (ids, dists); it only moves block touches from
+the DMA counter to the tier-0 counter. Its bytes charge into the
+Eq. 10 segment budget (``CacheParams.tier0_*``,
+``SegmentBudget.tier0_vmem_bytes``).
 
 Distribution (``make_search_step``): segment-parallel over the ``model``
 mesh axis (each rank owns an independent sub-segment, Fig. 1(b)),
@@ -22,11 +34,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.params import DeviceSearchParams
 
 Tree = dict
 
@@ -34,7 +48,13 @@ Tree = dict
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class DeviceSegment:
-    """One segment shard, fully device-resident."""
+    """One segment shard, fully device-resident.
+
+    ``hot_*`` is the tier-0 hot-tile pack: exact copies of the ``H``
+    most-traversed blocks (``repro.io.hotset`` ranking), VMEM-resident
+    in the TPU regime; ``hot_slot_of[b]`` maps block -> hot slot (-1 =
+    cold). ``H >= 1`` always — a disabled tier 0 is one zeroed sentinel
+    slot that ``hot_slot_of`` never points at."""
     vecs: jnp.ndarray          # [rho, eps, D]
     vid: jnp.ndarray           # [rho, eps] i32 (-1 pad)
     deg: jnp.ndarray           # [rho, eps] i32
@@ -46,12 +66,77 @@ class DeviceSegment:
     nav_adj: jnp.ndarray       # [n', deg'] i32 (-1 pad)
     nav_ids: jnp.ndarray       # [n'] i32 global ids
     nav_entry: jnp.ndarray     # scalar i32 (nav-local)
+    hot_vecs: jnp.ndarray      # [H, eps, D] tier-0 packed tiles
+    hot_vid: jnp.ndarray       # [H, eps] i32
+    hot_nbrs: jnp.ndarray      # [H, eps, Lam] i32
+    hot_slot_of: jnp.ndarray   # [rho] i32 block -> hot slot (-1 = cold)
 
 
-def from_segment(seg) -> DeviceSegment:
-    """Host ``Segment`` -> device arrays."""
+class DeviceSearchResult(NamedTuple):
+    """Per-query outputs of ``device_anns``."""
+    ids: jnp.ndarray           # [Q, k]
+    dists: jnp.ndarray         # [Q, k]
+    io: jnp.ndarray            # [Q] cold block DMAs (HBM round trips)
+    hops: jnp.ndarray          # [Q] DMA round trips (fetch_width blocks each)
+    tier0_hits: jnp.ndarray    # [Q] block touches served by the VMEM pack
+
+
+class DeviceRangeResult(NamedTuple):
+    """Per-query outputs of ``device_range_search``."""
+    ids: jnp.ndarray           # [Q, k_cap]
+    dists: jnp.ndarray         # [Q, k_cap]
+    in_range: jnp.ndarray      # [Q, k_cap] bool
+    io: jnp.ndarray            # [Q] cold block DMAs across all rounds
+    tier0_hits: jnp.ndarray    # [Q] tier-0 hits across all rounds
+
+
+def _tier0_pack(seg, num_blocks: int):
+    """Select + pack the tier-0 hot set (host side, build time)."""
+    from repro.io import hotset
+
+    v = seg.view
+    vecs = np.asarray(v.store.vecs)
+    vid = np.asarray(v.store.vid)
+    meta = np.asarray(v.store.meta)
+    rho, eps = vid.shape
+    hot: list = []
+    if num_blocks > 0:
+        ranking = hotset.hot_block_ranking(
+            v.layout.block_of, seg.graph.adj, seg.graph.deg,
+            hotset.view_seed_ids(v))
+        hot = hotset.fill_to(ranking, num_blocks, rho)
+    slot_of = np.full(rho, -1, np.int32)
+    if hot:
+        hb = np.asarray(hot, np.int64)
+        slot_of[hb] = np.arange(len(hot), dtype=np.int32)
+        return (vecs[hb], vid[hb], meta[hb, :, 1:], slot_of)
+    # sentinel pack: one zeroed slot the map never points at
+    return (np.zeros((1,) + vecs.shape[1:], vecs.dtype),
+            np.full((1, eps), -1, vid.dtype),
+            np.full((1, eps, meta.shape[2] - 1), -1, meta.dtype),
+            slot_of)
+
+
+def from_segment(seg, tier0_blocks: Optional[int] = None,
+                 tier0_frac: Optional[float] = None) -> DeviceSegment:
+    """Host ``Segment`` -> device arrays.
+
+    The tier-0 hot-tile budget comes from, in precedence order:
+    ``tier0_blocks`` (explicit block count), ``tier0_frac`` (fraction
+    of the block file), else ``seg.params.cache`` (the Eq. 10-charged
+    configuration). Budget 0 packs the sentinel slot only — the search
+    is then bit-identical to the seed's uncached device path *and* to
+    any budgeted pack (the pack holds exact copies)."""
     v = seg.view
     nav = v.nav
+    if tier0_blocks is None:
+        block_bytes = max(int(v.store.block_kb * 1024), 1)
+        if tier0_frac is not None:
+            tier0_blocks = int(tier0_frac * v.store.num_blocks)
+        else:
+            tier0_blocks = (seg.params.cache.resolve_tier0_budget(
+                v.store.disk_bytes()) // block_bytes)
+    hot_vecs, hot_vid, hot_nbrs, slot_of = _tier0_pack(seg, tier0_blocks)
     return DeviceSegment(
         vecs=jnp.asarray(v.store.vecs),
         vid=jnp.asarray(v.store.vid),
@@ -64,7 +149,22 @@ def from_segment(seg) -> DeviceSegment:
         nav_adj=jnp.asarray(nav.graph.adj),
         nav_ids=jnp.asarray(nav.sample_ids),
         nav_entry=jnp.asarray(nav.graph.entry, jnp.int32),
+        hot_vecs=jnp.asarray(hot_vecs),
+        hot_vid=jnp.asarray(hot_vid, jnp.int32),
+        hot_nbrs=jnp.asarray(hot_nbrs, jnp.int32),
+        hot_slot_of=jnp.asarray(slot_of, jnp.int32),
     )
+
+
+def tier0_bytes(ds: DeviceSegment) -> int:
+    """Bytes the hot-tile pack reserves on device (0 when disabled) —
+    the C_tier0 the Eq. 10 accounting charges."""
+    packed = int((np.asarray(ds.hot_slot_of) >= 0).sum())
+    if packed == 0:
+        return 0
+    per_block = (ds.hot_vecs.nbytes + ds.hot_vid.nbytes
+                 + ds.hot_nbrs.nbytes) // ds.hot_vecs.shape[0]
+    return packed * int(per_block)
 
 
 # ------------------------------------------------------------- utilities
@@ -191,56 +291,64 @@ def nav_entry_points(ds: DeviceSegment, queries: jnp.ndarray,
 
 # ------------------------------------------------------ main block search
 
-@functools.partial(jax.jit, static_argnames=(
-    "k", "candidates", "sigma", "max_hops", "metric", "nav_beam",
-    "nav_hops", "entry_points", "fetch_width"))
-def device_anns(ds: DeviceSegment, queries: jnp.ndarray, k: int = 10,
-                candidates: int = 64, sigma: float = 0.3,
-                max_hops: int = 256, metric: str = "l2",
-                nav_beam: int = 8, nav_hops: int = 12,
-                entry_points: int = 4, fetch_width: int = 1):
-    """Batched Starling ANNS on one segment shard.
+def _fetch_stage(ds: DeviceSegment, queries: jnp.ndarray, b: jnp.ndarray,
+                 metric: str, impl: str):
+    """Pluggable fetch stage (DR): probe tier 0, serve hot blocks from
+    the VMEM pack, gather cold blocks via the modeled HBM DMA, and
+    exact-rank the gathered tiles.
 
-    ``fetch_width`` > 1 fetches the F best unvisited candidates' blocks
-    per round-trip (beyond-paper: the paper's Central Assumption notes a
-    few random reads per SSD/DMA round-trip cost about the same as one —
-    this trades block-bandwidth for round-trip latency).
+    b [Q, F] block ids -> (vid [Q, F*eps], nbrs [Q, F*eps, Lam],
+    dists [Q, F*eps], hot [Q, F]). ``impl='fused'`` ranks through the
+    ``tier0_fetch`` Pallas kernel; ``'jnp'`` is the pure-jnp reference —
+    both bit-identical (same gather sources, same f32 distance form)."""
+    from repro import kernels as K
 
-    Returns (ids [Q, k], dists [Q, k], io [Q] block reads,
-    hops [Q] round trips)."""
-    qn, d = queries.shape
-    rho, eps = ds.vid.shape
-    n = ds.block_of.shape[0]
-    nb_words = -(-n // 32)
+    qn, fw = b.shape
+    eps = ds.vid.shape[1]
+    slot = ds.hot_slot_of[b]                              # [Q, F] probe
+    hot = slot >= 0
+    s_safe = jnp.maximum(slot, 0)
+    # block metadata rides the same tier the payload came from (the
+    # pack holds exact copies, so values are identical either way)
+    vid = jnp.where(hot[:, :, None], ds.hot_vid[s_safe], ds.vid[b])
+    nbrs = jnp.where(hot[:, :, None, None], ds.hot_nbrs[s_safe],
+                     ds.nbrs[b])
+    if impl == "fused":
+        dd, hit = K.tier0_rank(queries, b, ds.hot_slot_of, ds.hot_vecs,
+                               ds.vecs, metric=metric)
+        hot = hit.astype(bool)
+    else:
+        vecs = jnp.where(hot[:, :, None, None], ds.hot_vecs[s_safe],
+                         ds.vecs[b])
+        dd = _dists(queries, vecs.reshape(qn, fw * eps, -1), metric)
+    return (vid.reshape(qn, fw * eps),
+            nbrs.reshape(qn, fw * eps, -1), dd, hot)
+
+
+def _block_search_loop(ds: DeviceSegment, queries: jnp.ndarray, lut,
+                       state, *, res_size: int, candidates: int,
+                       sigma: float, max_hops: int, metric: str,
+                       fetch_width: int, fetch_impl: str):
+    """The batched best-first block search from a given carried state.
+
+    ``state`` = (cand_id, cand_key, visited, res_id, res_key, io, t0,
+    hops); the range-search driver re-enters with the previous round's
+    ``visited``/result arrays so already-expanded vertices are never
+    re-fetched (PR 2's host RS resume fix, device formulation)."""
+    qn = queries.shape[0]
+    eps = ds.vid.shape[1]
     fw = max(fetch_width, 1)
-    res_size = k + 2 * eps * fw
     n_expand = fw * (1 + max(int(np.ceil((eps - 1) * sigma)), 0))
-    queries = queries.astype(jnp.float32)
 
-    lut = _adc_lut(queries, ds.pq_cent, metric)              # [Q, M, K]
-    entry = nav_entry_points(ds, queries, beam=nav_beam, hops=nav_hops,
-                             num=entry_points, metric=metric)
-    e_codes = ds.pq_codes[jnp.maximum(entry, 0)]
-    e_key = jnp.where(entry >= 0, _adc(lut, e_codes), jnp.inf)
-
-    cand_id = jnp.full((qn, candidates), -1, jnp.int32)
-    cand_key = jnp.full((qn, candidates), jnp.inf)
-    cand_key, cand_id = _merge_top(cand_key, cand_id, e_key, entry,
-                                   candidates)
-    visited = jnp.zeros((qn, nb_words), jnp.uint32)          # expanded set
-    res_id = jnp.full((qn, res_size), -1, jnp.int32)
-    res_key = jnp.full((qn, res_size), jnp.inf)
-    io = jnp.zeros((qn,), jnp.int32)
-    hops = jnp.zeros((qn,), jnp.int32)
-
-    def cond(state):
-        cand_id, cand_key, visited, res_id, res_key, io, hops, t = state
+    def cond(st):
+        cand_id, cand_key, visited, *_, t = st
         vis = _bit_get(visited, jnp.maximum(cand_id, 0)) | (cand_id < 0)
         live = jnp.isfinite(jnp.where(vis, jnp.inf, cand_key)).any()
         return live & (t < max_hops)
 
-    def body(state):
-        cand_id, cand_key, visited, res_id, res_key, io, hops, t = state
+    def body(st):
+        (cand_id, cand_key, visited, res_id, res_key, io, t0, hops,
+         t) = st
         vis = _bit_get(visited, jnp.maximum(cand_id, 0)) | (cand_id < 0)
         open_key = jnp.where(vis, jnp.inf, cand_key)
         neg_top, picks = jax.lax.top_k(-open_key, fw)        # [Q, F]
@@ -250,16 +358,18 @@ def device_anns(ds: DeviceSegment, queries: jnp.ndarray, k: int = 10,
         u = jnp.where(f_active, u, -1)
         u_safe = jnp.maximum(u, 0)
 
-        # --- DR: F block DMAs per round trip (one per active candidate)
+        # --- DR fetch stage: tier-0 probe, then F block gathers per
+        # round trip (hot slots skip the DMA counter)
         b = ds.block_of[u_safe]                              # [Q, F]
-        vid = ds.vid[b].reshape(qn, fw * eps)                # [Q, F*eps]
-        vecs = ds.vecs[b].reshape(qn, fw * eps, -1)
-        nbrs = ds.nbrs[b].reshape(qn, fw * eps, -1)
-        io = io + f_active.sum(axis=1).astype(jnp.int32)
+        vid, nbrs, dd, hot = _fetch_stage(ds, queries, b, metric,
+                                          fetch_impl)
+        hot = hot & f_active
+        cold = f_active & ~hot
+        io = io + cold.sum(axis=1).astype(jnp.int32)
+        t0 = t0 + hot.sum(axis=1).astype(jnp.int32)
         hops = hops + active.astype(jnp.int32)               # round trips
 
-        # --- DC: exact-rank all residents; fold into results
-        dd = _dists(queries, vecs, metric)                   # [Q, F*eps]
+        # --- DC: fold the exact-ranked residents into results
         f_valid = jnp.repeat(f_active, eps, axis=1)
         slot_valid = (vid >= 0) & f_valid
         dd_m = jnp.where(slot_valid, dd, jnp.inf)
@@ -293,14 +403,64 @@ def device_anns(ds: DeviceSegment, queries: jnp.ndarray, k: int = 10,
         f_id = jnp.where(f_valid, flat, -1)
         cand_key, cand_id = _merge_top(cand_key, cand_id, f_key, f_id,
                                        candidates)
-        return (cand_id, cand_key, visited, res_id, res_key, io, hops,
-                t + 1)
+        return (cand_id, cand_key, visited, res_id, res_key, io, t0,
+                hops, t + 1)
 
-    state = (cand_id, cand_key, visited, res_id, res_key, io, hops,
+    return jax.lax.while_loop(cond, body, state)
+
+
+DEFAULT_DEVICE_SEARCH = DeviceSearchParams()
+
+
+@functools.partial(jax.jit, static_argnames=("p", "metric"))
+def device_anns(ds: DeviceSegment, queries: jnp.ndarray,
+                p: DeviceSearchParams = DEFAULT_DEVICE_SEARCH,
+                metric: str = "l2") -> DeviceSearchResult:
+    """Batched Starling ANNS on one segment shard.
+
+    ``p.fetch_width`` > 1 fetches the F best unvisited candidates'
+    blocks per round-trip (beyond-paper: the paper's Central Assumption
+    notes a few random reads per SSD/DMA round-trip cost about the same
+    as one — this trades block-bandwidth for round-trip latency).
+
+    Returns ``DeviceSearchResult(ids [Q, k], dists [Q, k], io [Q] cold
+    block DMAs, hops [Q] round trips, tier0_hits [Q])``. Tier-0 budget
+    moves touches from ``io`` to ``tier0_hits`` without changing
+    (ids, dists) — asserted in tests and the device_bench sweep."""
+    qn, d = queries.shape
+    eps = ds.vid.shape[1]
+    n = ds.block_of.shape[0]
+    nb_words = -(-n // 32)
+    fw = max(p.fetch_width, 1)
+    res_size = p.k + 2 * eps * fw
+    queries = queries.astype(jnp.float32)
+
+    lut = _adc_lut(queries, ds.pq_cent, metric)              # [Q, M, K]
+    entry = nav_entry_points(ds, queries, beam=p.nav_beam,
+                             hops=p.nav_hops, num=p.entry_points,
+                             metric=metric)
+    e_codes = ds.pq_codes[jnp.maximum(entry, 0)]
+    e_key = jnp.where(entry >= 0, _adc(lut, e_codes), jnp.inf)
+
+    cand_id = jnp.full((qn, p.candidates), -1, jnp.int32)
+    cand_key = jnp.full((qn, p.candidates), jnp.inf)
+    cand_key, cand_id = _merge_top(cand_key, cand_id, e_key, entry,
+                                   p.candidates)
+    state = (cand_id, cand_key,
+             jnp.zeros((qn, nb_words), jnp.uint32),          # expanded set
+             jnp.full((qn, res_size), -1, jnp.int32),
+             jnp.full((qn, res_size), jnp.inf),
+             jnp.zeros((qn,), jnp.int32),                    # io
+             jnp.zeros((qn,), jnp.int32),                    # tier-0 hits
+             jnp.zeros((qn,), jnp.int32),                    # hops
              jnp.zeros((), jnp.int32))
-    state = jax.lax.while_loop(cond, body, state)
-    _, _, _, res_id, res_key, io, hops, _ = state
-    return res_id[:, :k], res_key[:, :k], io, hops
+    state = _block_search_loop(
+        ds, queries, lut, state, res_size=res_size,
+        candidates=p.candidates, sigma=p.sigma, max_hops=p.max_hops,
+        metric=metric, fetch_width=fw, fetch_impl=p.fetch_impl)
+    _, _, _, res_id, res_key, io, t0, hops, _ = state
+    return DeviceSearchResult(res_id[:, : p.k], res_key[:, : p.k], io,
+                              hops, t0)
 
 
 # --------------------------------------------- production mesh search step
@@ -310,7 +470,7 @@ def make_search_step(mesh, rules, *,
                      eps: int = 16, lam: int = 31, q_global: int = 4096,
                      pq_m: int = 16, pq_k: int = 256,
                      nav_frac: int = 64, nav_deg: int = 12,
-                     k: int = 10):
+                     search: Optional[DeviceSearchParams] = None):
     """Build (fn, arg ShapeDtypeStructs) for the segment-search dry-run.
 
     Layout: every ``model`` rank owns an independent sub-segment of
@@ -319,13 +479,25 @@ def make_search_step(mesh, rules, *,
     and replicated over ``model``. The step runs the local block search
     via shard_map and merges per-segment top-k with one all-gather over
     ``model``.
-    """
-    from jax.sharding import NamedSharding, PartitionSpec as P
-    from jax import shard_map
 
+    ``search`` carries every online knob (today's production defaults
+    when omitted): Γ, σ, fetch width, nav beam — and the tier-0 budget,
+    which sizes the per-rank hot-tile pack in the argument specs. The
+    step returns (gid, dists, io, hops, tier0_hits); the per-rank
+    io/hops/tier-0 columns land in the ``(data, model)``-sharded
+    outputs."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    try:
+        from jax import shard_map
+    except ImportError:                    # older jax releases
+        from jax.experimental.shard_map import shard_map
+
+    if search is None:
+        search = DeviceSearchParams(candidates=64, max_hops=128)
     model_n = mesh.shape["model"]
     data_axes = tuple(a for a in mesh.axis_names if a != "model")
     rho = n_local // eps
+    hot_n = max(int(search.tier0_frac * rho), 1)
     nav_n = n_local // nav_frac
     dsub = dim // pq_m
 
@@ -345,6 +517,11 @@ def make_search_step(mesh, rules, *,
         nav_adj=sds((model_n, nav_n, nav_deg), jnp.int32, P("model")),
         nav_ids=sds((model_n, nav_n), jnp.int32, P("model")),
         nav_entry=sds((model_n,), jnp.int32, P("model")),
+        hot_vecs=sds((model_n, hot_n, eps, dim), jnp.bfloat16,
+                     P("model")),
+        hot_vid=sds((model_n, hot_n, eps), jnp.int32, P("model")),
+        hot_nbrs=sds((model_n, hot_n, eps, lam), jnp.int32, P("model")),
+        hot_slot_of=sds((model_n, rho), jnp.int32, P("model")),
     )
     q_specs = sds((q_global, dim), jnp.float32, P(data_axes))
 
@@ -352,71 +529,121 @@ def make_search_step(mesh, rules, *,
         vecs=P("model"), vid=P("model"), deg=P("model"), nbrs=P("model"),
         block_of=P("model"), pq_codes=P("model"), pq_cent=P("model"),
         nav_vecs=P("model"), nav_adj=P("model"), nav_ids=P("model"),
-        nav_entry=P("model")), P(data_axes))
-    out_specs = (P(data_axes), P(data_axes), P(data_axes, "model"))
+        nav_entry=P("model"), hot_vecs=P("model"), hot_vid=P("model"),
+        hot_nbrs=P("model"), hot_slot_of=P("model")), P(data_axes))
+    out_specs = (P(data_axes), P(data_axes), P(data_axes, "model"),
+                 P(data_axes, "model"), P(data_axes, "model"))
 
     def local_search(seg: DeviceSegment, queries):
         seg = jax.tree.map(lambda a: a[0], seg)      # strip shard dim
         seg = dataclasses.replace(
-            seg, vecs=seg.vecs.astype(jnp.float32))
-        ids, dists, io, hops = device_anns(
-            seg, queries, k=k, candidates=64, sigma=0.3, max_hops=128)
+            seg, vecs=seg.vecs.astype(jnp.float32),
+            hot_vecs=seg.hot_vecs.astype(jnp.float32))
+        r = device_anns(seg, queries, search)
+        ids, dists = r.ids, r.dists
         # hierarchical top-k merge over segment ranks: all-gather k
         # results per rank (O(k) bytes cross-rank, not O(Gamma))
-        rank = jax.lax.axis_index("model")
         gids = jax.lax.all_gather(ids, "model")      # [S, Q, k]
         gd = jax.lax.all_gather(dists, "model")
-        s, q, _ = gids.shape
-        flat_d = jnp.moveaxis(gd, 0, 1).reshape(q, s * k)
-        flat_i = jnp.moveaxis(gids, 0, 1).reshape(q, s * k)
-        seg_of = jnp.repeat(jnp.arange(s, dtype=jnp.int32), k)[None, :]
-        order = jnp.argsort(flat_d, axis=1)[:, :k]
+        s, q, kk = gids.shape
+        flat_d = jnp.moveaxis(gd, 0, 1).reshape(q, s * kk)
+        flat_i = jnp.moveaxis(gids, 0, 1).reshape(q, s * kk)
+        seg_of = jnp.repeat(jnp.arange(s, dtype=jnp.int32), kk)[None, :]
+        order = jnp.argsort(flat_d, axis=1)[:, :kk]
         out_d = jnp.take_along_axis(flat_d, order, axis=1)
         out_i = jnp.take_along_axis(flat_i, order, axis=1)
         out_seg = jnp.take_along_axis(
             jnp.broadcast_to(seg_of, flat_i.shape), order, axis=1)
         # global id = segment rank * n_local + local id
         gid = out_seg * n_local + out_i
-        return gid, out_d, io[:, None] * jnp.ones((1, 1), jnp.int32)
+        col = jnp.ones((1, 1), jnp.int32)
+        return (gid, out_d, r.io[:, None] * col, r.hops[:, None] * col,
+                r.tier0_hits[:, None] * col)
 
+    import inspect
+    flag = ("check_vma" if "check_vma"
+            in inspect.signature(shard_map).parameters else "check_rep")
     fn = shard_map(local_search, mesh=mesh, in_specs=in_specs,
-                   out_specs=out_specs, check_vma=False)
+                   out_specs=out_specs, **{flag: False})
     return fn, (seg_specs, q_specs)
 
 
 # ---------------------------------------------------------- range search
 
 @functools.partial(jax.jit, static_argnames=(
-    "radius", "k_cap", "candidates", "sigma", "max_hops", "metric",
-    "rounds", "ratio"))
+    "radius", "k_cap", "p", "metric", "rounds", "ratio"))
 def device_range_search(ds: DeviceSegment, queries: jnp.ndarray,
                         radius: float, k_cap: int = 256,
-                        candidates: int = 32, sigma: float = 0.3,
-                        max_hops: int = 256, metric: str = "l2",
-                        rounds: int = 3, ratio: float = 0.5):
-    """Batched RS (§5.3 semantics, device formulation): run ANNS with a
-    growing candidate set per round; stop growing a query's set once the
-    in-range fraction of its results drops below ``ratio``. Returns
-    (ids [Q, k_cap], dists, in_range mask, io)."""
-    io_total = jnp.zeros((queries.shape[0],), jnp.int32)
-    ids = dists = None
-    c = candidates
-    for _ in range(rounds):
+                        p: DeviceSearchParams = DEFAULT_DEVICE_SEARCH,
+                        metric: str = "l2",
+                        rounds: int = 3, ratio: float = 0.5
+                        ) -> DeviceRangeResult:
+    """Batched RS (§5.3 semantics, device formulation): ANNS rounds with
+    a doubling candidate set; stop growing a query's set once the
+    in-range fraction of its results drops below ``ratio`` (handled by
+    the ratio mask on the host serving layer — rounds are compile-time
+    unrolled here).
+
+    The ``visited`` bitmask and result arrays thread through the rounds
+    (the device analogue of the host RS resume fix): a later round
+    re-seeds its candidate set from the previous round's results but
+    never re-expands — so never re-fetches, and never re-counts in
+    ``io`` — a block whose vertex an earlier round already expanded.
+    """
+    qn = queries.shape[0]
+    n = ds.block_of.shape[0]
+    eps = ds.vid.shape[1]
+    nb_words = -(-n // 32)
+    fw = max(p.fetch_width, 1)
+    queries = queries.astype(jnp.float32)
+    lut = _adc_lut(queries, ds.pq_cent, metric)
+
+    entry = nav_entry_points(ds, queries, beam=p.nav_beam,
+                             hops=p.nav_hops, num=p.entry_points,
+                             metric=metric)
+    e_codes = ds.pq_codes[jnp.maximum(entry, 0)]
+    e_key = jnp.where(entry >= 0, _adc(lut, e_codes), jnp.inf)
+
+    visited = jnp.zeros((qn, nb_words), jnp.uint32)
+    res_id = jnp.zeros((qn, 0), jnp.int32)
+    res_key = jnp.zeros((qn, 0), jnp.float32)
+    io = jnp.zeros((qn,), jnp.int32)
+    t0 = jnp.zeros((qn,), jnp.int32)
+    hops = jnp.zeros((qn,), jnp.int32)
+    seed_id, seed_key = entry, e_key
+
+    c = p.candidates
+    for rnd in range(rounds):
         k_r = min(k_cap, c)
-        ids, dists, io, _ = device_anns(
-            ds, queries, k=k_r, candidates=c, sigma=sigma,
-            max_hops=max_hops, metric=metric)
-        io_total = io_total + io
-        in_r = (dists <= radius).sum(axis=1)
-        frac = in_r / jnp.maximum(k_r, 1)
+        res_size = k_r + 2 * eps * fw
+        cand_id = jnp.full((qn, c), -1, jnp.int32)
+        cand_key = jnp.full((qn, c), jnp.inf)
+        cand_key, cand_id = _merge_top(cand_key, cand_id, seed_key,
+                                       seed_id, c)
+        r_id = jnp.full((qn, res_size), -1, jnp.int32)
+        r_key = jnp.full((qn, res_size), jnp.inf)
+        if res_id.shape[1]:
+            r_key, r_id = _merge_top(r_key, r_id, res_key, res_id,
+                                     res_size)
+        state = (cand_id, cand_key, visited, r_id, r_key, io, t0, hops,
+                 jnp.zeros((), jnp.int32))
+        state = _block_search_loop(
+            ds, queries, lut, state, res_size=res_size, candidates=c,
+            sigma=p.sigma, max_hops=p.max_hops, metric=metric,
+            fetch_width=fw, fetch_impl=p.fetch_impl)
+        _, _, visited, res_id, res_key, io, t0, hops, _ = state
         if c * 2 > k_cap:
             break
         c *= 2
-        # (rounds are compile-time unrolled; per-query early-exit is
-        # handled by the ratio mask on the host serving layer)
+        # next round resumes from this round's frontier: results whose
+        # vertices were ranked but never expanded are live candidates
+        # under the carried ``visited`` mask (expanded ones mask out)
+        seed_id, seed_key = res_id, res_key
+
+    ids, dists = res_id[:, :k_cap], res_key[:, :k_cap]
     pad = k_cap - ids.shape[1]
     if pad > 0:
         ids = jnp.pad(ids, ((0, 0), (0, pad)), constant_values=-1)
         dists = jnp.pad(dists, ((0, 0), (0, pad)),
                         constant_values=jnp.inf)
-    return ids, dists, dists <= radius, io_total
+    return DeviceRangeResult(ids, dists, dists <= radius, io, t0)

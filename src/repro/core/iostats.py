@@ -16,9 +16,11 @@ Everything the paper measures flows through this module:
 Pricing summary (repro.io):
 
   * demand misses (and legacy uncached reads) pay a full ``t_block_io``
-    round trip; tier-1 cache hits pay ``t_cache_hit``; tier-2 hits —
-    demand reads served by a compressed PQ-space block summary — pay
-    ``t_tier2_hit`` (decompress + re-rank, no disk trip);
+    round trip; tier-0 hits — device reads served by the VMEM hot-tile
+    pack (``device_search``) — pay ``t_tier0_hit`` (no DMA); tier-1
+    cache hits pay ``t_cache_hit``; tier-2 hits — demand reads served
+    by a compressed PQ-space block summary — pay ``t_tier2_hit``
+    (decompress + re-rank, no disk trip);
   * synchronous coalesced prefetch pays ``t_batch_block`` per extra
     block, except that a round trip with *no* demand miss (a cache hit
     whose trip exists only to carry speculative blocks) pays one full
@@ -42,6 +44,8 @@ import dataclasses
 class IOStats:
     block_reads: int = 0        # demand block accesses (the paper's I/Os)
     io_round_trips: int = 0     # batched fetches issued (≤ block_reads)
+    tier0_hits: int = 0         # demand reads served by tier 0 (the
+    #                             device VMEM hot-tile pack — no HBM DMA)
     cache_hits: int = 0         # demand reads served by tier 1 (full blocks)
     tier2_hits: int = 0         # demand reads served by tier 2 (compressed
     #                             PQ-space summaries — re-rank, no disk trip)
@@ -85,10 +89,21 @@ class IOStats:
             setattr(self, f.name,
                     getattr(self, f.name) + getattr(other, f.name))
 
+    @classmethod
+    def from_device(cls, io, tier0_hits=0, hops=0) -> "IOStats":
+        """Counters of one query's device search (``device_anns``):
+        ``io`` cold HBM block DMAs, ``tier0_hits`` touches served by the
+        VMEM hot-tile pack, ``hops`` DMA round trips. Cold DMAs price as
+        misses (one trip each — batched-width amortization is already in
+        the hop count), hot touches at ``t_tier0_hit``."""
+        io, t0, h = int(io), int(tier0_hits), int(hops)
+        return cls(block_reads=io + t0, io_round_trips=io,
+                   cache_misses=io, tier0_hits=t0, hops=h)
+
     @property
     def cache_hit_rate(self) -> float:
-        """Fraction of demand reads served by either cache tier."""
-        hits = self.cache_hits + self.tier2_hits
+        """Fraction of demand reads served by any cache tier."""
+        hits = self.tier0_hits + self.cache_hits + self.tier2_hits
         tracked = hits + self.cache_misses
         if tracked == 0:
             return 0.0
@@ -123,6 +138,8 @@ class CostModel:
     #                             (0.0 → priced as a full t_block_io)
     t_tier2_hit: float = 0.0    # demand read served by a compressed
     #                             PQ-space summary (decompress + re-rank)
+    t_tier0_hit: float = 0.0    # demand read served by the device VMEM
+    #                             hot-tile pack (tier 0 — no HBM DMA)
     name: str = "model"
 
     def _io_time(self, s: IOStats) -> float:
@@ -140,8 +157,8 @@ class CostModel:
         # uncached share of merged mixed stats) price as misses.
         t_batch = self.t_batch_block if self.t_batch_block else \
             self.t_block_io
-        full_reads = max(s.block_reads - s.cache_hits - s.tier2_hits
-                        - s.inflight_joins, 0)
+        full_reads = max(s.block_reads - s.tier0_hits - s.cache_hits
+                        - s.tier2_hits - s.inflight_joins, 0)
         # trips beyond one-per-miss are speculative-only (hit + prefetch);
         # async demand submissions count one trip per non-joined miss, so
         # adding inflight_joins back keeps the sync surplus exact.
@@ -152,6 +169,7 @@ class CostModel:
                 + (s.prefetched_blocks - spec_trips) * t_batch
                 + s.queue_occ_weight * t_batch
                 + s.join_residual * self.t_block_io
+                + s.tier0_hits * self.t_tier0_hit
                 + s.cache_hits * self.t_cache_hit
                 + s.tier2_hits * self.t_tier2_hit)
 
@@ -172,7 +190,14 @@ class CostModel:
         total = self.latency_us(s, pipeline)
         return {"t_io_us": t_io, "t_comp_us": t_comp, "t_other_us": t_other,
                 "total_us": total,
-                "io_frac": t_io / max(t_io + t_comp + t_other, 1e-9)}
+                "io_frac": t_io / max(t_io + t_comp + t_other, 1e-9),
+                # per-tier demand-read service counts (tier 0 = device
+                # VMEM hot tiles, 1 = host full blocks, 2 = compressed
+                # summaries) so hierarchy sweeps can report where reads
+                # were absorbed
+                "tier0_hits": s.tier0_hits, "tier1_hits": s.cache_hits,
+                "tier2_hits": s.tier2_hits,
+                "cache_misses": s.cache_misses}
 
 
 # The paper's segment: NVMe 4KB random read ~90–100 µs per round-trip,
@@ -182,13 +207,15 @@ class CostModel:
 # decompresses a ~256 B PQ-space summary and re-ranks (~2.5 µs).
 NVME_SEGMENT = CostModel(t_block_io=95.0, t_dist=0.055, t_pq=0.012,
                          t_cache_hit=0.5, t_batch_block=18.0,
-                         t_tier2_hit=2.5, name="nvme")
+                         t_tier2_hit=2.5, t_tier0_hit=0.5, name="nvme")
 
 # TPU regime (DESIGN.md §2): 4 KB HBM→VMEM DMA ≈ 1.2 µs latency-bound,
 # VPU block ranking ≈ 0.02 µs/vector amortized, ADC ≈ 0.002 µs via LUT
-# tiles. A hit is a VMEM-resident tile; coalesced blocks stream at HBM
-# bandwidth (~0.35 µs per extra 4 KB); a tier-2 hit is a VMEM LUT
-# re-rank of the resident summary tile.
+# tiles. A tier-1 hit is an HBM-resident tile copy; coalesced blocks
+# stream at HBM bandwidth (~0.35 µs per extra 4 KB); a tier-2 hit is a
+# VMEM LUT re-rank of the resident summary tile. A tier-0 hit reads the
+# hot tile already *in VMEM* — no DMA at all, just the probe, ~10 ns.
 TPU_HBM_SEGMENT = CostModel(t_block_io=1.2, t_dist=0.02, t_pq=0.002,
                             t_cache_hit=0.05, t_batch_block=0.35,
-                            t_tier2_hit=0.08, name="tpu-hbm")
+                            t_tier2_hit=0.08, t_tier0_hit=0.01,
+                            name="tpu-hbm")

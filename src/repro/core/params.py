@@ -111,6 +111,14 @@ class CacheParams:
     trip); ``queue_depth`` > 0 switches the fetch path from
     synchronous-coalesced to the event-clock ``AsyncFetchQueue`` with
     that many fetches in flight.
+
+    ``tier0_bytes`` / ``tier0_frac`` budget the *device* tier 0 — the
+    VMEM-resident hot-tile pack of ``device_search.DeviceSegment``.
+    Tier-0 bytes are separate from the host budget (they live on the
+    accelerator, not in segment DRAM) but are charged into Eq. 10 all
+    the same (``Segment.memory_bytes``) and capped by
+    ``SegmentBudget.tier0_vmem_bytes``: reserved memory is reserved
+    memory, whichever tier holds it.
     """
     budget_bytes: int = 0         # absolute cache budget
     budget_frac: float = 0.0      # fraction of disk_bytes (if bytes == 0)
@@ -125,6 +133,8 @@ class CacheParams:
     tier2_compression: int = 16   # full-block bytes per summary byte
     queue_depth: int = 0          # max in-flight fetches on the async
     #                               queue (0 → synchronous fetch path)
+    tier0_bytes: int = 0          # absolute device hot-tile (VMEM) budget
+    tier0_frac: float = 0.0       # fraction of disk_bytes (if bytes == 0)
 
     def __post_init__(self):
         # ValueError (not assert) so invalid configs fail under -O too,
@@ -144,22 +154,80 @@ class CacheParams:
         if self.tier2_compression < 1 or self.queue_depth < 0:
             raise ValueError(
                 "tier2_compression must be >= 1 and queue_depth >= 0")
+        if not (0.0 <= self.tier0_frac <= 1.0) or self.tier0_bytes < 0:
+            raise ValueError(
+                "tier0_frac must be in [0, 1] and tier0_bytes >= 0")
 
     @property
     def enabled(self) -> bool:
         return self.budget_bytes > 0 or self.budget_frac > 0.0
+
+    @property
+    def tier0_enabled(self) -> bool:
+        return self.tier0_bytes > 0 or self.tier0_frac > 0.0
 
     def resolve_budget(self, disk_bytes: int) -> int:
         if self.budget_bytes > 0:
             return self.budget_bytes
         return int(self.budget_frac * disk_bytes)
 
+    def resolve_tier0_budget(self, disk_bytes: int) -> int:
+        """Device hot-tile budget in bytes (Eq. 10's C_tier0 charge)."""
+        if self.tier0_bytes > 0:
+            return self.tier0_bytes
+        return int(self.tier0_frac * disk_bytes)
+
 
 @dataclasses.dataclass(frozen=True)
 class SegmentBudget:
-    """Per-segment space budget (§2.2: ≤2 GB DRAM, ≤10 GB disk)."""
+    """Per-segment space budget (§2.2: ≤2 GB DRAM, ≤10 GB disk;
+    DESIGN.md §3: plus a device VMEM cap for the tier-0 hot-tile pack —
+    VMEM is ~16 MB/core and the search step needs most of it for
+    working tiles, so tier 0 gets a small carve-out)."""
     memory_bytes: int = 2 << 30
     disk_bytes: int = 10 << 30
+    tier0_vmem_bytes: int = 4 << 20
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceSearchParams:
+    """Batched device-search knobs (``device_search.device_anns`` /
+    ``make_search_step``) — the TPU analogue of ``SearchParams``.
+
+    Frozen and hashable, so it rides through ``jax.jit`` as a static
+    argument: one compiled executable per distinct parameter set.
+
+    ``fetch_width`` (F) fetches the F best unvisited candidates' blocks
+    per DMA round trip (beyond-paper: the Central Assumption prices a
+    few random reads per round-trip like one). ``tier0_frac`` sizes the
+    VMEM hot-tile pack for ``make_search_step``'s specs; segments built
+    through ``from_segment`` take the (equivalent) budget from
+    ``CacheParams`` so host and device agree. ``fetch_impl`` picks the
+    fused Pallas probe+gather+rank kernel or the pure-jnp reference
+    fetch stage — both bit-identical.
+    """
+    k: int = 10                   # results per query
+    candidates: int = 64          # Γ (candidate-set size)
+    sigma: float = 0.3            # σ (block-pruning ratio)
+    max_hops: int = 128           # round-trip cap (safety valve)
+    fetch_width: int = 1          # F: blocks fetched per round trip
+    nav_beam: int = 8             # navigation-graph beam width
+    nav_hops: int = 12            # navigation-graph beam iterations
+    entry_points: int = 4         # entries handed to the block search
+    tier0_frac: float = 0.0       # VMEM hot-tile share of the block file
+    fetch_impl: str = "fused"     # fused (Pallas kernel) | jnp (reference)
+
+    def __post_init__(self):
+        if self.k < 1 or self.candidates < self.k:
+            raise ValueError("need candidates >= k >= 1")
+        if not (0.0 <= self.sigma <= 1.0
+                and 0.0 <= self.tier0_frac <= 1.0):
+            raise ValueError("sigma and tier0_frac must be in [0, 1]")
+        if self.fetch_width < 1 or self.max_hops < 1:
+            raise ValueError("fetch_width and max_hops must be >= 1")
+        if self.fetch_impl not in ("fused", "jnp"):
+            raise ValueError(
+                f"unknown fetch_impl {self.fetch_impl!r} (fused | jnp)")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -40,10 +40,13 @@ class Segment:
         return self.graph.num_vertices
 
     def memory_bytes(self) -> int:
-        """Eq. 10: C_graph + C_mapping + C_PQ&others + C_cache.
+        """Eq. 10: C_graph + C_mapping + C_PQ&others + C_cache + C_tier0.
 
         C_cache is the repro.io block-cache budget: reserved DRAM for
-        η-KB block residency, charged whether or not it is full."""
+        η-KB block residency, charged whether or not it is full.
+        C_tier0 is the device hot-tile pack budget (``CacheParams.
+        tier0_*``): reserved VMEM, but reserved memory all the same —
+        the unified hierarchy charges every tier into one budget."""
         c_graph = (self.view.nav.memory_bytes()
                    if self.view.nav is not None else 0)
         c_mapping = self.view.layout.mapping_bytes()
@@ -51,7 +54,12 @@ class Segment:
                 if self.view.pq_codes is not None else 0)
         c_cache = (self.view.store.memory_bytes()
                    if isinstance(self.view.store, CachedBlockStore) else 0)
-        return c_graph + c_mapping + c_pq + c_cache
+        return c_graph + c_mapping + c_pq + c_cache + self.tier0_bytes()
+
+    def tier0_bytes(self) -> int:
+        """C_tier0: the configured device hot-tile budget (0 when the
+        device tier is off)."""
+        return self.params.cache.resolve_tier0_budget(self.disk_bytes())
 
     def disk_bytes(self) -> int:
         return self.view.store.disk_bytes()
@@ -59,7 +67,8 @@ class Segment:
     def check_budget(self) -> Dict[str, bool]:
         b = self.params.budget
         return {"memory_ok": self.memory_bytes() <= b.memory_bytes,
-                "disk_ok": self.disk_bytes() <= b.disk_bytes}
+                "disk_ok": self.disk_bytes() <= b.disk_bytes,
+                "tier0_ok": self.tier0_bytes() <= b.tier0_vmem_bytes}
 
 
 def build_segment(x: np.ndarray, params: SegmentParams,

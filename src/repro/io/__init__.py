@@ -19,6 +19,12 @@ which blocks the search reads, only what each read costs:
     ``BlockStore.read_block`` that accounts ``cache_hits`` /
     ``tier2_hits`` / ``cache_misses`` / ``io_round_trips`` into
     ``IOStats``.
+  * ``hotset`` — the tier-shared build-time hot-set ranking (traversal
+    frequency around the navigation-graph entry neighborhood): host
+    tier-1 pinning and the device tier-0 VMEM hot-tile pack
+    (``core.device_search.from_segment``) both select prefixes of this
+    one ranking, so the whole hierarchy agrees on what "hot" means and
+    budget sweeps are monotone by construction.
   * ``PrefetchEngine`` (``prefetch.py``) — speculatively fetches the
     blocks of the top unvisited candidates: coalesced into the demand
     round trip (sync) or put in flight ahead of the demand wait
@@ -41,15 +47,17 @@ locality on the entry neighborhood and cluster-hot blocks.
 """
 from repro.io.async_fetch import AsyncFetchQueue, FetchTicket
 from repro.io.cache import (BlockCache, EvictionPolicy, LFUPolicy,
-                            LRUPolicy, TieredBlockCache,
-                            hot_block_pin_set)
+                            LRUPolicy, TieredBlockCache)
 from repro.io.cached_store import (CachedBlockStore, cached_view,
                                    make_cached_store)
+from repro.io.hotset import (fill_to, hot_block_pin_set,
+                             hot_block_ranking, view_seed_ids)
 from repro.io.prefetch import PrefetchEngine
 
 __all__ = [
     "AsyncFetchQueue", "FetchTicket",
     "BlockCache", "TieredBlockCache", "EvictionPolicy", "LRUPolicy",
-    "LFUPolicy", "hot_block_pin_set", "CachedBlockStore", "cached_view",
+    "LFUPolicy", "hot_block_pin_set", "hot_block_ranking", "fill_to",
+    "view_seed_ids", "CachedBlockStore", "cached_view",
     "make_cached_store", "PrefetchEngine",
 ]

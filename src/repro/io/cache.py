@@ -13,9 +13,11 @@ Eviction policies:
   * ``lfu`` — least-frequently-used with LRU tie-break (GoVector-style
     frequency retention for skewed query streams).
   * static pinning — ``pinned`` blocks are preloaded at build time and
-    never evicted; ``hot_block_pin_set`` measures traversal frequency
-    around the navigation-graph entry neighborhood, since every query's
-    first hops land there (Fig. 10: entry points come from the μ-sample).
+    never evicted; the pin set is the top of the tier-shared
+    ``repro.io.hotset`` ranking (traversal frequency around the
+    navigation-graph entry neighborhood — the same ranking the device
+    tier-0 hot-tile pack selects from, so "hot" means the same thing in
+    every tier).
 
 ``TieredBlockCache`` stacks two ``BlockCache`` instances: tier 1 holds
 full η-KB blocks, tier 2 holds compressed PQ-space block summaries at
@@ -25,10 +27,13 @@ arXiv:2508.15694).
 """
 from __future__ import annotations
 
-from collections import Counter, OrderedDict
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from collections import OrderedDict
+from typing import Dict, Iterable, List
 
-import numpy as np
+# build-time hot-set selection moved to the tier-shared repro.io.hotset
+# module (the device tier-0 pack uses the same ranking); re-exported
+# here for existing importers
+from repro.io.hotset import hot_block_pin_set  # noqa: F401
 
 
 class EvictionPolicy:
@@ -303,40 +308,3 @@ class BlockCache:
         self._resident.discard(b)
         self._policy.remove(b)
         return True
-
-
-def hot_block_pin_set(block_of: np.ndarray, adj: np.ndarray,
-                      deg: np.ndarray,
-                      seed_ids: Sequence[int],
-                      max_blocks: int,
-                      hops: int = 1) -> List[int]:
-    """Build-time hot set: blocks by traversal frequency around the
-    navigation-graph entry neighborhood.
-
-    ``seed_ids`` are the vertices queries enter through (the nav-graph
-    μ-sample, or the medoid when navigation is off). Every search's first
-    expansions read the seeds' blocks and their disk-graph neighbors'
-    blocks, so we count those touches — seeds weighted above neighbors —
-    and pin the ``max_blocks`` most frequent.
-    """
-    if max_blocks <= 0 or len(seed_ids) == 0:
-        return []
-    counts: Counter = Counter()
-    frontier = [int(v) for v in seed_ids]
-    weight = 1 << hops
-    for _ in range(hops + 1):
-        for v in frontier:
-            counts[int(block_of[v])] += weight
-        if weight == 1:
-            break
-        nxt: List[int] = []
-        seen = set(frontier)
-        for v in frontier:
-            for w in adj[v, : deg[v]]:
-                w = int(w)
-                if w >= 0 and w not in seen:
-                    seen.add(w)
-                    nxt.append(w)
-        frontier = nxt
-        weight >>= 1
-    return [b for b, _ in counts.most_common(max_blocks)]

@@ -42,7 +42,8 @@ import numpy as np
 from repro.core.blockstore import BlockStore
 from repro.core.iostats import IOStats
 from repro.io.async_fetch import AsyncFetchQueue, FetchTicket
-from repro.io.cache import BlockCache, TieredBlockCache, hot_block_pin_set
+from repro.io.cache import BlockCache, TieredBlockCache
+from repro.io.hotset import hot_block_pin_set, view_seed_ids
 
 
 class CachedBlockStore:
@@ -275,11 +276,12 @@ def cached_view(view, graph, cache_params,
 
     Seeds the build-time hot set from the navigation-graph sample — the
     entry neighborhood every query traverses first — falling back to the
-    static entry when navigation is off. ``view`` is duck-typed (kept
-    untyped to avoid a circular import with ``core.search``).
+    static entry when navigation is off (``hotset.view_seed_ids``, the
+    same seeds the device tier-0 pack selects from). ``view`` is
+    duck-typed (kept untyped to avoid a circular import with
+    ``core.search``).
     """
-    seeds = (view.nav.sample_ids if view.nav is not None
-             else np.asarray([view.entry], np.int64))
+    seeds = view_seed_ids(view)
     store = make_cached_store(view.store, cache_params,
                               block_of=view.layout.block_of,
                               adj=graph.adj, deg=graph.deg,

@@ -1,0 +1,106 @@
+"""Shared build-time hot-set selection for every cache tier (repro.io).
+
+One ranking feeds the whole hierarchy (DESIGN.md §3): blocks are scored
+by traversal frequency around the navigation-graph entry neighborhood —
+the seeds queries enter through (the μ-sample, or the medoid when
+navigation is off) and their disk-graph neighbors, seeds weighted above
+neighbors, since every search's first expansions land there (Fig. 10).
+
+Consumers:
+
+  * host tier 1 — ``cached_store.make_cached_store`` pins the top
+    ``pin_fraction`` of its DRAM budget (``hot_block_pin_set``);
+  * device tier 0 — ``device_search.from_segment`` packs the top
+    ``tier0`` budget of blocks into the VMEM-resident hot-tile store
+    (``hot_block_ranking`` + id-order fill, so growing budgets select
+    strictly nested sets and the modeled DMA cut is monotone).
+
+The selection is *build-time* and static: loading the hot set is a
+warm-up cost, not query-time I/O, and its bytes are reserved memory
+charged against the Eq. 10 segment budget.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+def hot_block_ranking(block_of: np.ndarray, adj: np.ndarray,
+                      deg: np.ndarray, seed_ids: Sequence[int],
+                      hops: int = 1) -> List[int]:
+    """All touched blocks, most-traversed first.
+
+    BFS out ``hops`` levels from ``seed_ids`` over the disk graph,
+    counting each visited vertex's block with weight ``2^(hops-level)``
+    (seeds dominate, fringe counts least). Only blocks actually touched
+    appear; callers needing a fixed-size set fill the tail themselves
+    (see ``fill_to``).
+    """
+    if len(seed_ids) == 0:
+        return []
+    counts: Counter = Counter()
+    frontier = [int(v) for v in seed_ids]
+    weight = 1 << hops
+    for _ in range(hops + 1):
+        for v in frontier:
+            counts[int(block_of[v])] += weight
+        if weight == 1:
+            break
+        nxt: List[int] = []
+        seen = set(frontier)
+        for v in frontier:
+            for w in adj[v, : deg[v]]:
+                w = int(w)
+                if w >= 0 and w not in seen:
+                    seen.add(w)
+                    nxt.append(w)
+        frontier = nxt
+        weight >>= 1
+    return [b for b, _ in counts.most_common()]
+
+
+def hot_block_pin_set(block_of: np.ndarray, adj: np.ndarray,
+                      deg: np.ndarray,
+                      seed_ids: Sequence[int],
+                      max_blocks: int,
+                      hops: int = 1) -> List[int]:
+    """Top ``max_blocks`` of the shared ranking (the tier-1 pin set)."""
+    if max_blocks <= 0:
+        return []
+    return hot_block_ranking(block_of, adj, deg, seed_ids, hops)[
+        :max_blocks]
+
+
+def fill_to(ranking: Sequence[int], num_blocks: int,
+            total_blocks: int) -> List[int]:
+    """Extend ``ranking`` to ``num_blocks`` distinct block ids with the
+    untouched remainder in id order (capped at ``total_blocks``).
+
+    The result is a *prefix-nested* family: any larger budget's set
+    strictly contains any smaller one, which makes budget sweeps
+    monotone by construction (a hot block never turns cold as the
+    budget grows)."""
+    num_blocks = min(int(num_blocks), int(total_blocks))
+    if num_blocks <= 0:
+        return []
+    out = list(ranking[:num_blocks])
+    if len(out) < num_blocks:
+        chosen = set(out)
+        for b in range(total_blocks):
+            if b not in chosen:
+                out.append(b)
+                if len(out) == num_blocks:
+                    break
+    return out
+
+
+def view_seed_ids(view) -> np.ndarray:
+    """The entry seeds of a ``SegmentView``: the navigation-graph
+    μ-sample when navigation is on, else the static entry (medoid) —
+    the same seeds for every tier, so host pinning and the device pack
+    agree on what "hot" means."""
+    if getattr(view, "nav", None) is not None:
+        return np.asarray(view.nav.sample_ids)
+    return np.asarray([view.entry], np.int64)

@@ -1,8 +1,11 @@
 # Pallas TPU kernels for the paper's compute hot-spots (§5.1):
-#   l2_tile    — tiled exact L2/IP distance (MXU): brute force, build, rank
-#   pq_adc     — batched PQ asymmetric-distance via one-hot MXU matmul
-#   block_topk — fused block-tile ranking: distances + top-m select (VPU)
+#   l2_tile     — tiled exact L2/IP distance (MXU): brute force, build, rank
+#   pq_adc      — batched PQ asymmetric-distance via one-hot MXU matmul
+#   block_topk  — fused block-tile ranking: distances + top-m select (VPU)
+#   tier0_fetch — fused tier-0 probe + gather + rank: the device search's
+#                 fetch stage (VMEM hot-tile hit or HBM block DMA)
 # Each kernel: <name>.py (pl.pallas_call + BlockSpec) with a pure-jnp
 # oracle in ref.py and the jit'd dispatch wrapper in ops.py.
 from repro.kernels.ops import (pairwise_l2, pq_adc_batch, block_rank,
-                               set_interpret, interpret_default)
+                               tier0_rank, set_interpret,
+                               interpret_default)

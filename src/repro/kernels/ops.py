@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.kernels import block_topk as _bt
 from repro.kernels import l2_tile as _l2
 from repro.kernels import pq_adc as _adc
+from repro.kernels import tier0_fetch as _t0
 
 _INTERPRET = True
 
@@ -82,3 +83,22 @@ def block_rank(queries: jnp.ndarray, tiles: jnp.ndarray, top_m: int,
     d, idx = _bt.block_topk(qp, tp, top_m, metric=metric,
                             interpret=interpret, bq=bq)
     return d[: queries.shape[0]], idx[: queries.shape[0]]
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "interpret", "bq"))
+def tier0_rank(queries: jnp.ndarray, blocks: jnp.ndarray,
+               hot_slot_of: jnp.ndarray, hot_vecs: jnp.ndarray,
+               cold_vecs: jnp.ndarray, metric: str = "l2",
+               interpret: bool = None, bq: int = None):
+    """Fused tier-0 probe + gather + rank (the device fetch stage):
+    queries [Q, D] x target blocks [Q, F] -> (dists [Q, F*eps] over the
+    gathered tiles, hit [Q, F] tier-0 mask). Padded rows probe block 0;
+    their outputs are sliced off."""
+    interpret = _INTERPRET if interpret is None else interpret
+    bq = bq or min(_t0.BQ, max(8, queries.shape[0]))
+    qp = _pad_rows(queries, bq)
+    bp = _pad_rows(blocks, bq)
+    d, hit = _t0.tier0_fetch_rank(qp, bp, hot_slot_of, hot_vecs,
+                                  cold_vecs, metric=metric,
+                                  interpret=interpret, bq=bq)
+    return d[: queries.shape[0]], hit[: queries.shape[0]]

@@ -22,6 +22,29 @@ def pq_adc_ref(luts: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
     return gather.sum(axis=-1)
 
 
+def tier0_fetch_rank_ref(queries: jnp.ndarray, blocks: jnp.ndarray,
+                         hot_slot_of: jnp.ndarray, hot_vecs: jnp.ndarray,
+                         cold_vecs: jnp.ndarray, metric: str = "l2"):
+    """Oracle for the fused tier-0 probe+gather+rank kernel.
+
+    queries [Q, D]; blocks [Q, F]; hot_slot_of [rho] (-1 = cold);
+    hot_vecs [H, eps, D]; cold_vecs [rho, eps, D] ->
+    (dists [Q, F*eps] f32, hit [Q, F] i32)."""
+    slot = hot_slot_of[blocks]
+    hit = slot >= 0
+    tiles = jnp.where(hit[:, :, None, None],
+                      hot_vecs[jnp.maximum(slot, 0)],
+                      cold_vecs[blocks])
+    qn, f, eps, d_dim = tiles.shape
+    t32 = tiles.reshape(qn, f * eps, d_dim).astype(jnp.float32)
+    q32 = queries.astype(jnp.float32)
+    if metric == "ip":
+        d = -jnp.einsum("qd,qed->qe", q32, t32)
+    else:
+        d = jnp.sum(jnp.square(t32 - q32[:, None, :]), axis=-1)
+    return d, hit.astype(jnp.int32)
+
+
 def block_rank_ref(queries: jnp.ndarray, tiles: jnp.ndarray,
                    top_m: int, metric: str = "l2"):
     """queries [Q, D]; tiles [Q, eps, D] (the gathered block per query).

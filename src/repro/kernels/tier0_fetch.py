@@ -1,0 +1,74 @@
+"""Fused tier-0 probe + gather + rank kernel (DESIGN.md §3.2).
+
+The fetch stage of the device block search (``device_search``): for the
+F block ids one round trip targets per query, probe the tier-0 hot-slot
+map, gather each block's vector tile from the VMEM-resident hot pack on
+a hit or from the HBM block store on a miss (the DMA the cost model
+prices), and exact-rank all F*eps resident vertices against the query —
+one kernel, so hot hits never round-trip through HBM between probe and
+rank.
+
+Distances use the same f32 sum-of-squared-differences (or negated IP)
+form as the pure-jnp fetch stage, keeping the fused and reference
+implementations bit-identical; the hot pack holds exact copies of the
+packed blocks, so tier-0 budget never changes (ids, dists) — only which
+source tier served the tile (the returned hit mask feeds the
+``IOStats.tier0_hits`` / DMA counters).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BQ = 128
+
+
+def _probe_kernel(q_ref, b_ref, slot_ref, hot_ref, cold_ref,
+                  d_ref, hit_ref, *, metric: str):
+    q = q_ref[...].astype(jnp.float32)            # [BQ, D]
+    b = b_ref[...]                                # [BQ, F] i32
+    slot = slot_ref[...][b]                       # probe: [BQ, F]
+    hit = slot >= 0
+    hot_t = hot_ref[...][jnp.maximum(slot, 0)]    # [BQ, F, eps, D]
+    cold_t = cold_ref[...][b]                     # the modeled HBM DMA
+    t = jnp.where(hit[:, :, None, None], hot_t, cold_t)
+    bq, f, eps, d_dim = t.shape
+    t = t.reshape(bq, f * eps, d_dim).astype(jnp.float32)
+    if metric == "ip":
+        d = -jnp.einsum("qd,qed->qe", q, t)
+    else:
+        d = jnp.sum(jnp.square(t - q[:, None, :]), axis=-1)
+    d_ref[...] = d
+    hit_ref[...] = hit.astype(jnp.int32)
+
+
+def tier0_fetch_rank(queries: jnp.ndarray, blocks: jnp.ndarray,
+                     hot_slot_of: jnp.ndarray, hot_vecs: jnp.ndarray,
+                     cold_vecs: jnp.ndarray, metric: str = "l2",
+                     interpret: bool = True, bq: int = BQ):
+    """queries [Q, D]; blocks [Q, F] i32; hot_slot_of [rho] i32 (-1 =
+    not packed); hot_vecs [H, eps, D]; cold_vecs [rho, eps, D] ->
+    (dists [Q, F*eps] f32, hit [Q, F] i32)."""
+    qn, d = queries.shape
+    _, f = blocks.shape
+    rho, eps, _ = cold_vecs.shape
+    h = hot_vecs.shape[0]
+    assert qn % bq == 0, (qn, bq)
+    grid = (qn // bq,)
+    return pl.pallas_call(
+        functools.partial(_probe_kernel, metric=metric),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bq, d), lambda i: (i, 0)),
+                  pl.BlockSpec((bq, f), lambda i: (i, 0)),
+                  pl.BlockSpec((rho,), lambda i: (0,)),
+                  pl.BlockSpec((h, eps, d), lambda i: (0, 0, 0)),
+                  pl.BlockSpec((rho, eps, d), lambda i: (0, 0, 0))],
+        out_specs=[pl.BlockSpec((bq, f * eps), lambda i: (i, 0)),
+                   pl.BlockSpec((bq, f), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((qn, f * eps), jnp.float32),
+                   jax.ShapeDtypeStruct((qn, f), jnp.int32)],
+        interpret=interpret,
+    )(queries, blocks, hot_slot_of, hot_vecs, cold_vecs)

@@ -17,10 +17,18 @@ import numpy as np
 
 from repro.core.device_search import DeviceSegment, device_anns
 from repro.core.iostats import IOStats
-from repro.core.params import SearchParams
+from repro.core.params import DeviceSearchParams, SearchParams
 from repro.core.search import SegmentView, anns
 from repro.io.async_fetch import AsyncFetchQueue
 from repro.io.cached_store import CachedBlockStore
+
+# serving default: the wide-fetch bench preset at the paper's Γ;
+# tier-0 budget rides on the segment arrays themselves
+# (``from_segment``), not on these search knobs
+from repro.configs.starling_segment import DEVICE_SEARCH_WIDE
+
+SERVE_DEVICE_SEARCH = dataclasses.replace(DEVICE_SEARCH_WIDE,
+                                          candidates=64)
 
 
 def merge_topk(ids: Sequence[np.ndarray], dists: Sequence[np.ndarray],
@@ -42,26 +50,32 @@ def merge_topk(ids: Sequence[np.ndarray], dists: Sequence[np.ndarray],
 
 @dataclasses.dataclass
 class SegmentServer:
-    """One segment + its device arrays + search knobs."""
+    """One segment + its device arrays + search knobs.
+
+    ``params`` bundles every online knob (``DeviceSearchParams``); a
+    per-request ``k`` override replaces just that field. When the
+    segment was packed with a tier-0 budget (``from_segment``), hot
+    touches land in ``last_tier0_hits`` instead of the io column."""
     segment: DeviceSegment
     offset: int                   # base of this segment's id space
     num_vectors: int
     k_default: int = 10
-    candidates: int = 64
-    max_hops: int = 256
+    params: DeviceSearchParams = SERVE_DEVICE_SEARCH
     metric: str = "l2"
-    fetch_width: int = 2          # blocks fetched per DMA round-trip
-    #                               (see EXPERIMENTS §Perf cell 3)
 
     def search(self, queries: np.ndarray, k: Optional[int] = None
                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         import jax.numpy as jnp
         k = k or self.k_default
-        ids, dists, io, _ = device_anns(
-            self.segment, jnp.asarray(queries, jnp.float32), k=k,
-            candidates=self.candidates, max_hops=self.max_hops,
-            metric=self.metric, fetch_width=self.fetch_width)
-        return np.asarray(ids), np.asarray(dists), np.asarray(io)
+        # a per-request k above the configured beam widens Γ with it
+        # (DeviceSearchParams requires candidates >= k)
+        p = dataclasses.replace(
+            self.params, k=k, candidates=max(self.params.candidates, k))
+        r = device_anns(self.segment, jnp.asarray(queries, jnp.float32),
+                        p, metric=self.metric)
+        self.last_tier0_hits = np.asarray(r.tier0_hits)
+        self.last_hops = np.asarray(r.hops)
+        return np.asarray(r.ids), np.asarray(r.dists), np.asarray(r.io)
 
 
 @dataclasses.dataclass
@@ -154,7 +168,7 @@ class QueryCoordinator:
                ) -> Tuple[np.ndarray, np.ndarray, Dict]:
         targets = (self.prune_fn(queries) if self.prune_fn
                    else list(range(len(self.servers))))
-        ids, dists, offs, total_io = [], [], [], 0
+        ids, dists, offs, total_io, total_t0 = [], [], [], 0, 0
         for si in targets:
             s = self.servers[si]
             i, d, io = s.search(queries, k)
@@ -162,11 +176,18 @@ class QueryCoordinator:
             dists.append(d)
             offs.append(s.offset)
             total_io += int(io.sum())
+            t0 = getattr(s, "last_tier0_hits", None)
+            if t0 is not None:
+                total_t0 += int(t0.sum())
         gi, gd = merge_topk(ids, dists, offs, k)
         stats = {"segments_searched": len(targets),
                  "total_block_reads": total_io,
                  "mean_block_reads_per_query":
                      total_io / max(queries.shape[0], 1)}
+        if total_t0:
+            # device tier-0: block touches the VMEM hot-tile pack
+            # absorbed (they are not in total_block_reads)
+            stats["total_tier0_hits"] = total_t0
         # repro.io: aggregate shared-cache counters from servers that
         # expose them, as deltas so every key in the dict is per-call
         # (the cache itself stays warm across calls — only the

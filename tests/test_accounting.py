@@ -40,6 +40,29 @@ def test_segment_budget_accounting(small_segment):
     assert seg.view.layout.mapping_bytes() == seg.num_vectors * 8
 
 
+def test_tier0_budget_charged_into_eq10(small_segment):
+    """ISSUE 3 acceptance: the device hot-tile budget is a C_tier0 term
+    of Eq. 10 and is capped by the VMEM budget."""
+    import dataclasses
+    from repro.core.params import CacheParams
+    seg = small_segment
+    base_mem = seg.memory_bytes()
+    assert seg.tier0_bytes() == 0
+    seg10 = dataclasses.replace(
+        seg, params=dataclasses.replace(
+            seg.params, cache=CacheParams(tier0_frac=0.10)))
+    want = int(0.10 * seg.disk_bytes())
+    assert seg10.tier0_bytes() == want
+    assert seg10.memory_bytes() == base_mem + want
+    ok = seg10.check_budget()
+    assert ok["tier0_ok"] and ok["memory_ok"]
+    # the packed device arrays respect the same budget (block-rounded)
+    from repro.core import device_search as DS
+    ds = DS.from_segment(seg10)
+    assert 0 < DS.tier0_bytes(ds) <= want
+    assert DS.tier0_bytes(ds) <= seg.params.budget.tier0_vmem_bytes
+
+
 def test_disk_bytes_are_block_aligned(small_segment):
     seg = small_segment
     store = seg.view.store

@@ -3,7 +3,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import block_rank, pairwise_l2, pq_adc_batch
+from repro.kernels import block_rank, pairwise_l2, pq_adc_batch, tier0_rank
 from repro.kernels import ref
 
 
@@ -46,6 +46,54 @@ def test_block_rank_sweep(q, eps, d, top, metric):
     got_d = np.take_along_axis(np.asarray(dd), np.asarray(idx), axis=1)
     want_d = np.take_along_axis(np.asarray(dr), np.asarray(idxr), axis=1)
     np.testing.assert_allclose(got_d, want_d, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("q,rho,eps,d,f,hot_n",
+                         [(16, 32, 4, 16, 1, 8), (37, 64, 8, 32, 2, 0),
+                          (8, 16, 6, 24, 3, 16), (128, 96, 5, 64, 2, 40)])
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_tier0_fetch_rank_sweep(q, rho, eps, d, f, hot_n, metric):
+    """Fused probe+gather+rank vs the jnp oracle, including hot_n=0
+    (sentinel pack, map all cold) and hot_n=rho (all hot)."""
+    rng = np.random.default_rng(q * rho)
+    qs = jnp.asarray(rng.standard_normal((q, d)), jnp.float32)
+    cold = jnp.asarray(rng.standard_normal((rho, eps, d)), jnp.float32)
+    slot_of = np.full(rho, -1, np.int32)
+    if hot_n > 0:
+        hot_ids = rng.permutation(rho)[:hot_n]
+        slot_of[hot_ids] = np.arange(hot_n, dtype=np.int32)
+        hot = cold[jnp.asarray(hot_ids)]
+    else:
+        hot = jnp.zeros((1, eps, d), jnp.float32)
+    blocks = jnp.asarray(rng.integers(0, rho, (q, f)), jnp.int32)
+    got_d, got_h = tier0_rank(qs, blocks, jnp.asarray(slot_of), hot,
+                              cold, metric=metric)
+    want_d, want_h = ref.tier0_fetch_rank_ref(
+        qs, blocks, jnp.asarray(slot_of), hot, cold, metric=metric)
+    np.testing.assert_array_equal(np.asarray(got_h), np.asarray(want_h))
+    np.testing.assert_allclose(got_d, want_d, rtol=1e-4, atol=1e-4)
+    # hot slots hold copies of the cold blocks -> distances must equal
+    # an all-cold rank of the same blocks exactly
+    all_cold, _ = ref.tier0_fetch_rank_ref(
+        qs, blocks, jnp.asarray(np.full(rho, -1, np.int32)),
+        jnp.zeros((1, eps, d), jnp.float32), cold, metric=metric)
+    np.testing.assert_allclose(want_d, all_cold, rtol=0, atol=0)
+
+
+def test_tier0_fetch_rank_matches_dists_form():
+    """The kernel's distance form is the device search's `_dists` (f32
+    sum of squared differences) — bit-compatible with the jnp fetch
+    stage, so fused vs jnp fetch never changes search results."""
+    from repro.core.device_search import _dists
+    rng = np.random.default_rng(3)
+    qs = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+    cold = jnp.asarray(rng.standard_normal((10, 4, 16)), jnp.float32)
+    blocks = jnp.asarray(rng.integers(0, 10, (8, 2)), jnp.int32)
+    got_d, _ = tier0_rank(qs, blocks,
+                          jnp.asarray(np.full(10, -1, np.int32)),
+                          jnp.zeros((1, 4, 16), jnp.float32), cold)
+    want = _dists(qs, cold[blocks].reshape(8, 8, 16), "l2")
+    np.testing.assert_array_equal(np.asarray(got_d), np.asarray(want))
 
 
 def test_block_rank_matches_search_semantics():

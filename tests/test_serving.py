@@ -3,13 +3,15 @@
 import numpy as np
 import pytest
 
+import dataclasses
+
 from repro.core import device_search as DS
 from repro.core import distances as D
 from repro.core.segment import build_segment
 from repro.core.search import recall_at_k
 from repro.data.vectors import clustered_vectors, query_set
 from repro.serving import QueryCoordinator, RequestBatcher, SegmentServer
-from repro.serving.coordinator import merge_topk
+from repro.serving.coordinator import SERVE_DEVICE_SEARCH, merge_topk
 from tests.conftest import SMALL_SEGMENT
 
 
@@ -19,11 +21,16 @@ def two_segments():
           for s in (0, 1)]
     servers = []
     off = 0
-    for x in xs:
+    for si, x in enumerate(xs):
         seg = build_segment(x, SMALL_SEGMENT)
+        # second segment carries a tier-0 hot-tile pack — results must
+        # merge identically either way, the pack only moves touches off
+        # the DMA counter
         servers.append(SegmentServer(
-            segment=DS.from_segment(seg), offset=off,
-            num_vectors=x.shape[0], candidates=48))
+            segment=DS.from_segment(seg, tier0_frac=0.1 * si),
+            offset=off, num_vectors=x.shape[0],
+            params=dataclasses.replace(SERVE_DEVICE_SEARCH,
+                                       candidates=48)))
         off += x.shape[0]
     return xs, servers
 
@@ -36,6 +43,7 @@ def test_merge_topk_correct():
     np.testing.assert_allclose(gd[0], [0.5, 1.0, 2.0])
 
 
+@pytest.mark.slow
 def test_coordinator_recall_over_union(two_segments):
     xs, servers = two_segments
     union = np.concatenate(xs, axis=0)
@@ -46,8 +54,22 @@ def test_coordinator_recall_over_union(two_segments):
     assert recall_at_k(gi, truth) >= 0.75
     assert stats["segments_searched"] == 2
     assert stats["total_block_reads"] > 0
+    # the tier-0-packed segment absorbed some touches into VMEM
+    assert stats.get("total_tier0_hits", 0) > 0
 
 
+@pytest.mark.slow
+def test_server_k_above_beam_widens(two_segments):
+    """A per-request k above the configured candidate beam widens Γ
+    instead of tripping DeviceSearchParams validation."""
+    xs, servers = two_segments
+    q = query_set(xs[0], 4, seed=7)
+    ids, dists, io = servers[0].search(q, k=96)
+    assert ids.shape == (4, 96) and dists.shape == (4, 96)
+    assert (io > 0).all()
+
+
+@pytest.mark.slow
 def test_coordinator_pruning_hook(two_segments):
     xs, servers = two_segments
     q = query_set(xs[0], 4, seed=4)
