@@ -2,7 +2,8 @@
 
 PY ?= python
 
-.PHONY: test test-fast test-device bench bench-io bench-device dev-deps
+.PHONY: test test-fast test-device bench bench-io bench-device \
+	bench-batch dev-deps
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -37,6 +38,13 @@ bench-device:
 	PYTHONPATH=src $(PY) -m benchmarks.run --only device_range_search_rounds
 	PYTHONPATH=src $(PY) -m benchmarks.run --only kernel_micro
 	PYTHONPATH=src $(PY) -m benchmarks.run --only roofline_tables
+
+# smoke lane for the divergence-aware batched path (ISSUE 4): a tiny
+# batch-size x duplicate-rate sweep with the bit-identity assertions on
+# (BENCH_SMOKE shrinks the sweep; skips gracefully with no jax backend)
+bench-batch:
+	BENCH_SMOKE=1 PYTHONPATH=src $(PY) -m benchmarks.run \
+		--only device_batch_dedup_sweep
 
 dev-deps:
 	$(PY) -m pip install -r requirements-dev.txt

@@ -5,6 +5,7 @@ correctness + op counts, with modeled TPU timings from the roofline
 constants)."""
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -12,7 +13,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common as C
-from repro.configs.starling_segment import DEVICE_SEARCH_BENCH
+from repro.configs.starling_segment import (DEVICE_SEARCH_BATCH,
+                                            DEVICE_SEARCH_BENCH)
 from repro.core import device_search as DS
 from repro.core import distances as D
 from repro.core.iostats import IOStats, TPU_HBM_SEGMENT
@@ -22,13 +24,16 @@ from repro.core.search import anns, recall_at_k
 import dataclasses
 
 
-def _mean_tpu_lat(io, t0, hops):
-    """Modeled TPU latency over per-query device counters."""
+def _mean_tpu_lat(io, t0, hops, saved=None, rounds=0):
+    """Modeled TPU latency over per-query device counters (dedup joins
+    priced at ``t_dedup_hit`` when the ``saved`` column is given)."""
+    saved = np.zeros_like(np.asarray(io)) if saved is None \
+        else np.asarray(saved)
     return float(np.mean([
         TPU_HBM_SEGMENT.latency_us(
-            IOStats.from_device(i, t, h), pipeline=True)
-        for i, t, h in zip(np.asarray(io), np.asarray(t0),
-                           np.asarray(hops))]))
+            IOStats.from_device(i, t, h, sv, rounds), pipeline=True)
+        for i, t, h, sv in zip(np.asarray(io), np.asarray(t0),
+                               np.asarray(hops), saved)]))
 
 
 def device_vs_host():
@@ -89,6 +94,107 @@ def device_tier0_budget_sweep():
             modeled_dma_reduction=(
                 1.0 - io_m / max(float(np.asarray(base.io).mean()),
                                  1e-9)))
+
+
+def device_batch_dedup_sweep():
+    """ISSUE 4 acceptance: the divergence-aware batched path.
+
+    (a) duplicate-block-rate sweep at fixed batch: a growing share of
+        the batch repeats one query, so per-round block requests
+        collide and the cross-query dedup absorbs them — modeled DMA
+        count (io - dedup_saved) must fall STRICTLY as the dup rate
+        rises, while (ids, dists) stay bit-identical per query;
+    (b) batch-size sweep: queries from the same distribution share
+        entry-region blocks, so bigger batches dedup more — modeled
+        TPU latency per query must be non-increasing with batch size
+        at fixed recall (same knobs);
+    (c) bit-identity vs the singleton-batch oracle, fused AND jnp
+        fetch_impl, asserted inside the sweep.
+
+    ``BENCH_SMOKE=1`` (the `make bench-batch` / CI smoke lane) shrinks
+    the sweep to the two smallest batches. Skips gracefully when no
+    jax backend is available."""
+    try:
+        jax.devices()
+    except RuntimeError as e:           # no backend: record the skip
+        C.record("device_batch_dedup_sweep", skipped=str(e))
+        return
+    smoke = bool(os.environ.get("BENCH_SMOKE"))
+    seg = C.bench_segment(shuffle="bnf")
+    ds = DS.from_segment(seg, tier0_frac=0.05)
+    x = C.base_data()
+    from repro.data.vectors import query_set
+    p = DEVICE_SEARCH_BATCH
+
+    # --- (a) duplicate-rate sweep
+    base_q = C.queries()
+    qn = base_q.shape[0]
+    r0 = DS.device_anns(ds, jnp.asarray(base_q[:1]), p)  # singleton oracle
+    prev_dma = None
+    for dup in (0.0, 0.25, 0.5, 0.75):
+        q = base_q.copy()
+        ndup = int(dup * qn)
+        if ndup:
+            q[qn - ndup:] = q[0]
+        r = DS.device_anns(ds, jnp.asarray(q), p)
+        io_m = float(np.asarray(r.io).mean())
+        sv_m = float(np.asarray(r.dedup_saved).mean())
+        dma = io_m - sv_m
+        # per-query results must not care who else rides the batch
+        assert np.array_equal(np.asarray(r0.ids[0]),
+                              np.asarray(r.ids[0])), \
+            "batch composition changed a query's results"
+        if prev_dma is not None:
+            assert dma < prev_dma, (
+                f"dedup must cut modeled DMAs strictly as the duplicate "
+                f"rate rises ({prev_dma:.2f} -> {dma:.2f})")
+        prev_dma = dma
+        C.record("device_dup_rate_sweep", dup_rate=dup,
+                 cold_touches_per_query=io_m,
+                 dedup_saved_per_query=sv_m,
+                 modeled_dma_per_query=dma,
+                 modeled_latency_us_tpu=_mean_tpu_lat(
+                     r.io, r.tier0_hits, r.hops, r.dedup_saved,
+                     int(r.rounds)))
+
+    # --- (b) batch-size sweep + (c) singleton-oracle bit-identity
+    truth_all = D.brute_force_knn(x, query_set(x, 128, seed=5), 10)
+    prev_lat = None
+    sizes = (8, 16) if smoke else (8, 32, 128)
+    for b in sizes:
+        q = query_set(x, 128, seed=5)[:b]
+        r = DS.device_anns(ds, jnp.asarray(q), p)
+        rj = DS.device_anns(ds, jnp.asarray(q),
+                            dataclasses.replace(p, fetch_impl="jnp"))
+        for f in ("ids", "dists", "io", "tier0_hits", "dedup_saved"):
+            assert np.array_equal(np.asarray(getattr(r, f)),
+                                  np.asarray(getattr(rj, f))), \
+                f"fused vs jnp fetch_impl diverged on {f}"
+        # singleton-batch oracle: same ids/dists bit-for-bit
+        for qi in range(0, b, max(b // 4, 1)):
+            r1 = DS.device_anns(ds, jnp.asarray(q[qi: qi + 1]), p)
+            assert np.array_equal(np.asarray(r1.ids[0]),
+                                  np.asarray(r.ids[qi]))
+            assert np.array_equal(np.asarray(r1.dists[0]),
+                                  np.asarray(r.dists[qi]))
+        lat = _mean_tpu_lat(r.io, r.tier0_hits, r.hops, r.dedup_saved,
+                            int(r.rounds))
+        if prev_lat is not None and not smoke:
+            assert lat <= prev_lat + 1e-9, (
+                f"modeled latency/query must not rise with batch size "
+                f"({prev_lat:.3f} -> {lat:.3f} us)")
+        prev_lat = lat
+        sv_m = float(np.asarray(r.dedup_saved).mean())
+        io_m = float(np.asarray(r.io).mean())
+        C.record("device_batch_size_sweep", batch=b,
+                 recall=recall_at_k(np.asarray(r.ids), truth_all[:b]),
+                 cold_touches_per_query=io_m,
+                 dedup_saved_per_query=sv_m,
+                 modeled_dma_per_query=io_m - sv_m,
+                 rounds=int(r.rounds),
+                 occupancy=float(np.asarray(r.hops).mean()
+                                 / max(int(r.rounds), 1)),
+                 modeled_latency_us_tpu=lat)
 
 
 def batched_beam_throughput():

@@ -250,6 +250,70 @@ def tab3_multi_segment():
                  wall_s_cpu=wall)
 
 
+# ----------------------------------------------- mesh-level QPS model
+
+def mesh_qps_estimate():
+    """Fold the per-rank io/hops/tier0/dedup columns of the production
+    search step into a mesh-level QPS estimate (ROADMAP open item).
+
+    ``make_search_step``'s layout: every ``model`` rank owns an
+    independent sub-segment and sees the full (replicated) query batch;
+    the per-segment top-k merge is one all-gather — a barrier, so a
+    batch's step time is gated by the slowest rank. We run the batched
+    search per rank (same counters the step's ``(data, model)``-sharded
+    output columns carry), model each rank's step time as its lockstep
+    DMA chain — rounds x t_block_io latency term + deduped cold DMAs x
+    t_batch_block bandwidth term + tier-0/dedup broadcast touches — and
+    take QPS = batch x data ranks / max_rank(step time). All latencies
+    are modeled via TPU_HBM_SEGMENT (CPU container), reported alongside
+    the per-rank Eq. 4 cost breakdown."""
+    import jax.numpy as jnp
+    from repro.configs.starling_segment import DEVICE_SEARCH_BATCH
+    from repro.core import device_search as DS
+    from repro.core.iostats import IOStats
+    from repro.core.segment import build_segment
+    from repro.data.vectors import clustered_vectors, query_set
+
+    cm = TPU_HBM_SEGMENT
+    model_ranks, data_ranks, batch = 4, 16, 32
+    xs = [clustered_vectors(1500, C.DIM, num_clusters=16, seed=20 + s)
+          for s in range(model_ranks)]
+    q = query_set(np.concatenate(xs), batch, seed=9)
+    step_us = []
+    for s, x in enumerate(xs):
+        seg = build_segment(x, C.SEGMENT_BENCH)
+        ds = DS.from_segment(seg, tier0_frac=0.1)
+        r = DS.device_anns(ds, jnp.asarray(q), DEVICE_SEARCH_BATCH)
+        io = np.asarray(r.io)
+        sv = np.asarray(r.dedup_saved)
+        t0 = np.asarray(r.tier0_hits)
+        hops = np.asarray(r.hops)
+        rounds = int(r.rounds)
+        t_rank = (rounds * cm.t_block_io
+                  + float((io - sv).sum()) * cm.t_batch_block
+                  + float(sv.sum()) * cm.t_dedup_hit
+                  + float(t0.sum()) * cm.t_tier0_hit)
+        step_us.append(t_rank)
+        # the per-rank Eq. 4 breakdown over the batch-summed counters
+        agg = IOStats()
+        for i in range(batch):
+            agg.merge(IOStats.from_device(io[i], t0[i], hops[i],
+                                          sv[i], rounds))
+        br = cm.breakdown(agg, pipeline=True)
+        C.record("mesh_qps_rank", rank=s, rounds=rounds,
+                 step_us_modeled=t_rank,
+                 occupancy=float(hops.mean() / max(rounds, 1)),
+                 dma_per_query=float((io - sv).mean()),
+                 dedup_saved_per_query=float(sv.mean()),
+                 tier0_hits_per_query=float(t0.mean()),
+                 t_io_us=br["t_io_us"], t_other_us=br["t_other_us"])
+    worst = max(step_us)
+    C.record("mesh_qps", mesh=f"model{model_ranks}xdata{data_ranks}",
+             batch=batch, slowest_rank_step_us=worst,
+             rank_skew=worst / max(min(step_us), 1e-9),
+             qps_modeled=batch * data_ranks / (worst * 1e-6))
+
+
 # ------------------------------------------------------------ Fig. 15
 
 def fig15_segment_size():

@@ -37,8 +37,10 @@ BENCHES = [
     io_bench.io_prefetch_width_sweep,
     io_bench.io_queue_depth_sweep,
     io_bench.io_tier2_budget_sweep,
+    paper_tables.mesh_qps_estimate,
     device_bench.device_vs_host,
     device_bench.device_tier0_budget_sweep,
+    device_bench.device_batch_dedup_sweep,
     device_bench.starling_fetch_width,
     device_bench.device_range_search_rounds,
     device_bench.batched_beam_throughput,

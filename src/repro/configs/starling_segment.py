@@ -70,10 +70,15 @@ SEGMENT_BENCH_DEVICE = dataclasses.replace(
 # the batched device-search knobs the benchmarks/serving dry-runs use:
 # the bench segment's Γ, paper σ, deep safety valve. DEVICE_SEARCH_WIDE
 # adds 2-wide DMA fetch (EXPERIMENTS §Perf cell 3 — fewer round trips,
-# same recall).
+# same recall). DEVICE_SEARCH_BATCH is the divergence-aware serving
+# point (ISSUE 4): wide fetch + active-query compaction once the live
+# fraction of the batch falls under 25% — cross-query block dedup is
+# always on (it only moves DMAs into the dedup_saved counter).
 DEVICE_SEARCH_BENCH = DeviceSearchParams(candidates=48, max_hops=256)
 DEVICE_SEARCH_WIDE = dataclasses.replace(DEVICE_SEARCH_BENCH,
                                          fetch_width=2)
+DEVICE_SEARCH_BATCH = dataclasses.replace(DEVICE_SEARCH_WIDE,
+                                          compact_frac=0.25)
 
 # the paper's full-size per-dataset index parameters (Tab. 16): used by
 # the byte-accounting tests (γ, ε, ρ must reproduce Example 2 exactly)

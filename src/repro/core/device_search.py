@@ -3,17 +3,30 @@
 The host implementation (``core/search.py``) is the per-query oracle; this
 module is the batched, jit'd production path:
 
-  * one ``lax.while_loop`` over hops for a whole query batch;
-  * each hop runs the pluggable *fetch stage*: probe the tier-0 VMEM
-    hot-tile pack first (a hit serves the block without the HBM->VMEM
-    DMA that models one 4 KB disk read; counted in ``tier0_hits``),
-    gather cold blocks from HBM exactly as the uncached path would
-    (counted in ``io``), exact-rank all resident vertices (the fused
-    ``tier0_fetch`` kernel), expand the sigma-pruned best residents,
-    and route new candidates by memory-resident PQ-ADC;
+  * one ``lax.while_loop`` over hops for a whole query batch, carrying
+    an explicit *active-query* view (``open_key``): converged queries
+    stop contributing to the loop condition, request no blocks (their
+    fetch slots carry the -1 sentinel the round kernel skips), and are
+    excluded from every DMA/tier-0 counter;
+  * each hop runs the fused *round stage* (``kernels.fused_round``):
+    probe the tier-0 VMEM hot-tile pack first (a hit serves the block
+    without the HBM->VMEM DMA that models one 4 KB disk read; counted
+    in ``tier0_hits``), union the round's block requests across the
+    query batch so each distinct cold block is gathered from HBM once
+    and broadcast to all requesters (joins counted in ``dedup_saved``;
+    the GoVector-style shared-I/O win, on device), exact-rank all
+    resident vertices and order the sigma-pruned expansion targets —
+    one kernel pass — then route new candidates by memory-resident
+    PQ-ADC;
+  * ``compact_frac`` > 0 adds divergence compaction: when the live
+    fraction of the batch drops below the threshold, live queries are
+    stably repacked to the front so converged queries cluster into
+    whole kernel tiles the round kernel skips (the permutation is
+    carried and inverted on exit — results are order-identical);
   * entry points come from an in-memory navigation-graph beam search;
-  * per-query DMA / tier-0-hit / round-trip counters are carried
-    exactly (the paper's "mean I/Os" splits across the hierarchy).
+  * per-query DMA / tier-0-hit / dedup-join / round-trip counters are
+    carried exactly (the paper's "mean I/Os" splits across the
+    hierarchy; actual DMAs issued = ``io - dedup_saved``).
 
 Tier 0 (DESIGN.md §3): ``DeviceSegment`` carries a packed copy of the
 hottest blocks — selected at build time from the same
@@ -76,9 +89,14 @@ class DeviceSearchResult(NamedTuple):
     """Per-query outputs of ``device_anns``."""
     ids: jnp.ndarray           # [Q, k]
     dists: jnp.ndarray         # [Q, k]
-    io: jnp.ndarray            # [Q] cold block DMAs (HBM round trips)
+    io: jnp.ndarray            # [Q] cold block touches (pre-dedup DMAs)
     hops: jnp.ndarray          # [Q] DMA round trips (fetch_width blocks each)
     tier0_hits: jnp.ndarray    # [Q] block touches served by the VMEM pack
+    dedup_saved: jnp.ndarray   # [Q] cold touches that joined another
+    #                            query's same-round gather (actual DMAs
+    #                            issued for this query = io - dedup_saved)
+    rounds: jnp.ndarray        # scalar: loop rounds the batch ran
+    #                            (hops / rounds = a query's occupancy)
 
 
 class DeviceRangeResult(NamedTuple):
@@ -86,12 +104,19 @@ class DeviceRangeResult(NamedTuple):
     ids: jnp.ndarray           # [Q, k_cap]
     dists: jnp.ndarray         # [Q, k_cap]
     in_range: jnp.ndarray      # [Q, k_cap] bool
-    io: jnp.ndarray            # [Q] cold block DMAs across all rounds
+    io: jnp.ndarray            # [Q] cold block touches across all rounds
     tier0_hits: jnp.ndarray    # [Q] tier-0 hits across all rounds
+    dedup_saved: jnp.ndarray   # [Q] same-round dedup joins, all rounds
+    rounds: jnp.ndarray        # scalar: total loop rounds, all RS rounds
 
 
-def _tier0_pack(seg, num_blocks: int):
-    """Select + pack the tier-0 hot set (host side, build time)."""
+def _tier0_pack(seg, num_blocks: int, observed=None):
+    """Select + pack the tier-0 hot set (host side, build time).
+
+    ``observed`` (block id -> demand-read count, e.g. a serving
+    ``CachedBlockStore.block_freq``) re-ranks the build-time selection
+    by what the query stream actually touched — the dynamic-admission
+    repack of a drifting workload."""
     from repro.io import hotset
 
     v = seg.view
@@ -104,6 +129,8 @@ def _tier0_pack(seg, num_blocks: int):
         ranking = hotset.hot_block_ranking(
             v.layout.block_of, seg.graph.adj, seg.graph.deg,
             hotset.view_seed_ids(v))
+        if observed:
+            ranking = hotset.repack_from_frequencies(ranking, observed)
         hot = hotset.fill_to(ranking, num_blocks, rho)
     slot_of = np.full(rho, -1, np.int32)
     if hot:
@@ -118,7 +145,8 @@ def _tier0_pack(seg, num_blocks: int):
 
 
 def from_segment(seg, tier0_blocks: Optional[int] = None,
-                 tier0_frac: Optional[float] = None) -> DeviceSegment:
+                 tier0_frac: Optional[float] = None,
+                 observed=None) -> DeviceSegment:
     """Host ``Segment`` -> device arrays.
 
     The tier-0 hot-tile budget comes from, in precedence order:
@@ -126,7 +154,13 @@ def from_segment(seg, tier0_blocks: Optional[int] = None,
     of the block file), else ``seg.params.cache`` (the Eq. 10-charged
     configuration). Budget 0 packs the sentinel slot only — the search
     is then bit-identical to the seed's uncached device path *and* to
-    any budgeted pack (the pack holds exact copies)."""
+    any budgeted pack (the pack holds exact copies).
+
+    ``observed`` re-ranks the pack from observed per-block demand
+    frequencies (``hotset.repack_from_frequencies``) — dynamic tier-0
+    admission for workloads that drifted away from the build-time
+    entry-neighborhood prior. Results stay bit-identical for any pack
+    (exact copies); only the io/tier0_hits split moves."""
     v = seg.view
     nav = v.nav
     if tier0_blocks is None:
@@ -136,7 +170,8 @@ def from_segment(seg, tier0_blocks: Optional[int] = None,
         else:
             tier0_blocks = (seg.params.cache.resolve_tier0_budget(
                 v.store.disk_bytes()) // block_bytes)
-    hot_vecs, hot_vid, hot_nbrs, slot_of = _tier0_pack(seg, tier0_blocks)
+    hot_vecs, hot_vid, hot_nbrs, slot_of = _tier0_pack(
+        seg, tier0_blocks, observed=observed)
     return DeviceSegment(
         vecs=jnp.asarray(v.store.vecs),
         vid=jnp.asarray(v.store.vid),
@@ -291,82 +326,159 @@ def nav_entry_points(ds: DeviceSegment, queries: jnp.ndarray,
 
 # ------------------------------------------------------ main block search
 
-def _fetch_stage(ds: DeviceSegment, queries: jnp.ndarray, b: jnp.ndarray,
-                 metric: str, impl: str):
-    """Pluggable fetch stage (DR): probe tier 0, serve hot blocks from
-    the VMEM pack, gather cold blocks via the modeled HBM DMA, and
-    exact-rank the gathered tiles.
+def _round_stage(ds: DeviceSegment, queries: jnp.ndarray, u: jnp.ndarray,
+                 metric: str, impl: str, n_expand: int):
+    """The fused per-round fetch pipeline (DR): tier-0 probe,
+    cross-query-deduped block gather, exact rank, and the per-query
+    top-``n_expand`` expansion order — one pass.
 
-    b [Q, F] block ids -> (vid [Q, F*eps], nbrs [Q, F*eps, Lam],
-    dists [Q, F*eps], hot [Q, F]). ``impl='fused'`` ranks through the
-    ``tier0_fetch`` Pallas kernel; ``'jnp'`` is the pure-jnp reference —
-    both bit-identical (same gather sources, same f32 distance form)."""
+    u [Q, F] picked candidate ids (-1 = converged/empty slot) ->
+    (vid [Q, F*eps], nbrs [Q, F*eps, Lam], dists [Q, F*eps],
+    hit [Q, F] i32, order [Q, n_expand]). ``impl='fused'`` runs the
+    ``fused_round`` Pallas kernel (deduped gather, idle-tile skip);
+    ``'jnp'`` is the pure-jnp reference with straight per-request
+    gathers — bit-identical payloads (dedup only changes which gather
+    produced a tile, never its value; same f32 distance form, same
+    stable-argsort tie-breaking)."""
     from repro import kernels as K
 
-    qn, fw = b.shape
-    eps = ds.vid.shape[1]
-    slot = ds.hot_slot_of[b]                              # [Q, F] probe
-    hot = slot >= 0
-    s_safe = jnp.maximum(slot, 0)
-    # block metadata rides the same tier the payload came from (the
-    # pack holds exact copies, so values are identical either way)
-    vid = jnp.where(hot[:, :, None], ds.hot_vid[s_safe], ds.vid[b])
-    nbrs = jnp.where(hot[:, :, None, None], ds.hot_nbrs[s_safe],
-                     ds.nbrs[b])
     if impl == "fused":
-        dd, hit = K.tier0_rank(queries, b, ds.hot_slot_of, ds.hot_vecs,
-                               ds.vecs, metric=metric)
-        hot = hit.astype(bool)
+        dd, vid, nbrs, hit, order = K.fused_round(
+            queries, u, ds.block_of, ds.hot_slot_of, ds.hot_vecs,
+            ds.hot_vid, ds.hot_nbrs, ds.vecs, ds.vid, ds.nbrs,
+            n_expand, metric=metric)
     else:
-        vecs = jnp.where(hot[:, :, None, None], ds.hot_vecs[s_safe],
-                         ds.vecs[b])
-        dd = _dists(queries, vecs.reshape(qn, fw * eps, -1), metric)
-    return (vid.reshape(qn, fw * eps),
-            nbrs.reshape(qn, fw * eps, -1), dd, hot)
+        from repro.kernels import ref
+        dd, vid, nbrs, hit, order = ref.fused_round_ref(
+            queries, u, ds.block_of, ds.hot_slot_of, ds.hot_vecs,
+            ds.hot_vid, ds.hot_nbrs, ds.vecs, ds.vid, ds.nbrs,
+            n_expand, metric=metric)
+    return vid, nbrs, dd, hit, order
+
+
+def _open_keys(cand_id: jnp.ndarray, cand_key: jnp.ndarray,
+               visited: jnp.ndarray) -> jnp.ndarray:
+    """Candidate keys with visited/invalid entries masked to +inf — the
+    carried what's-still-expandable view; a query is *active* iff any
+    entry is finite. Carrying it means the loop ``cond`` reads it for
+    free instead of re-gathering the visited bitmask every round."""
+    vis = _bit_get(visited, jnp.maximum(cand_id, 0)) | (cand_id < 0)
+    return jnp.where(vis, jnp.inf, cand_key)
+
+
+def _dedup_joins(b: jnp.ndarray, cold: jnp.ndarray,
+                 tile: int) -> jnp.ndarray:
+    """Mark cold block requests that join an earlier request's gather.
+
+    b, cold [Q, F] -> joined [Q, F] bool: True where the same round
+    already gathers this block for an earlier (flat-order) cold request
+    in the same round-kernel query tile (``kernels.round_tile`` — the
+    scope one kernel invocation dedups across). The first requester
+    pays the DMA (stays in ``io``); joiners land in ``dedup_saved``."""
+    qn, fw = b.shape
+    pad = (-qn) % tile
+    bp = jnp.pad(b, ((0, pad), (0, 0)))
+    cp = jnp.pad(cold, ((0, pad), (0, 0)))
+    t = bp.shape[0] // tile
+    r = tile * fw
+    flat_b = bp.reshape(t, r)
+    flat_c = cp.reshape(t, r)
+    # non-cold slots get unique negative sentinels so they never form
+    # duplicate groups; stable sort keeps the earliest requester first
+    key = jnp.where(flat_c, flat_b,
+                    -1 - jnp.arange(r, dtype=jnp.int32)[None, :])
+    order = jnp.argsort(key, axis=1)
+    sk = jnp.take_along_axis(key, order, axis=1)
+    dup = jnp.concatenate(
+        [jnp.zeros((t, 1), bool), sk[:, 1:] == sk[:, :-1]], axis=1)
+    joined = jnp.zeros((t, r), bool).at[
+        jnp.arange(t)[:, None], order].set(dup)
+    return joined.reshape(-1)[: qn * fw].reshape(qn, fw)
 
 
 def _block_search_loop(ds: DeviceSegment, queries: jnp.ndarray, lut,
                        state, *, res_size: int, candidates: int,
                        sigma: float, max_hops: int, metric: str,
-                       fetch_width: int, fetch_impl: str):
+                       fetch_width: int, fetch_impl: str,
+                       compact_frac: float = 0.0):
     """The batched best-first block search from a given carried state.
 
-    ``state`` = (cand_id, cand_key, visited, res_id, res_key, io, t0,
-    hops); the range-search driver re-enters with the previous round's
-    ``visited``/result arrays so already-expanded vertices are never
-    re-fetched (PR 2's host RS resume fix, device formulation)."""
+    ``state`` = (cand_id, cand_key, open_key, visited, res_id, res_key,
+    io, t0, hops, saved, t); the range-search driver re-enters with the
+    previous round's ``visited``/result arrays so already-expanded
+    vertices are never re-fetched (PR 2's host RS resume fix, device
+    formulation). ``open_key`` (``_open_keys``) is the carried active
+    view: the loop condition and the pick stage read it directly
+    instead of re-probing the visited bitmask every round.
+
+    ``compact_frac`` > 0 (jit-static) turns on divergence compaction:
+    rounds whose live fraction fell below the threshold stably repack
+    live queries to the front — converged queries then fill whole
+    round-kernel tiles, which the fused kernel skips — at the price of
+    re-gathering ``queries``/``lut`` rows through the carried
+    permutation each round. The permutation is inverted before
+    returning, so callers see original query order either way."""
     qn = queries.shape[0]
     eps = ds.vid.shape[1]
     fw = max(fetch_width, 1)
     n_expand = fw * (1 + max(int(np.ceil((eps - 1) * sigma)), 0))
+    from repro import kernels as K
+    tile = K.round_tile(qn)
+    compact = compact_frac > 0.0
 
     def cond(st):
-        cand_id, cand_key, visited, *_, t = st
-        vis = _bit_get(visited, jnp.maximum(cand_id, 0)) | (cand_id < 0)
-        live = jnp.isfinite(jnp.where(vis, jnp.inf, cand_key)).any()
-        return live & (t < max_hops)
+        open_key, t = st[2], st[-1]
+        return jnp.isfinite(open_key).any() & (t < max_hops)
 
     def body(st):
-        (cand_id, cand_key, visited, res_id, res_key, io, t0, hops,
-         t) = st
-        vis = _bit_get(visited, jnp.maximum(cand_id, 0)) | (cand_id < 0)
-        open_key = jnp.where(vis, jnp.inf, cand_key)
+        if compact:
+            (cand_id, cand_key, open_key, visited, res_id, res_key,
+             io, t0, hops, saved, perm, t) = st
+        else:
+            (cand_id, cand_key, open_key, visited, res_id, res_key,
+             io, t0, hops, saved, t) = st
+
+        # --- active mask + optional live-query compaction
+        live = jnp.isfinite(open_key).any(axis=1)            # [Q]
+        if compact:
+            frac = live.astype(jnp.float32).mean()
+            ident = jnp.arange(qn, dtype=jnp.int32)
+            ordr = jnp.where(
+                frac < compact_frac,
+                jnp.argsort(jnp.logical_not(live)),          # stable:
+                ident)            # live first, original order within
+            take = lambda a: jnp.take(a, ordr, axis=0)
+            cand_id, cand_key, open_key = (take(cand_id),
+                                           take(cand_key),
+                                           take(open_key))
+            visited, res_id, res_key = (take(visited), take(res_id),
+                                        take(res_key))
+            io, t0, hops, saved = (take(io), take(t0), take(hops),
+                                   take(saved))
+            live, perm = take(live), take(perm)
+            q_r, lut_r = queries[perm], lut[perm]
+        else:
+            q_r, lut_r = queries, lut
+
+        # --- pick the F best open candidates per query (converged
+        # queries pick nothing: every slot carries the -1 sentinel)
         neg_top, picks = jax.lax.top_k(-open_key, fw)        # [Q, F]
         f_active = jnp.isfinite(-neg_top)                    # [Q, F]
         active = f_active[:, 0]
         u = jnp.take_along_axis(cand_id, picks, axis=1)      # [Q, F]
         u = jnp.where(f_active, u, -1)
-        u_safe = jnp.maximum(u, 0)
+        b = ds.block_of[jnp.maximum(u, 0)]                   # [Q, F]
 
-        # --- DR fetch stage: tier-0 probe, then F block gathers per
-        # round trip (hot slots skip the DMA counter)
-        b = ds.block_of[u_safe]                              # [Q, F]
-        vid, nbrs, dd, hot = _fetch_stage(ds, queries, b, metric,
-                                          fetch_impl)
-        hot = hot & f_active
+        # --- DR round stage: probe tier 0, dedup + gather the round's
+        # block union, rank, and order expansions — one fused pass
+        vid, nbrs, dd, hit, order = _round_stage(
+            ds, q_r, u, metric, fetch_impl, n_expand)
+        hot = hit.astype(bool) & f_active
         cold = f_active & ~hot
+        joined = _dedup_joins(b, cold, tile)                 # [Q, F]
         io = io + cold.sum(axis=1).astype(jnp.int32)
         t0 = t0 + hot.sum(axis=1).astype(jnp.int32)
+        saved = saved + joined.sum(axis=1).astype(jnp.int32)
         hops = hops + active.astype(jnp.int32)               # round trips
 
         # --- DC: fold the exact-ranked residents into results
@@ -377,11 +489,11 @@ def _block_search_loop(ds: DeviceSegment, queries: jnp.ndarray, lut,
                                      jnp.where(slot_valid, vid, -1),
                                      res_size)
 
-        # --- block pruning: expand targets + top-((eps-1)*sigma)
+        # --- block pruning: targets + top-((eps-1)*sigma), in the
+        # expansion order the round stage already ranked
         is_target = (vid[:, :, None] == u[:, None, :]).any(-1) \
             & (vid >= 0)
         sel_key = jnp.where(is_target, -jnp.inf, dd_m)
-        order = jnp.argsort(sel_key, axis=1)[:, :n_expand]   # [Q, X]
         ex_id = jnp.take_along_axis(vid, order, axis=1)
         ex_valid = (jnp.take_along_axis(sel_key, order, axis=1)
                     < jnp.inf) & active[:, None] & (ex_id >= 0)
@@ -399,14 +511,25 @@ def _block_search_loop(ds: DeviceSegment, queries: jnp.ndarray, lut,
         f_safe = jnp.maximum(flat, 0)
         f_valid &= ~_bit_get(visited, f_safe)                # skip expanded
         f_codes = ds.pq_codes[f_safe]                        # [Q, F, M]
-        f_key = jnp.where(f_valid, _adc(lut, f_codes), jnp.inf)
+        f_key = jnp.where(f_valid, _adc(lut_r, f_codes), jnp.inf)
         f_id = jnp.where(f_valid, flat, -1)
         cand_key, cand_id = _merge_top(cand_key, cand_id, f_key, f_id,
                                        candidates)
-        return (cand_id, cand_key, visited, res_id, res_key, io, t0,
-                hops, t + 1)
+        open_key = _open_keys(cand_id, cand_key, visited)
+        if compact:
+            return (cand_id, cand_key, open_key, visited, res_id,
+                    res_key, io, t0, hops, saved, perm, t + 1)
+        return (cand_id, cand_key, open_key, visited, res_id, res_key,
+                io, t0, hops, saved, t + 1)
 
-    return jax.lax.while_loop(cond, body, state)
+    if not compact:
+        return jax.lax.while_loop(cond, body, state)
+    perm0 = jnp.arange(qn, dtype=jnp.int32)
+    st = state[:-1] + (perm0, state[-1])
+    out = jax.lax.while_loop(cond, body, st)
+    *arrs, perm, t = out
+    inv = jnp.argsort(perm)                  # undo the compaction order
+    return tuple(jnp.take(a, inv, axis=0) for a in arrs) + (t,)
 
 
 DEFAULT_DEVICE_SEARCH = DeviceSearchParams()
@@ -424,9 +547,13 @@ def device_anns(ds: DeviceSegment, queries: jnp.ndarray,
     as one — this trades block-bandwidth for round-trip latency).
 
     Returns ``DeviceSearchResult(ids [Q, k], dists [Q, k], io [Q] cold
-    block DMAs, hops [Q] round trips, tier0_hits [Q])``. Tier-0 budget
-    moves touches from ``io`` to ``tier0_hits`` without changing
-    (ids, dists) — asserted in tests and the device_bench sweep."""
+    block touches, hops [Q] round trips, tier0_hits [Q], dedup_saved
+    [Q], rounds)``. Tier-0 budget moves touches from ``io`` to
+    ``tier0_hits``; cross-query dedup moves actual DMAs from ``io`` to
+    ``dedup_saved`` (``io`` still counts every cold touch, so its
+    semantics — and the io+tier0 block-touch total — are unchanged);
+    neither changes (ids, dists) — asserted in tests and the
+    device_bench sweeps."""
     qn, d = queries.shape
     eps = ds.vid.shape[1]
     n = ds.block_of.shape[0]
@@ -446,21 +573,25 @@ def device_anns(ds: DeviceSegment, queries: jnp.ndarray,
     cand_key = jnp.full((qn, p.candidates), jnp.inf)
     cand_key, cand_id = _merge_top(cand_key, cand_id, e_key, entry,
                                    p.candidates)
+    visited = jnp.zeros((qn, nb_words), jnp.uint32)          # expanded set
     state = (cand_id, cand_key,
-             jnp.zeros((qn, nb_words), jnp.uint32),          # expanded set
+             _open_keys(cand_id, cand_key, visited),
+             visited,
              jnp.full((qn, res_size), -1, jnp.int32),
              jnp.full((qn, res_size), jnp.inf),
              jnp.zeros((qn,), jnp.int32),                    # io
              jnp.zeros((qn,), jnp.int32),                    # tier-0 hits
              jnp.zeros((qn,), jnp.int32),                    # hops
+             jnp.zeros((qn,), jnp.int32),                    # dedup joins
              jnp.zeros((), jnp.int32))
     state = _block_search_loop(
         ds, queries, lut, state, res_size=res_size,
         candidates=p.candidates, sigma=p.sigma, max_hops=p.max_hops,
-        metric=metric, fetch_width=fw, fetch_impl=p.fetch_impl)
-    _, _, _, res_id, res_key, io, t0, hops, _ = state
+        metric=metric, fetch_width=fw, fetch_impl=p.fetch_impl,
+        compact_frac=p.compact_frac)
+    _, _, _, _, res_id, res_key, io, t0, hops, saved, t = state
     return DeviceSearchResult(res_id[:, : p.k], res_key[:, : p.k], io,
-                              hops, t0)
+                              hops, t0, saved, t)
 
 
 # --------------------------------------------- production mesh search step
@@ -481,11 +612,13 @@ def make_search_step(mesh, rules, *,
     ``model``.
 
     ``search`` carries every online knob (today's production defaults
-    when omitted): Γ, σ, fetch width, nav beam — and the tier-0 budget,
-    which sizes the per-rank hot-tile pack in the argument specs. The
-    step returns (gid, dists, io, hops, tier0_hits); the per-rank
-    io/hops/tier-0 columns land in the ``(data, model)``-sharded
-    outputs."""
+    when omitted): Γ, σ, fetch width, nav beam, compaction — and the
+    tier-0 budget, which sizes the per-rank hot-tile pack in the
+    argument specs. The step returns (gid, dists, io, hops,
+    tier0_hits, dedup_saved); the per-rank io/hops/tier-0/dedup
+    columns land in the ``(data, model)``-sharded outputs — the
+    mesh-level QPS fold in ``benchmarks/paper_tables.py`` consumes
+    exactly these."""
     from jax.sharding import NamedSharding, PartitionSpec as P
     try:
         from jax import shard_map
@@ -532,7 +665,8 @@ def make_search_step(mesh, rules, *,
         nav_entry=P("model"), hot_vecs=P("model"), hot_vid=P("model"),
         hot_nbrs=P("model"), hot_slot_of=P("model")), P(data_axes))
     out_specs = (P(data_axes), P(data_axes), P(data_axes, "model"),
-                 P(data_axes, "model"), P(data_axes, "model"))
+                 P(data_axes, "model"), P(data_axes, "model"),
+                 P(data_axes, "model"))
 
     def local_search(seg: DeviceSegment, queries):
         seg = jax.tree.map(lambda a: a[0], seg)      # strip shard dim
@@ -558,7 +692,8 @@ def make_search_step(mesh, rules, *,
         gid = out_seg * n_local + out_i
         col = jnp.ones((1, 1), jnp.int32)
         return (gid, out_d, r.io[:, None] * col, r.hops[:, None] * col,
-                r.tier0_hits[:, None] * col)
+                r.tier0_hits[:, None] * col,
+                r.dedup_saved[:, None] * col)
 
     import inspect
     flag = ("check_vma" if "check_vma"
@@ -610,6 +745,8 @@ def device_range_search(ds: DeviceSegment, queries: jnp.ndarray,
     io = jnp.zeros((qn,), jnp.int32)
     t0 = jnp.zeros((qn,), jnp.int32)
     hops = jnp.zeros((qn,), jnp.int32)
+    saved = jnp.zeros((qn,), jnp.int32)
+    total_rounds = jnp.zeros((), jnp.int32)
     seed_id, seed_key = entry, e_key
 
     c = p.candidates
@@ -625,13 +762,18 @@ def device_range_search(ds: DeviceSegment, queries: jnp.ndarray,
         if res_id.shape[1]:
             r_key, r_id = _merge_top(r_key, r_id, res_key, res_id,
                                      res_size)
-        state = (cand_id, cand_key, visited, r_id, r_key, io, t0, hops,
+        state = (cand_id, cand_key,
+                 _open_keys(cand_id, cand_key, visited), visited,
+                 r_id, r_key, io, t0, hops, saved,
                  jnp.zeros((), jnp.int32))
         state = _block_search_loop(
             ds, queries, lut, state, res_size=res_size, candidates=c,
             sigma=p.sigma, max_hops=p.max_hops, metric=metric,
-            fetch_width=fw, fetch_impl=p.fetch_impl)
-        _, _, visited, res_id, res_key, io, t0, hops, _ = state
+            fetch_width=fw, fetch_impl=p.fetch_impl,
+            compact_frac=p.compact_frac)
+        (_, _, _, visited, res_id, res_key, io, t0, hops, saved,
+         t) = state
+        total_rounds = total_rounds + t
         if c * 2 > k_cap:
             break
         c *= 2
@@ -646,4 +788,5 @@ def device_range_search(ds: DeviceSegment, queries: jnp.ndarray,
         ids = jnp.pad(ids, ((0, 0), (0, pad)), constant_values=-1)
         dists = jnp.pad(dists, ((0, 0), (0, pad)),
                         constant_values=jnp.inf)
-    return DeviceRangeResult(ids, dists, dists <= radius, io, t0)
+    return DeviceRangeResult(ids, dists, dists <= radius, io, t0,
+                             saved, total_rounds)

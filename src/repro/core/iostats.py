@@ -33,7 +33,12 @@ Pricing summary (repro.io):
     while shallow queues degrade to the flat synchronous price;
   * a demand read that joins an already-in-flight fetch
     (``inflight_joins``) pays only the modeled residual service time
-    (``join_residual`` × ``t_block_io``) instead of a new round trip.
+    (``join_residual`` × ``t_block_io``) instead of a new round trip;
+  * a cold block touch that joins another query's gather of the same
+    block *in the same device round* (``dedup_saved_fetches`` — the
+    batched device search unions per-round block requests across the
+    batch) pays ``t_dedup_hit`` (a VMEM broadcast of the one DMA that
+    did happen) instead of its own ``t_block_io``.
 """
 from __future__ import annotations
 
@@ -60,6 +65,12 @@ class IOStats:
     #                             fetch (cross-query dedup wins)
     join_residual: float = 0.0  # Σ residual service fraction over joins
     completion_reorders: int = 0  # completions delivered out of submit order
+    dedup_saved_fetches: int = 0  # cold device touches that joined another
+    #                               query's same-round gather of the same
+    #                               block (cross-query dedup — no own DMA)
+    rounds_active_weight: float = 0.0  # Σ hops / batch rounds: the share
+    #                               of the batched loop's rounds this query
+    #                               was live for (divergence occupancy)
     vertices_fetched: int = 0   # ε per block read
     vertices_used: int = 0      # distance-evaluated full-precision vertices
     hops: int = 0               # total expansions (== block reads)
@@ -90,15 +101,24 @@ class IOStats:
                     getattr(self, f.name) + getattr(other, f.name))
 
     @classmethod
-    def from_device(cls, io, tier0_hits=0, hops=0) -> "IOStats":
+    def from_device(cls, io, tier0_hits=0, hops=0, dedup_saved=0,
+                    rounds=0) -> "IOStats":
         """Counters of one query's device search (``device_anns``):
-        ``io`` cold HBM block DMAs, ``tier0_hits`` touches served by the
-        VMEM hot-tile pack, ``hops`` DMA round trips. Cold DMAs price as
-        misses (one trip each — batched-width amortization is already in
-        the hop count), hot touches at ``t_tier0_hit``."""
+        ``io`` cold block touches, ``tier0_hits`` touches served by the
+        VMEM hot-tile pack, ``hops`` DMA round trips, ``dedup_saved``
+        cold touches that joined another query's same-round gather
+        (so only ``io - dedup_saved`` DMAs actually issued), ``rounds``
+        total loop rounds of the batch this query rode in. Cold DMAs
+        price as misses (one trip each — batched-width amortization is
+        already in the hop count), hot touches at ``t_tier0_hit``,
+        deduped touches at ``t_dedup_hit``."""
         io, t0, h = int(io), int(tier0_hits), int(hops)
-        return cls(block_reads=io + t0, io_round_trips=io,
-                   cache_misses=io, tier0_hits=t0, hops=h)
+        saved = min(int(dedup_saved), io)
+        return cls(block_reads=io + t0, io_round_trips=io - saved,
+                   cache_misses=io, tier0_hits=t0, hops=h,
+                   dedup_saved_fetches=saved,
+                   rounds_active_weight=(h / int(rounds)
+                                         if int(rounds) > 0 else 0.0))
 
     @property
     def cache_hit_rate(self) -> float:
@@ -140,6 +160,9 @@ class CostModel:
     #                             PQ-space summary (decompress + re-rank)
     t_tier0_hit: float = 0.0    # demand read served by the device VMEM
     #                             hot-tile pack (tier 0 — no HBM DMA)
+    t_dedup_hit: float = 0.0    # cold touch that joined another query's
+    #                             same-round gather (VMEM broadcast of a
+    #                             DMA someone else already paid for)
     name: str = "model"
 
     def _io_time(self, s: IOStats) -> float:
@@ -158,7 +181,8 @@ class CostModel:
         t_batch = self.t_batch_block if self.t_batch_block else \
             self.t_block_io
         full_reads = max(s.block_reads - s.tier0_hits - s.cache_hits
-                        - s.tier2_hits - s.inflight_joins, 0)
+                        - s.tier2_hits - s.inflight_joins
+                        - s.dedup_saved_fetches, 0)
         # trips beyond one-per-miss are speculative-only (hit + prefetch);
         # async demand submissions count one trip per non-joined miss, so
         # adding inflight_joins back keeps the sync surplus exact.
@@ -169,6 +193,7 @@ class CostModel:
                 + (s.prefetched_blocks - spec_trips) * t_batch
                 + s.queue_occ_weight * t_batch
                 + s.join_residual * self.t_block_io
+                + s.dedup_saved_fetches * self.t_dedup_hit
                 + s.tier0_hits * self.t_tier0_hit
                 + s.cache_hits * self.t_cache_hit
                 + s.tier2_hits * self.t_tier2_hit)
@@ -207,7 +232,8 @@ class CostModel:
 # decompresses a ~256 B PQ-space summary and re-ranks (~2.5 µs).
 NVME_SEGMENT = CostModel(t_block_io=95.0, t_dist=0.055, t_pq=0.012,
                          t_cache_hit=0.5, t_batch_block=18.0,
-                         t_tier2_hit=2.5, t_tier0_hit=0.5, name="nvme")
+                         t_tier2_hit=2.5, t_tier0_hit=0.5,
+                         t_dedup_hit=0.5, name="nvme")
 
 # TPU regime (DESIGN.md §2): 4 KB HBM→VMEM DMA ≈ 1.2 µs latency-bound,
 # VPU block ranking ≈ 0.02 µs/vector amortized, ADC ≈ 0.002 µs via LUT
@@ -215,7 +241,9 @@ NVME_SEGMENT = CostModel(t_block_io=95.0, t_dist=0.055, t_pq=0.012,
 # stream at HBM bandwidth (~0.35 µs per extra 4 KB); a tier-2 hit is a
 # VMEM LUT re-rank of the resident summary tile. A tier-0 hit reads the
 # hot tile already *in VMEM* — no DMA at all, just the probe, ~10 ns.
+# A dedup hit rides another query's same-round DMA: the tile lands in
+# VMEM once and broadcasts, so it prices like a tier-0 hit.
 TPU_HBM_SEGMENT = CostModel(t_block_io=1.2, t_dist=0.02, t_pq=0.002,
                             t_cache_hit=0.05, t_batch_block=0.35,
                             t_tier2_hit=0.08, t_tier0_hit=0.01,
-                            name="tpu-hbm")
+                            t_dedup_hit=0.01, name="tpu-hbm")

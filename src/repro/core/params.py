@@ -203,8 +203,16 @@ class DeviceSearchParams:
     VMEM hot-tile pack for ``make_search_step``'s specs; segments built
     through ``from_segment`` take the (equivalent) budget from
     ``CacheParams`` so host and device agree. ``fetch_impl`` picks the
-    fused Pallas probe+gather+rank kernel or the pure-jnp reference
-    fetch stage — both bit-identical.
+    fused Pallas round kernel (probe + deduped gather + rank) or the
+    pure-jnp reference fetch stage — both bit-identical.
+
+    ``compact_frac`` > 0 enables active-query compaction: when the live
+    fraction of the batch drops below the threshold, the round repacks
+    live queries to the front (a stable permutation, inverted on exit)
+    so converged queries cluster into whole kernel tiles the fused
+    round kernel skips. 0 disables compaction; results are identical
+    either way — only which tile a query lands in (and thus the dedup
+    grouping of its block requests) moves.
     """
     k: int = 10                   # results per query
     candidates: int = 64          # Γ (candidate-set size)
@@ -216,6 +224,9 @@ class DeviceSearchParams:
     entry_points: int = 4         # entries handed to the block search
     tier0_frac: float = 0.0       # VMEM hot-tile share of the block file
     fetch_impl: str = "fused"     # fused (Pallas kernel) | jnp (reference)
+    compact_frac: float = 0.0     # repack live queries to the front when
+    #                               the active fraction falls below this
+    #                               (0 = never compact)
 
     def __post_init__(self):
         if self.k < 1 or self.candidates < self.k:
@@ -228,6 +239,8 @@ class DeviceSearchParams:
         if self.fetch_impl not in ("fused", "jnp"):
             raise ValueError(
                 f"unknown fetch_impl {self.fetch_impl!r} (fused | jnp)")
+        if not (0.0 <= self.compact_frac <= 1.0):
+            raise ValueError("compact_frac must be in [0, 1]")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -51,13 +51,14 @@ from repro.io.cache import (BlockCache, EvictionPolicy, LFUPolicy,
 from repro.io.cached_store import (CachedBlockStore, cached_view,
                                    make_cached_store)
 from repro.io.hotset import (fill_to, hot_block_pin_set,
-                             hot_block_ranking, view_seed_ids)
+                             hot_block_ranking, repack_from_frequencies,
+                             view_seed_ids)
 from repro.io.prefetch import PrefetchEngine
 
 __all__ = [
     "AsyncFetchQueue", "FetchTicket",
     "BlockCache", "TieredBlockCache", "EvictionPolicy", "LRUPolicy",
     "LFUPolicy", "hot_block_pin_set", "hot_block_ranking", "fill_to",
-    "view_seed_ids", "CachedBlockStore", "cached_view",
-    "make_cached_store", "PrefetchEngine",
+    "repack_from_frequencies", "view_seed_ids", "CachedBlockStore",
+    "cached_view", "make_cached_store", "PrefetchEngine",
 ]

@@ -35,6 +35,7 @@ accounting and batching:
 from __future__ import annotations
 
 import dataclasses
+from collections import Counter
 from typing import List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -58,6 +59,10 @@ class CachedBlockStore:
         self.queue = queue
         self.stats_sink: Optional[IOStats] = None
         self.total = IOStats()          # lifetime counters across queries
+        # lifetime demand-read count per block: the observed-frequency
+        # feed for dynamic hot-set admission (hotset.
+        # repack_from_frequencies / device_search.from_segment(observed=))
+        self.block_freq: Counter = Counter()
         # (kind, block) log of disk fetches, kind in {"miss", "prefetch"};
         # test hook for the never-fetch-twice invariant.
         self.fetch_log: Optional[List[Tuple[str, int]]] = \
@@ -90,6 +95,7 @@ class CachedBlockStore:
         submit/wait path when an ``AsyncFetchQueue`` is attached,
         otherwise coalesces the speculation into the demand round trip.
         """
+        self.block_freq[int(b)] += 1
         if self.queue is not None:
             return self._read_async(b, stats, prefetch)
         tier = self._lookup_tier(b)

@@ -17,12 +17,16 @@ Consumers:
 
 The selection is *build-time* and static: loading the hot set is a
 warm-up cost, not query-time I/O, and its bytes are reserved memory
-charged against the Eq. 10 segment budget.
+charged against the Eq. 10 segment budget. For workloads that drift
+away from the build-time prior, ``repack_from_frequencies`` re-ranks
+the same family from *observed* per-block demand counts (e.g. a
+serving ``CachedBlockStore.block_freq``) — dynamic tier-0/tier-1
+admission as a periodic repack rather than per-query churn.
 """
 from __future__ import annotations
 
 from collections import Counter
-from typing import List, Optional, Sequence
+from typing import List, Mapping, Optional, Sequence
 
 import numpy as np
 
@@ -71,6 +75,27 @@ def hot_block_pin_set(block_of: np.ndarray, adj: np.ndarray,
         return []
     return hot_block_ranking(block_of, adj, deg, seed_ids, hops)[
         :max_blocks]
+
+
+def repack_from_frequencies(ranking: Sequence[int],
+                            observed: Mapping[int, int]) -> List[int]:
+    """Re-rank a build-time hot-block ranking by observed traffic.
+
+    ``observed`` maps block id -> demand-read count from a live query
+    stream (``CachedBlockStore.block_freq``). Blocks actually touched
+    sort first by descending count — ties broken by build-ranking
+    position (then id, for blocks the build ranking never scored) —
+    followed by the untouched remainder of the build ranking in its
+    original order. With no observations this is the identity, so a
+    cold repack never degrades the build-time selection; feeding the
+    result to ``fill_to`` keeps budget sweeps prefix-nested exactly as
+    before."""
+    pos = {int(b): i for i, b in enumerate(ranking)}
+    far = len(pos)
+    seen = [int(b) for b, c in observed.items() if c > 0]
+    seen.sort(key=lambda b: (-int(observed[b]), pos.get(b, far), b))
+    hot = set(seen)
+    return seen + [b for b in ranking if int(b) not in hot]
 
 
 def fill_to(ranking: Sequence[int], num_blocks: int,

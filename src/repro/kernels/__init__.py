@@ -3,9 +3,11 @@
 #   pq_adc      — batched PQ asymmetric-distance via one-hot MXU matmul
 #   block_topk  — fused block-tile ranking: distances + top-m select (VPU)
 #   tier0_fetch — fused tier-0 probe + gather + rank: the device search's
-#                 fetch stage (VMEM hot-tile hit or HBM block DMA)
+#                 ISSUE-3 fetch stage (VMEM hot-tile hit or HBM block DMA)
+#                 + fused_round, the divergence-aware batched round:
+#                 probe + cross-query-deduped gather + rank + top-M order
 # Each kernel: <name>.py (pl.pallas_call + BlockSpec) with a pure-jnp
 # oracle in ref.py and the jit'd dispatch wrapper in ops.py.
 from repro.kernels.ops import (pairwise_l2, pq_adc_batch, block_rank,
-                               tier0_rank, set_interpret,
-                               interpret_default)
+                               tier0_rank, fused_round, round_tile,
+                               set_interpret, interpret_default)

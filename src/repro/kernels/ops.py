@@ -85,6 +85,41 @@ def block_rank(queries: jnp.ndarray, tiles: jnp.ndarray, top_m: int,
     return d[: queries.shape[0]], idx[: queries.shape[0]]
 
 
+def round_tile(qn: int) -> int:
+    """The query-tile size the fused round kernel runs at for a batch
+    of ``qn`` — also the scope of its cross-query block dedup (the
+    search loop's ``dedup_saved`` accounting segments by this)."""
+    return min(_t0.BQ, max(8, qn))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_expand", "metric", "interpret",
+                                    "bq"))
+def fused_round(queries: jnp.ndarray, u: jnp.ndarray,
+                block_of: jnp.ndarray, hot_slot_of: jnp.ndarray,
+                hot_vecs: jnp.ndarray, hot_vid: jnp.ndarray,
+                hot_nbrs: jnp.ndarray, vecs: jnp.ndarray,
+                vid: jnp.ndarray, nbrs: jnp.ndarray, n_expand: int,
+                metric: str = "l2", interpret: bool = None,
+                bq: int = None):
+    """Fused per-round fetch pipeline of the batched device search:
+    tier-0 probe + cross-query-deduped gather + exact distances +
+    per-query top-``n_expand`` expansion order, one kernel pass.
+    Padded query rows carry ``u = -1`` (converged), so all-pad tiles
+    take the kernel's skip path; their outputs are sliced off."""
+    interpret = _INTERPRET if interpret is None else interpret
+    bq = bq or round_tile(queries.shape[0])
+    qp = _pad_rows(queries, bq)
+    pad = (-u.shape[0]) % bq
+    up = u if pad == 0 else jnp.pad(u, ((0, pad), (0, 0)),
+                                    constant_values=-1)
+    outs = _t0.fused_round(qp, up, block_of, hot_slot_of, hot_vecs,
+                           hot_vid, hot_nbrs, vecs, vid, nbrs,
+                           n_expand, metric=metric,
+                           interpret=interpret, bq=bq)
+    return tuple(o[: queries.shape[0]] for o in outs)
+
+
 @functools.partial(jax.jit, static_argnames=("metric", "interpret", "bq"))
 def tier0_rank(queries: jnp.ndarray, blocks: jnp.ndarray,
                hot_slot_of: jnp.ndarray, hot_vecs: jnp.ndarray,

@@ -45,6 +45,49 @@ def tier0_fetch_rank_ref(queries: jnp.ndarray, blocks: jnp.ndarray,
     return d, hit.astype(jnp.int32)
 
 
+def fused_round_ref(queries: jnp.ndarray, u: jnp.ndarray,
+                    block_of: jnp.ndarray, hot_slot_of: jnp.ndarray,
+                    hot_vecs: jnp.ndarray, hot_vid: jnp.ndarray,
+                    hot_nbrs: jnp.ndarray, vecs: jnp.ndarray,
+                    vid: jnp.ndarray, nbrs: jnp.ndarray, n_expand: int,
+                    metric: str = "l2"):
+    """Oracle for the fused per-round kernel (``fused_round``).
+
+    Straight per-request gathers — no dedup route — because dedup only
+    changes *which gather produced* a tile, never its payload: the
+    kernel must match this bitwise. queries [Q, D]; u [Q, F] picked
+    candidate ids (-1 = converged/empty) ->
+    (dists [Q, F*eps], vid [Q, F*eps], nbrs [Q, F*eps, Lam],
+    hit [Q, F] i32, order [Q, n_expand])."""
+    qn, f = u.shape
+    eps = vecs.shape[1]
+    b = block_of[jnp.maximum(u, 0)]                          # [Q, F]
+    slot = hot_slot_of[b]
+    hit = slot >= 0
+    s_safe = jnp.maximum(slot, 0)
+    tiles = jnp.where(hit[:, :, None, None], hot_vecs[s_safe],
+                      vecs[b])
+    vid_g = jnp.where(hit[:, :, None], hot_vid[s_safe],
+                      vid[b]).reshape(qn, f * eps)
+    nbrs_g = jnp.where(hit[:, :, None, None], hot_nbrs[s_safe],
+                       nbrs[b]).reshape(qn, f * eps, -1)
+    t32 = tiles.reshape(qn, f * eps, -1).astype(jnp.float32)
+    q32 = queries.astype(jnp.float32)
+    if metric == "ip":
+        dd = -jnp.einsum("qd,qed->qe", q32, t32)
+    else:
+        dd = jnp.sum(jnp.square(t32 - q32[:, None, :]), axis=-1)
+    f_valid = jnp.repeat(u >= 0, eps, axis=1)
+    slot_valid = (vid_g >= 0) & f_valid
+    dd_m = jnp.where(slot_valid, dd, jnp.inf)
+    is_target = (vid_g[:, :, None] == u[:, None, :]).any(-1) \
+        & (vid_g >= 0)
+    sel_key = jnp.where(is_target, -jnp.inf, dd_m)
+    order = jnp.argsort(sel_key, axis=1)[:, :n_expand]
+    return (dd, vid_g, nbrs_g, hit.astype(jnp.int32),
+            order.astype(jnp.int32))
+
+
 def block_rank_ref(queries: jnp.ndarray, tiles: jnp.ndarray,
                    top_m: int, metric: str = "l2"):
     """queries [Q, D]; tiles [Q, eps, D] (the gathered block per query).

@@ -1,12 +1,24 @@
-"""Fused tier-0 probe + gather + rank kernel (DESIGN.md §3.2).
+"""Fused tier-0 probe + gather + rank kernels (DESIGN.md §3.2, §4).
 
-The fetch stage of the device block search (``device_search``): for the
-F block ids one round trip targets per query, probe the tier-0 hot-slot
-map, gather each block's vector tile from the VMEM-resident hot pack on
-a hit or from the HBM block store on a miss (the DMA the cost model
-prices), and exact-rank all F*eps resident vertices against the query —
-one kernel, so hot hits never round-trip through HBM between probe and
-rank.
+Two generations of the device search's fetch stage live here:
+
+``tier0_fetch_rank`` (ISSUE 3) — for the F block ids one round trip
+targets per query, probe the tier-0 hot-slot map, gather each block's
+vector tile from the VMEM-resident hot pack on a hit or from the HBM
+block store on a miss (the DMA the cost model prices), and exact-rank
+all F*eps resident vertices against the query — one kernel, so hot hits
+never round-trip through HBM between probe and rank.
+
+``fused_round`` (ISSUE 4) — the whole per-round fetch pipeline of the
+*divergence-aware batched* search in one pass: derive the target blocks
+from the picked candidates, union the per-query requests of the tile
+into a sorted-unique block list (cross-query dedup — each distinct
+block's tile is gathered from HBM/the hot pack ONCE and broadcast to
+every requesting query), compute exact distances, and per-query
+top-``n_expand``-rank the masked selection key (the block-pruning order
+the search loop expands in). A tile whose queries are all converged
+(every ``u`` slot is -1 — what active-query compaction clusters) skips
+the gather+rank body entirely and writes masked sentinels.
 
 Distances use the same f32 sum-of-squared-differences (or negated IP)
 form as the pure-jnp fetch stage, keeping the fused and reference
@@ -43,6 +55,135 @@ def _probe_kernel(q_ref, b_ref, slot_ref, hot_ref, cold_ref,
         d = jnp.sum(jnp.square(t - q[:, None, :]), axis=-1)
     d_ref[...] = d
     hit_ref[...] = hit.astype(jnp.int32)
+
+
+def _round_kernel(q_ref, u_ref, bof_ref, slot_ref, hotv_ref, hotid_ref,
+                  hotn_ref, vecs_ref, vid_ref, nbrs_ref,
+                  d_ref, vout_ref, nout_ref, hit_ref, ord_ref,
+                  *, metric: str, n_expand: int):
+    u = u_ref[...]                                # [BQ, F] i32, -1 = idle
+    bq, f = u.shape
+    eps, d_dim = vecs_ref.shape[1], vecs_ref.shape[2]
+    lam = nbrs_ref.shape[2]
+
+    @pl.when((u >= 0).any())
+    def _live_tile():
+        q = q_ref[...].astype(jnp.float32)        # [BQ, D]
+        valid = u >= 0
+        b = bof_ref[...][jnp.maximum(u, 0)]       # [BQ, F] target blocks
+        # --- cross-query dedup: sorted-unique union of the tile's block
+        # requests; every distinct block is gathered ONCE (ranks past
+        # the unique count gather a placeholder no slot maps to)
+        flat = b.reshape(-1)                      # [R]
+        r = flat.shape[0]
+        sort_idx = jnp.argsort(flat)              # stable
+        sb = flat[sort_idx]
+        first = jnp.concatenate(
+            [jnp.ones((1,), bool), sb[1:] != sb[:-1]])
+        rank = jnp.cumsum(first) - 1              # [R] slot -> unique rank
+        # duplicates write equal values, so the scatters are deterministic
+        blk_of_rank = jnp.zeros((r,), jnp.int32).at[rank].set(sb)
+        req_rank = jnp.zeros((r,), jnp.int32).at[sort_idx].set(
+            rank.astype(jnp.int32))               # flat slot -> unique rank
+        # --- tier-0 probe + the once-per-distinct-block gather
+        s = slot_ref[...][blk_of_rank]            # [R] hot slot (-1 = cold)
+        hot_u = s >= 0
+        s_safe = jnp.maximum(s, 0)
+        tiles_u = jnp.where(hot_u[:, None, None],
+                            hotv_ref[...][s_safe],
+                            vecs_ref[...][blk_of_rank])      # [R, eps, D]
+        vid_u = jnp.where(hot_u[:, None], hotid_ref[...][s_safe],
+                          vid_ref[...][blk_of_rank])         # [R, eps]
+        nbrs_u = jnp.where(hot_u[:, None, None],
+                           hotn_ref[...][s_safe],
+                           nbrs_ref[...][blk_of_rank])       # [R, eps, Lam]
+        # --- broadcast each distinct tile to its requesting slots
+        tiles = tiles_u[req_rank].reshape(bq, f * eps, d_dim)
+        vid = vid_u[req_rank].reshape(bq, f * eps)
+        nbrs = nbrs_u[req_rank].reshape(bq, f * eps, lam)
+        hit = hot_u[req_rank].reshape(bq, f)
+        # --- exact rank (same f32 form as the jnp reference)
+        t32 = tiles.astype(jnp.float32)
+        if metric == "ip":
+            dd = -jnp.einsum("qd,qed->qe", q, t32)
+        else:
+            dd = jnp.sum(jnp.square(t32 - q[:, None, :]), axis=-1)
+        # --- per-query top-M expansion order over the masked selection
+        # key (targets first, then nearest residents; same tie-breaking
+        # as the search loop: stable argsort)
+        f_valid = jnp.repeat(valid, eps, axis=1)
+        slot_valid = (vid >= 0) & f_valid
+        dd_m = jnp.where(slot_valid, dd, jnp.inf)
+        is_target = (vid[:, :, None] == u[:, None, :]).any(-1) & (vid >= 0)
+        sel_key = jnp.where(is_target, -jnp.inf, dd_m)
+        order = jnp.argsort(sel_key, axis=1)[:, :n_expand]
+        d_ref[...] = dd
+        vout_ref[...] = vid
+        nout_ref[...] = nbrs
+        hit_ref[...] = hit.astype(jnp.int32)
+        ord_ref[...] = order.astype(jnp.int32)
+
+    @pl.when(~(u >= 0).any())
+    def _idle_tile():
+        # a fully-converged tile (what compaction clusters): skip the
+        # gather + rank entirely, emit masked sentinels the search loop
+        # never consumes (every downstream use is gated on u >= 0)
+        d_ref[...] = jnp.zeros((bq, f * eps), jnp.float32)
+        vout_ref[...] = jnp.full((bq, f * eps), -1, jnp.int32)
+        nout_ref[...] = jnp.full((bq, f * eps, lam), -1, jnp.int32)
+        hit_ref[...] = jnp.zeros((bq, f), jnp.int32)
+        ord_ref[...] = jnp.zeros((bq, n_expand), jnp.int32)
+
+
+def fused_round(queries: jnp.ndarray, u: jnp.ndarray,
+                block_of: jnp.ndarray, hot_slot_of: jnp.ndarray,
+                hot_vecs: jnp.ndarray, hot_vid: jnp.ndarray,
+                hot_nbrs: jnp.ndarray, vecs: jnp.ndarray,
+                vid: jnp.ndarray, nbrs: jnp.ndarray, n_expand: int,
+                metric: str = "l2", interpret: bool = True,
+                bq: int = BQ):
+    """One search round's fetch pipeline, fused (see module docstring).
+
+    queries [Q, D]; u [Q, F] i32 picked candidate ids (-1 = converged /
+    empty slot); block_of [N]; hot_slot_of [rho]; hot pack [H, eps, ...];
+    cold store [rho, eps, ...] ->
+    (dists [Q, F*eps] f32, vid [Q, F*eps] i32, nbrs [Q, F*eps, Lam] i32,
+    hit [Q, F] i32, order [Q, n_expand] i32)."""
+    qn, d = queries.shape
+    _, f = u.shape
+    n = block_of.shape[0]
+    rho, eps, _ = vecs.shape
+    h = hot_vecs.shape[0]
+    lam = nbrs.shape[2]
+    assert qn % bq == 0, (qn, bq)
+    grid = (qn // bq,)
+    return pl.pallas_call(
+        functools.partial(_round_kernel, metric=metric,
+                          n_expand=n_expand),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bq, d), lambda i: (i, 0)),
+                  pl.BlockSpec((bq, f), lambda i: (i, 0)),
+                  pl.BlockSpec((n,), lambda i: (0,)),
+                  pl.BlockSpec((rho,), lambda i: (0,)),
+                  pl.BlockSpec((h, eps, d), lambda i: (0, 0, 0)),
+                  pl.BlockSpec((h, eps), lambda i: (0, 0)),
+                  pl.BlockSpec((h, eps, lam), lambda i: (0, 0, 0)),
+                  pl.BlockSpec((rho, eps, d), lambda i: (0, 0, 0)),
+                  pl.BlockSpec((rho, eps), lambda i: (0, 0)),
+                  pl.BlockSpec((rho, eps, lam), lambda i: (0, 0, 0))],
+        out_specs=[pl.BlockSpec((bq, f * eps), lambda i: (i, 0)),
+                   pl.BlockSpec((bq, f * eps), lambda i: (i, 0)),
+                   pl.BlockSpec((bq, f * eps, lam), lambda i: (i, 0, 0)),
+                   pl.BlockSpec((bq, f), lambda i: (i, 0)),
+                   pl.BlockSpec((bq, n_expand), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((qn, f * eps), jnp.float32),
+                   jax.ShapeDtypeStruct((qn, f * eps), jnp.int32),
+                   jax.ShapeDtypeStruct((qn, f * eps, lam), jnp.int32),
+                   jax.ShapeDtypeStruct((qn, f), jnp.int32),
+                   jax.ShapeDtypeStruct((qn, n_expand), jnp.int32)],
+        interpret=interpret,
+    )(queries, u, block_of, hot_slot_of, hot_vecs, hot_vid, hot_nbrs,
+      vecs, vid, nbrs)
 
 
 def tier0_fetch_rank(queries: jnp.ndarray, blocks: jnp.ndarray,

@@ -2,7 +2,14 @@
 
 TPU search is a batched beam (DESIGN.md §2.2); the batcher pads the
 pending queue to the nearest compiled batch-size bucket so jit caches a
-handful of shapes instead of one per request count.
+handful of shapes instead of one per request count. Buckets are coerced
+to multiples of the fused round kernel's query-tile granularity
+(``tile``, default the kernel's 8-row minimum) so a padded batch fills
+whole kernel tiles: pad rows converge immediately (their candidate set
+is drained in the first rounds) and — under active-query compaction —
+cluster into all-idle tiles the kernel skips. Padding never changes
+results: per-query state is row-independent (the ragged-batch
+regression test asserts bit-identity against singleton searches).
 """
 from __future__ import annotations
 
@@ -25,9 +32,15 @@ class RequestBatcher:
     for the largest bucket to fill."""
 
     def __init__(self, dim: int, buckets: Sequence[int] = (8, 32, 128),
-                 max_wait: int = 64):
+                 max_wait: int = 64, tile: int = 8):
+        if tile < 1:
+            raise ValueError("tile must be >= 1")
         self.dim = dim
-        self.buckets = tuple(sorted(buckets))
+        self.tile = tile
+        # round every bucket up to the kernel tile multiple (dedup sets
+        # coincide with kernel invocations only on whole tiles)
+        self.buckets = tuple(sorted({-(-int(b) // tile) * tile
+                                     for b in buckets}))
         self.max_wait = max_wait
         self.queue: List[PendingRequest] = []
         self._next_id = 0

@@ -22,12 +22,13 @@ from repro.core.search import SegmentView, anns
 from repro.io.async_fetch import AsyncFetchQueue
 from repro.io.cached_store import CachedBlockStore
 
-# serving default: the wide-fetch bench preset at the paper's Γ;
+# serving default: the divergence-aware batched preset (wide fetch +
+# cross-query dedup + active-query compaction) at the paper's Γ;
 # tier-0 budget rides on the segment arrays themselves
 # (``from_segment``), not on these search knobs
-from repro.configs.starling_segment import DEVICE_SEARCH_WIDE
+from repro.configs.starling_segment import DEVICE_SEARCH_BATCH
 
-SERVE_DEVICE_SEARCH = dataclasses.replace(DEVICE_SEARCH_WIDE,
+SERVE_DEVICE_SEARCH = dataclasses.replace(DEVICE_SEARCH_BATCH,
                                           candidates=64)
 
 
@@ -55,7 +56,10 @@ class SegmentServer:
     ``params`` bundles every online knob (``DeviceSearchParams``); a
     per-request ``k`` override replaces just that field. When the
     segment was packed with a tier-0 budget (``from_segment``), hot
-    touches land in ``last_tier0_hits`` instead of the io column."""
+    touches land in ``last_tier0_hits`` instead of the io column;
+    cold touches that joined another query's same-round gather (the
+    batched path's cross-query dedup) land in ``last_dedup_saved`` —
+    actual DMAs for the batch = io - dedup_saved."""
     segment: DeviceSegment
     offset: int                   # base of this segment's id space
     num_vectors: int
@@ -75,6 +79,8 @@ class SegmentServer:
                         p, metric=self.metric)
         self.last_tier0_hits = np.asarray(r.tier0_hits)
         self.last_hops = np.asarray(r.hops)
+        self.last_dedup_saved = np.asarray(r.dedup_saved)
+        self.last_rounds = int(r.rounds)
         return np.asarray(r.ids), np.asarray(r.dists), np.asarray(r.io)
 
 
@@ -168,7 +174,8 @@ class QueryCoordinator:
                ) -> Tuple[np.ndarray, np.ndarray, Dict]:
         targets = (self.prune_fn(queries) if self.prune_fn
                    else list(range(len(self.servers))))
-        ids, dists, offs, total_io, total_t0 = [], [], [], 0, 0
+        ids, dists, offs = [], [], []
+        total_io, total_t0, total_saved = 0, 0, 0
         for si in targets:
             s = self.servers[si]
             i, d, io = s.search(queries, k)
@@ -179,6 +186,9 @@ class QueryCoordinator:
             t0 = getattr(s, "last_tier0_hits", None)
             if t0 is not None:
                 total_t0 += int(t0.sum())
+            sv = getattr(s, "last_dedup_saved", None)
+            if sv is not None:
+                total_saved += int(sv.sum())
         gi, gd = merge_topk(ids, dists, offs, k)
         stats = {"segments_searched": len(targets),
                  "total_block_reads": total_io,
@@ -188,6 +198,11 @@ class QueryCoordinator:
             # device tier-0: block touches the VMEM hot-tile pack
             # absorbed (they are not in total_block_reads)
             stats["total_tier0_hits"] = total_t0
+        if total_saved:
+            # cross-query dedup: cold touches that rode another query's
+            # same-round gather — the DMAs the device actually issued
+            stats["total_dedup_saved"] = total_saved
+            stats["deduped_block_reads"] = total_io - total_saved
         # repro.io: aggregate shared-cache counters from servers that
         # expose them, as deltas so every key in the dict is per-call
         # (the cache itself stays warm across calls — only the

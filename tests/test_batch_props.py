@@ -1,0 +1,70 @@
+"""Property tests for the divergence-aware batched device search.
+
+Guarded hypothesis import, matching test_io_props/test_layout/test_pq:
+the whole module skips when hypothesis is absent; the deterministic
+versions of these checks live in test_device_search.py and always run.
+
+The property: a batched, deduped, compacted ``device_anns`` is
+bit-identical, per query, to a loop of singleton-batch searches — for
+ANY query permutation and ANY duplication pattern. Per-query state is
+row-independent; dedup and compaction only move counters and tiles.
+The batch size is pinned so every hypothesis example reuses the same
+two compiled executables (batch of 8, singleton).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis; rest of the suite runs without")
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import device_search as DS
+from repro.core.params import DeviceSearchParams
+
+BATCH = 8
+P_BATCH = DeviceSearchParams(k=5, candidates=24, max_hops=48,
+                             fetch_width=2, compact_frac=0.5)
+P_SINGLE = dataclasses.replace(P_BATCH, compact_frac=0.0)
+
+
+@pytest.fixture(scope="module")
+def packed_seg(small_segment):
+    return DS.from_segment(small_segment, tier0_frac=0.1)
+
+
+@pytest.mark.slow
+@given(rows=st.lists(st.integers(0, 23), min_size=BATCH,
+                     max_size=BATCH))
+@settings(max_examples=6, deadline=None)
+def test_batched_bit_identical_to_singletons(rows, packed_seg,
+                                             small_data):
+    """Random permutations + duplicates: every batch row's (ids,
+    dists) equals the singleton search of that query, and a row whose
+    query also appears earlier in the batch has its entire cold
+    traffic absorbed by dedup."""
+    _, q = small_data
+    qb = q[np.asarray(rows)]
+    r = DS.device_anns(packed_seg, jnp.asarray(qb), P_BATCH)
+    singles = {}
+    for row, qi in enumerate(rows):
+        if qi not in singles:
+            singles[qi] = DS.device_anns(
+                packed_seg, jnp.asarray(q[qi: qi + 1]), P_SINGLE)
+        r1 = singles[qi]
+        np.testing.assert_array_equal(np.asarray(r1.ids[0]),
+                                      np.asarray(r.ids[row]))
+        np.testing.assert_array_equal(np.asarray(r1.dists[0]),
+                                      np.asarray(r.dists[row]))
+    io = np.asarray(r.io)
+    saved = np.asarray(r.dedup_saved)
+    assert (saved <= io).all()
+    for row in range(BATCH):
+        if rows[row] in rows[:row]:       # duplicate of an earlier row
+            assert saved[row] == io[row], (
+                f"duplicate row {row} must join every gather "
+                f"(saved {saved[row]} of {io[row]})")

@@ -129,6 +129,121 @@ def test_tier0_pack_is_nested_and_charged(small_segment):
     assert (np.asarray(ds_off.hot_slot_of) == -1).all()
 
 
+# ------------------------------------------- divergence-aware batching
+
+@pytest.mark.slow
+def test_batched_matches_singletons_with_duplicates(device_seg,
+                                                    small_data):
+    """ISSUE 4 acceptance (deterministic twin of the hypothesis
+    property test): the deduped, compacted batched search is
+    bit-identical to a loop of singleton-batch searches, under a query
+    permutation and with duplicate queries in the batch."""
+    _, q = small_data
+    p = dataclasses.replace(P48, max_hops=64, fetch_width=2,
+                            compact_frac=0.5)
+    perm = [5, 0, 3, 0, 7, 5, 1, 2]          # dups + shuffled order
+    qb = q[perm]
+    r = DS.device_anns(device_seg, jnp.asarray(qb), p)
+    p1 = dataclasses.replace(p, compact_frac=0.0)
+    for row, qi in enumerate(perm):
+        r1 = DS.device_anns(device_seg, jnp.asarray(q[qi: qi + 1]), p1)
+        np.testing.assert_array_equal(np.asarray(r1.ids[0]),
+                                      np.asarray(r.ids[row]))
+        np.testing.assert_array_equal(np.asarray(r1.dists[0]),
+                                      np.asarray(r.dists[row]))
+    # a duplicated query's cold traffic fully joins its twin's gathers
+    saved = np.asarray(r.dedup_saved)
+    io = np.asarray(r.io)
+    assert saved[3] == io[3] and io[3] > 0    # row 3 duplicates row 1
+    assert saved[5] == io[5] and io[5] > 0    # row 5 duplicates row 0
+    assert saved.sum() > 0 and (saved <= io).all()
+
+
+@pytest.mark.slow
+def test_compaction_is_result_invariant(device_seg, small_data):
+    """Active-query compaction (any threshold) never changes results or
+    per-query io/tier0/hops — it only repacks rows mid-loop (and with
+    it the dedup tile grouping, so only dedup_saved may move)."""
+    _, q = small_data
+    base = None
+    for cf in (0.0, 0.25, 1.0):
+        r = DS.device_anns(
+            device_seg, jnp.asarray(q),
+            dataclasses.replace(P48, max_hops=64,
+                                compact_frac=cf))
+        if base is None:
+            base = r
+            continue
+        for f in ("ids", "dists", "io", "hops", "tier0_hits"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(base, f)),
+                np.asarray(getattr(r, f)), err_msg=f"compact={cf} {f}")
+        assert int(r.rounds) == int(base.rounds)
+
+
+@pytest.mark.slow
+def test_dedup_counters_consistent(device_seg, small_data):
+    """dedup_saved counts a subset of cold touches (io keeps its seed
+    semantics: every cold touch), and duplicate queries drive it up."""
+    _, q = small_data
+    p = dataclasses.replace(P48, max_hops=64)
+    r = DS.device_anns(device_seg, jnp.asarray(q), p)
+    io, sv = np.asarray(r.io), np.asarray(r.dedup_saved)
+    assert (sv >= 0).all() and (sv <= io).all()
+    assert (np.asarray(r.hops) <= int(r.rounds)).all()
+    qd = np.repeat(q[:4], 3, axis=0)          # heavy duplication
+    rd = DS.device_anns(device_seg, jnp.asarray(qd), p)
+    assert (np.asarray(rd.dedup_saved).mean()
+            > sv.mean()), "duplicate-heavy batch must dedup more"
+
+
+def test_tier0_repack_from_observed_frequencies(small_segment):
+    """ISSUE 4 satellite (dynamic tier-0 admission): a drifted observed
+    frequency profile re-ranks the pack — the observed-hot blocks enter
+    at a budget that would otherwise exclude them — while search
+    results stay bit-identical (exact copies either way)."""
+    rho = small_segment.view.store.num_blocks
+    ds_static = DS.from_segment(small_segment, tier0_blocks=4)
+    static_hot = set(np.flatnonzero(
+        np.asarray(ds_static.hot_slot_of) >= 0).tolist())
+    drifted = [b for b in range(rho) if b not in static_hot][:4]
+    observed = {b: 100 + i for i, b in enumerate(drifted)}
+    ds_dyn = DS.from_segment(small_segment, tier0_blocks=4,
+                             observed=observed)
+    dyn_hot = set(np.flatnonzero(
+        np.asarray(ds_dyn.hot_slot_of) >= 0).tolist())
+    assert dyn_hot == set(drifted), \
+        "observed-hot blocks must displace the build-time pack"
+    # higher observed count -> earlier slot (frequency-desc ranking)
+    slots = np.asarray(ds_dyn.hot_slot_of)[drifted]
+    assert (np.argsort(-np.asarray(
+        [observed[b] for b in drifted])) == np.argsort(slots)).all()
+    # the pack still holds exact copies
+    b = drifted[0]
+    s = int(np.asarray(ds_dyn.hot_slot_of)[b])
+    np.testing.assert_array_equal(np.asarray(ds_dyn.hot_vecs[s]),
+                                  np.asarray(ds_dyn.vecs[b]))
+
+
+@pytest.mark.slow
+def test_tier0_repack_results_bit_identical(small_segment, small_data):
+    _, q = small_data
+    p = dataclasses.replace(P48, max_hops=64)
+    r0 = DS.device_anns(DS.from_segment(small_segment, tier0_blocks=8),
+                        jnp.asarray(q[:8]), p)
+    rho = small_segment.view.store.num_blocks
+    r1 = DS.device_anns(
+        DS.from_segment(small_segment, tier0_blocks=8,
+                        observed={b: rho - b for b in range(rho)}),
+        jnp.asarray(q[:8]), p)
+    np.testing.assert_array_equal(np.asarray(r0.ids), np.asarray(r1.ids))
+    np.testing.assert_array_equal(np.asarray(r0.dists),
+                                  np.asarray(r1.dists))
+    np.testing.assert_array_equal(
+        np.asarray(r0.io) + np.asarray(r0.tier0_hits),
+        np.asarray(r1.io) + np.asarray(r1.tier0_hits))
+
+
 # -------------------------------------------------------- range search
 
 @pytest.mark.slow

@@ -80,6 +80,32 @@ def test_hot_pin_set_covers_seed_blocks(small_segment):
 
 # ------------------------------------------------- accounting invariants
 
+def test_repack_from_frequencies_orders_by_observed_traffic():
+    """ISSUE 4 satellite: observed blocks lead, by count desc (ties by
+    build-ranking position), then the untouched build tail in order;
+    an empty observation is the identity."""
+    from repro.io.hotset import repack_from_frequencies
+    ranking = [7, 3, 9, 1, 4]
+    assert repack_from_frequencies(ranking, {}) == ranking
+    got = repack_from_frequencies(ranking, {1: 5, 9: 5, 4: 2, 12: 9,
+                                            3: 0})
+    # 12 (count 9) first; 9 before 1 at equal count (earlier in build
+    # ranking); 3 had zero observations -> stays in the tail, in order
+    assert got == [12, 9, 1, 4, 7, 3]
+
+
+def test_cached_store_tracks_block_frequencies(small_segment):
+    """Every demand read lands in block_freq — the observed-traffic
+    feed for the dynamic tier-0 repack."""
+    store = make_cached_store(small_segment.view.store,
+                              CacheParams(budget_frac=0.1))
+    store.read_block(3)
+    store.read_block(3)
+    store.read_demand(5, IOStats())
+    assert store.block_freq[3] == 2 and store.block_freq[5] == 1
+    assert 4 not in store.block_freq
+
+
 def test_hit_miss_accounting_invariant(cached_small_view, small_segment,
                                        small_data):
     _, q = small_data
@@ -189,6 +215,30 @@ def test_speculative_only_trip_pays_full_first_block():
                  prefetched_blocks=3)
     want2 = cm.t_block_io + 3 * cm.t_batch_block
     assert cm._io_time(s2) == pytest.approx(want2)
+
+
+def test_device_dedup_pricing():
+    """ISSUE 4: a cold touch that joined another query's same-round
+    gather prices at t_dedup_hit (VMEM broadcast), not t_block_io —
+    and from_device keeps the trips <= reads invariant under dedup."""
+    cm = NVME_SEGMENT
+    s = IOStats.from_device(10, tier0_hits=2, hops=8, dedup_saved=4,
+                            rounds=16)
+    assert s.block_reads == 12 and s.cache_misses == 10
+    assert s.io_round_trips == 6          # only 10 - 4 DMAs issued
+    assert s.dedup_saved_fetches == 4
+    assert s.rounds_active_weight == pytest.approx(0.5)
+    want = (6 * cm.t_block_io + 4 * cm.t_dedup_hit
+            + 2 * cm.t_tier0_hit)
+    assert cm._io_time(s) == pytest.approx(want)
+    # merge stays additive and valid
+    s2 = IOStats.from_device(3, dedup_saved=1, hops=3, rounds=16)
+    s.merge(s2)
+    assert s.dedup_saved_fetches == 5
+    assert s.io_round_trips <= s.block_reads
+    # saved can never exceed the cold touches it joins
+    s3 = IOStats.from_device(2, dedup_saved=5)
+    assert s3.dedup_saved_fetches == 2 and s3.io_round_trips == 0
 
 
 def test_hit_plus_prefetch_issues_priced_trip(small_segment):

@@ -79,13 +79,48 @@ def test_coordinator_pruning_hook(two_segments):
 
 
 def test_batcher_buckets():
-    b = RequestBatcher(dim=8, buckets=(4, 16))
+    # tile=1 opts out of kernel-tile coercion: buckets used verbatim
+    b = RequestBatcher(dim=8, buckets=(4, 16), tile=1)
     for _ in range(6):
         b.submit(np.zeros(8))
     q, ids, n = b.next_batch()
     assert n == 6 and q.shape == (16, 8) and len(ids) == 6
     q, ids, n = b.next_batch() if b.queue else (None, [], 0)
     assert n == 0
+
+
+def test_batcher_buckets_align_to_kernel_tiles():
+    """ISSUE 4 satellite: bucket sizes are coerced up to multiples of
+    the fused round kernel's tile granularity, so a padded batch fills
+    whole kernel tiles (and the coerced sizes dedupe)."""
+    b = RequestBatcher(dim=4, buckets=(3, 5, 8, 30), tile=8)
+    assert b.buckets == (8, 32)          # 3,5,8 -> 8 (deduped), 30 -> 32
+    from repro.kernels import round_tile
+    # every bucket is a whole number of kernel tiles
+    assert all(x % round_tile(x) == 0 for x in b.buckets)
+    with pytest.raises(ValueError):
+        RequestBatcher(dim=4, buckets=(4,), tile=0)
+
+
+@pytest.mark.slow
+def test_ragged_batch_padding_is_result_invariant(two_segments):
+    """ISSUE 4 satellite regression: a ragged final batch padded up to
+    its bucket returns bit-identical per-request results to singleton
+    searches — zero-padded rows converge on their own and (with the
+    serving preset's compaction) drop out of the rounds; they never
+    leak into real rows."""
+    xs, servers = two_segments
+    q5 = query_set(xs[0], 5, seed=11)         # ragged: 5 of bucket 8
+    batcher = RequestBatcher(dim=q5.shape[1], buckets=(8, 32))
+    for row in q5:
+        batcher.submit(row)
+    padded, ids, n = batcher.next_batch()
+    assert padded.shape[0] == 8 and n == 5
+    ib, db, _ = servers[0].search(padded, k=10)
+    for row in range(n):
+        i1, d1, _ = servers[0].search(q5[row: row + 1], k=10)
+        np.testing.assert_array_equal(i1[0], ib[row])
+        np.testing.assert_array_equal(d1[0], db[row])
 
 
 def test_batcher_single_request_pads_to_smallest_bucket():
