@@ -2,7 +2,7 @@
 
 PY ?= python
 
-.PHONY: test test-fast test-device bench bench-io bench-device \
+.PHONY: test test-fast test-device test-e2e bench bench-io bench-device \
 	bench-batch dev-deps
 
 test:
@@ -19,6 +19,14 @@ test-fast:
 test-device:
 	PYTHONPATH=src $(PY) -m pytest -x -q -m "not slow" \
 		tests/test_kernels.py tests/test_device_search.py
+
+# the end-to-end conformance suite (ISSUE 5): one segment, every search
+# path (host, device fused/jnp, served/batched) against the brute-force
+# oracle, cross-path bit-identity, golden IOStats totals. Runs the
+# Pallas kernels in interpret mode (the CPU default); includes the
+# build-heavy slow cases — its own CI lane
+test-e2e:
+	PYTHONPATH=src $(PY) -m pytest -x -q tests/test_e2e_conformance.py
 
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run
@@ -39,12 +47,15 @@ bench-device:
 	PYTHONPATH=src $(PY) -m benchmarks.run --only kernel_micro
 	PYTHONPATH=src $(PY) -m benchmarks.run --only roofline_tables
 
-# smoke lane for the divergence-aware batched path (ISSUE 4): a tiny
-# batch-size x duplicate-rate sweep with the bit-identity assertions on
-# (BENCH_SMOKE shrinks the sweep; skips gracefully with no jax backend)
+# smoke lane for the divergence-aware batched path (ISSUE 4) and the
+# adaptive repack control loop (ISSUE 5): tiny sweeps with the
+# bit-identity / strict-DMA-cut assertions on (BENCH_SMOKE shrinks
+# them; both skip gracefully with no jax backend)
 bench-batch:
 	BENCH_SMOKE=1 PYTHONPATH=src $(PY) -m benchmarks.run \
 		--only device_batch_dedup_sweep
+	BENCH_SMOKE=1 PYTHONPATH=src $(PY) -m benchmarks.run \
+		--only device_drift_repack_sweep
 
 dev-deps:
 	$(PY) -m pip install -r requirements-dev.txt

@@ -261,12 +261,21 @@ def mesh_qps_estimate():
     the per-segment top-k merge is one all-gather — a barrier, so a
     batch's step time is gated by the slowest rank. We run the batched
     search per rank (same counters the step's ``(data, model)``-sharded
-    output columns carry), model each rank's step time as its lockstep
-    DMA chain — rounds x t_block_io latency term + deduped cold DMAs x
-    t_batch_block bandwidth term + tier-0/dedup broadcast touches — and
-    take QPS = batch x data ranks / max_rank(step time). All latencies
-    are modeled via TPU_HBM_SEGMENT (CPU container), reported alongside
-    the per-rank Eq. 4 cost breakdown."""
+    output columns carry) and price each rank with the *round-granular*
+    cost model (PR 5, ROADMAP (d)): ``IOStats.from_device_batch`` folds
+    the columns, then ``CostModel.latency_us`` charges the lockstep
+    chain (``batch_rounds x t_round``), cold DMAs at the
+    ``t_batch_block`` bandwidth rate, tier-0/dedup broadcast touches,
+    and occupancy-weighted compute (``batch_rounds x
+    rounds_active_weight x t_round_comp`` — a converged query's idle
+    rounds are free). This is the SAME fold the serving
+    ``RepackScheduler`` uses as its objective, so the control loop and
+    the benchmark optimize one number. QPS = batch x data ranks /
+    max_rank(step time); the step time is asserted monotone in
+    ``rounds_active_weight`` in-bench (the acceptance invariant). All
+    latencies are modeled via TPU_HBM_SEGMENT (CPU container)."""
+    import dataclasses as dc
+
     import jax.numpy as jnp
     from repro.configs.starling_segment import DEVICE_SEARCH_BATCH
     from repro.core import device_search as DS
@@ -275,6 +284,8 @@ def mesh_qps_estimate():
     from repro.data.vectors import clustered_vectors, query_set
 
     cm = TPU_HBM_SEGMENT
+    assert cm.t_round > 0 and cm.t_round_comp > 0, \
+        "mesh QPS fold needs the round-granular terms"
     model_ranks, data_ranks, batch = 4, 16, 32
     xs = [clustered_vectors(1500, C.DIM, num_clusters=16, seed=20 + s)
           for s in range(model_ranks)]
@@ -289,23 +300,26 @@ def mesh_qps_estimate():
         t0 = np.asarray(r.tier0_hits)
         hops = np.asarray(r.hops)
         rounds = int(r.rounds)
-        t_rank = (rounds * cm.t_block_io
-                  + float((io - sv).sum()) * cm.t_batch_block
-                  + float(sv.sum()) * cm.t_dedup_hit
-                  + float(t0.sum()) * cm.t_tier0_hit)
+        agg = IOStats.from_device_batch(io, t0, hops, sv, rounds)
+        t_rank = cm.latency_us(agg)
+        # acceptance invariant: the round-granular step time is strictly
+        # monotone in the occupancy (rounds_active_weight) — a batch
+        # whose queries stay live longer must model slower
+        denser = dc.replace(agg, rounds_active_weight=
+                            agg.rounds_active_weight * 1.5)
+        assert cm.latency_us(denser) > t_rank, \
+            "step time must rise with rounds_active_weight"
         step_us.append(t_rank)
-        # the per-rank Eq. 4 breakdown over the batch-summed counters
-        agg = IOStats()
-        for i in range(batch):
-            agg.merge(IOStats.from_device(io[i], t0[i], hops[i],
-                                          sv[i], rounds))
         br = cm.breakdown(agg, pipeline=True)
         C.record("mesh_qps_rank", rank=s, rounds=rounds,
                  step_us_modeled=t_rank,
                  occupancy=float(hops.mean() / max(rounds, 1)),
+                 rounds_active_weight=agg.rounds_active_weight,
                  dma_per_query=float((io - sv).mean()),
                  dedup_saved_per_query=float(sv.mean()),
                  tier0_hits_per_query=float(t0.mean()),
+                 t_round_chain_us=br["t_round_chain_us"],
+                 t_round_comp_us=br["t_round_comp_us"],
                  t_io_us=br["t_io_us"], t_other_us=br["t_other_us"])
     worst = max(step_us)
     C.record("mesh_qps", mesh=f"model{model_ranks}xdata{data_ranks}",

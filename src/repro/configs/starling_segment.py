@@ -12,7 +12,8 @@ import dataclasses
 
 from repro.core.params import (CacheParams, DeviceSearchParams,
                                GraphParams, LayoutParams, NavGraphParams,
-                               PQParams, SearchParams, SegmentParams)
+                               PQParams, RepackParams, SearchParams,
+                               SegmentParams)
 
 # container-scale segment used by benchmarks: same knob values as the
 # paper's BIGANN column wherever scale-independent (σ=0.3, φ=0.5, β=8,
@@ -79,6 +80,15 @@ DEVICE_SEARCH_WIDE = dataclasses.replace(DEVICE_SEARCH_BENCH,
                                          fetch_width=2)
 DEVICE_SEARCH_BATCH = dataclasses.replace(DEVICE_SEARCH_WIDE,
                                           compact_frac=0.25)
+
+# the adaptive serving plane's repack control loop (ISSUE 5): evaluate
+# every 4 served batches, fire only when >= 25% of the tier-0 pack
+# would change (the hysteresis damper — below that a repack moves too
+# few tiles to matter and the loop would churn), and leave a pack alone
+# while it already absorbs >= 95% of block touches. device_bench's
+# drift sweep runs exactly this preset.
+SERVE_REPACK = RepackParams(interval_batches=4, hysteresis=0.25,
+                            min_observed=1, hit_rate_ceiling=0.95)
 
 # the paper's full-size per-dataset index parameters (Tab. 16): used by
 # the byte-accounting tests (γ, ε, ρ must reproduce Example 2 exactly)

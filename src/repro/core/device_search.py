@@ -110,13 +110,17 @@ class DeviceRangeResult(NamedTuple):
     rounds: jnp.ndarray        # scalar: total loop rounds, all RS rounds
 
 
-def _tier0_pack(seg, num_blocks: int, observed=None):
+def _tier0_pack(seg, num_blocks: int, observed=None, plan=None):
     """Select + pack the tier-0 hot set (host side, build time).
 
     ``observed`` (block id -> demand-read count, e.g. a serving
     ``CachedBlockStore.block_freq``) re-ranks the build-time selection
     by what the query stream actually touched — the dynamic-admission
-    repack of a drifting workload."""
+    repack of a drifting workload. Selection goes through
+    ``hotset.plan_tier0``, the same planner the serving scheduler
+    prices drift with, so a plan and the pack it becomes can never
+    diverge; a caller that already planned (the scheduler did, to gate
+    on drift) passes ``plan`` and skips re-deriving the ranking."""
     from repro.io import hotset
 
     v = seg.view
@@ -126,12 +130,18 @@ def _tier0_pack(seg, num_blocks: int, observed=None):
     rho, eps = vid.shape
     hot: list = []
     if num_blocks > 0:
-        ranking = hotset.hot_block_ranking(
-            v.layout.block_of, seg.graph.adj, seg.graph.deg,
-            hotset.view_seed_ids(v))
-        if observed:
-            ranking = hotset.repack_from_frequencies(ranking, observed)
-        hot = hotset.fill_to(ranking, num_blocks, rho)
+        if plan is not None:
+            if len(plan) != min(num_blocks, rho):
+                raise ValueError(
+                    f"tier-0 plan selects {len(plan)} blocks for a "
+                    f"{min(num_blocks, rho)}-slot budget")
+            hot = [int(b) for b in plan]
+        else:
+            ranking = hotset.hot_block_ranking(
+                v.layout.block_of, seg.graph.adj, seg.graph.deg,
+                hotset.view_seed_ids(v))
+            hot = hotset.plan_tier0(ranking, observed or {}, num_blocks,
+                                    rho)
     slot_of = np.full(rho, -1, np.int32)
     if hot:
         hb = np.asarray(hot, np.int64)
@@ -189,6 +199,42 @@ def from_segment(seg, tier0_blocks: Optional[int] = None,
         hot_nbrs=jnp.asarray(hot_nbrs, jnp.int32),
         hot_slot_of=jnp.asarray(slot_of, jnp.int32),
     )
+
+
+def hot_pack_blocks(ds: DeviceSegment) -> set:
+    """The block ids currently in the tier-0 pack (empty when tier 0 is
+    disabled) — the one way every consumer (scheduler drift, repack,
+    benches, tests) reads the pack, so the ``hot_slot_of`` sentinel
+    encoding has a single point of truth."""
+    return set(np.flatnonzero(np.asarray(ds.hot_slot_of) >= 0).tolist())
+
+
+def repack_tier0(ds: DeviceSegment, seg, observed,
+                 plan=None) -> Tuple[DeviceSegment, int]:
+    """Rebuild ONLY the hot-tile pack of ``ds`` at its current budget,
+    re-ranked by ``observed`` per-block demand counts (the serving
+    scheduler's online repack, DESIGN.md §5). A caller that already
+    ran ``hotset.plan_tier0`` (the scheduler, pricing drift) passes
+    the ``plan`` to skip re-deriving the build ranking — an avoidable
+    host-side BFS on the online path.
+
+    Every other device array is reused as-is — a repack moves H block
+    tiles, not the segment. Returns ``(new_ds, changed)`` where
+    ``changed`` is the number of pack slots whose block differs from
+    the old pack (the realized drift; 0 means the repack was a no-op
+    and the returned segment holds the identical selection). The pack
+    is exact copies either way, so results are bit-identical before
+    and after — only the io/tier0_hits split moves."""
+    old = hot_pack_blocks(ds)
+    hot_vecs, hot_vid, hot_nbrs, slot_of = _tier0_pack(
+        seg, len(old), observed=observed, plan=plan)
+    new = set(np.flatnonzero(slot_of >= 0).tolist())
+    out = dataclasses.replace(
+        ds, hot_vecs=jnp.asarray(hot_vecs, ds.hot_vecs.dtype),
+        hot_vid=jnp.asarray(hot_vid, jnp.int32),
+        hot_nbrs=jnp.asarray(hot_nbrs, jnp.int32),
+        hot_slot_of=jnp.asarray(slot_of, jnp.int32))
+    return out, len(new - old)
 
 
 def tier0_bytes(ds: DeviceSegment) -> int:
@@ -414,10 +460,14 @@ def _block_search_loop(ds: DeviceSegment, queries: jnp.ndarray, lut,
     ``compact_frac`` > 0 (jit-static) turns on divergence compaction:
     rounds whose live fraction fell below the threshold stably repack
     live queries to the front — converged queries then fill whole
-    round-kernel tiles, which the fused kernel skips — at the price of
-    re-gathering ``queries``/``lut`` rows through the carried
-    permutation each round. The permutation is inverted before
-    returning, so callers see original query order either way."""
+    round-kernel tiles, which the fused kernel skips. The permuted
+    ``queries``/``lut`` rows are *carried* in the loop state and every
+    permutation gather lives behind a ``lax.cond`` on the compaction
+    trigger, so a round with no repack does zero extra gathers (idle
+    rounds are free — ROADMAP (a)); only the round that actually
+    compacts pays the sort + re-gather. The permutation is inverted
+    before returning, so callers see original query order either
+    way."""
     qn = queries.shape[0]
     eps = ds.vid.shape[1]
     fw = max(fetch_width, 1)
@@ -433,7 +483,7 @@ def _block_search_loop(ds: DeviceSegment, queries: jnp.ndarray, lut,
     def body(st):
         if compact:
             (cand_id, cand_key, open_key, visited, res_id, res_key,
-             io, t0, hops, saved, perm, t) = st
+             io, t0, hops, saved, perm, q_r, lut_r, t) = st
         else:
             (cand_id, cand_key, open_key, visited, res_id, res_key,
              io, t0, hops, saved, t) = st
@@ -442,21 +492,28 @@ def _block_search_loop(ds: DeviceSegment, queries: jnp.ndarray, lut,
         live = jnp.isfinite(open_key).any(axis=1)            # [Q]
         if compact:
             frac = live.astype(jnp.float32).mean()
-            ident = jnp.arange(qn, dtype=jnp.int32)
-            ordr = jnp.where(
-                frac < compact_frac,
-                jnp.argsort(jnp.logical_not(live)),          # stable:
-                ident)            # live first, original order within
-            take = lambda a: jnp.take(a, ordr, axis=0)
-            cand_id, cand_key, open_key = (take(cand_id),
-                                           take(cand_key),
-                                           take(open_key))
-            visited, res_id, res_key = (take(visited), take(res_id),
-                                        take(res_key))
-            io, t0, hops, saved = (take(io), take(t0), take(hops),
-                                   take(saved))
-            live, perm = take(live), take(perm)
-            q_r, lut_r = queries[perm], lut[perm]
+            # repack only when the live rows are no longer front-packed
+            # (a dead row sits before a live one): once compacted, the
+            # carried order STAYS compacted until another query
+            # converges mid-front, so the sort + permutation gathers
+            # run only on rounds that actually change the packing —
+            # every other round takes the identity branch for free
+            unpacked = (jnp.any(jnp.logical_not(live[:-1]) & live[1:])
+                        if qn > 1 else jnp.asarray(False))
+            carried = (cand_id, cand_key, open_key, visited, res_id,
+                       res_key, io, t0, hops, saved, perm, q_r, lut_r)
+
+            def _repack(arrs):
+                # stable: live first, original order within each group;
+                # the carried q_r/lut_r rows ride the same permutation,
+                # so no later round ever re-gathers queries[perm]
+                ordr = jnp.argsort(jnp.logical_not(live))
+                return tuple(jnp.take(a, ordr, axis=0) for a in arrs)
+
+            carried = jax.lax.cond((frac < compact_frac) & unpacked,
+                                   _repack, lambda arrs: arrs, carried)
+            (cand_id, cand_key, open_key, visited, res_id, res_key,
+             io, t0, hops, saved, perm, q_r, lut_r) = carried
         else:
             q_r, lut_r = queries, lut
 
@@ -518,16 +575,17 @@ def _block_search_loop(ds: DeviceSegment, queries: jnp.ndarray, lut,
         open_key = _open_keys(cand_id, cand_key, visited)
         if compact:
             return (cand_id, cand_key, open_key, visited, res_id,
-                    res_key, io, t0, hops, saved, perm, t + 1)
+                    res_key, io, t0, hops, saved, perm, q_r, lut_r,
+                    t + 1)
         return (cand_id, cand_key, open_key, visited, res_id, res_key,
                 io, t0, hops, saved, t + 1)
 
     if not compact:
         return jax.lax.while_loop(cond, body, state)
     perm0 = jnp.arange(qn, dtype=jnp.int32)
-    st = state[:-1] + (perm0, state[-1])
+    st = state[:-1] + (perm0, queries, lut, state[-1])
     out = jax.lax.while_loop(cond, body, st)
-    *arrs, perm, t = out
+    *arrs, perm, _q_r, _lut_r, t = out
     inv = jnp.argsort(perm)                  # undo the compaction order
     return tuple(jnp.take(a, inv, axis=0) for a in arrs) + (t,)
 

@@ -38,7 +38,17 @@ Pricing summary (repro.io):
     block *in the same device round* (``dedup_saved_fetches`` — the
     batched device search unions per-round block requests across the
     batch) pays ``t_dedup_hit`` (a VMEM broadcast of the one DMA that
-    did happen) instead of its own ``t_block_io``.
+    did happen) instead of its own ``t_block_io``;
+  * stats that carry the batched loop's round count (``batch_rounds`` >
+    0, set by ``from_device(rounds=...)``) switch a cost model with
+    ``t_round`` > 0 into the *round-granular* regime (DESIGN.md §5):
+    the lockstep round chain pays ``batch_rounds x t_round`` of DMA
+    latency once for the whole batch, cold DMAs then stream at the
+    ``t_batch_block`` bandwidth rate instead of each paying a full
+    round trip, and compute is occupancy-weighted — ``batch_rounds x
+    rounds_active_weight x t_round_comp``, so a converged query's idle
+    rounds cost nothing. Stats without a round count (the host paths)
+    price exactly as before.
 """
 from __future__ import annotations
 
@@ -71,6 +81,11 @@ class IOStats:
     rounds_active_weight: float = 0.0  # Σ hops / batch rounds: the share
     #                               of the batched loop's rounds this query
     #                               was live for (divergence occupancy)
+    batch_rounds: int = 0       # rounds of the batched device loop this
+    #                             query rode in (shared across the batch,
+    #                             so merged by max — exact when merging
+    #                             one batch's queries; across batches it
+    #                             is the longest batch's chain)
     vertices_fetched: int = 0   # ε per block read
     vertices_used: int = 0      # distance-evaluated full-precision vertices
     hops: int = 0               # total expansions (== block reads)
@@ -79,8 +94,9 @@ class IOStats:
     dist_comps: int = 0         # full-precision distance computations
     pq_comps: int = 0           # ADC distance computations
 
-    # merged with max(), not +: peaks and hop marks are not additive
-    _MAX_FIELDS = ("hops_to_best", "inflight_peak")
+    # merged with max(), not +: peaks, hop marks and the (batch-shared)
+    # round count are not additive
+    _MAX_FIELDS = ("hops_to_best", "inflight_peak", "batch_rounds")
 
     def merge(self, other: "IOStats") -> None:
         new_trips = self.io_round_trips + other.io_round_trips
@@ -116,9 +132,25 @@ class IOStats:
         saved = min(int(dedup_saved), io)
         return cls(block_reads=io + t0, io_round_trips=io - saved,
                    cache_misses=io, tier0_hits=t0, hops=h,
-                   dedup_saved_fetches=saved,
+                   dedup_saved_fetches=saved, batch_rounds=int(rounds),
                    rounds_active_weight=(h / int(rounds)
                                          if int(rounds) > 0 else 0.0))
+
+    @classmethod
+    def from_device_batch(cls, io, tier0_hits, hops, dedup_saved,
+                          rounds) -> "IOStats":
+        """Fold one batch's per-query device columns (the arrays a
+        ``DeviceSearchResult`` / ``make_search_step`` rank emits) into
+        one merged ``IOStats``: counters sum, ``batch_rounds`` is the
+        shared round count, ``rounds_active_weight`` becomes the mean
+        number of live queries per round. This is THE fold both the
+        serving ``RepackScheduler`` objective and the benchmark QPS
+        model (``paper_tables.mesh_qps_estimate``) price — one modeled
+        step time, two consumers."""
+        agg = cls()
+        for i, t0, h, sv in zip(io, tier0_hits, hops, dedup_saved):
+            agg.merge(cls.from_device(i, t0, h, sv, rounds))
+        return agg
 
     @property
     def cache_hit_rate(self) -> float:
@@ -163,7 +195,33 @@ class CostModel:
     t_dedup_hit: float = 0.0    # cold touch that joined another query's
     #                             same-round gather (VMEM broadcast of a
     #                             DMA someone else already paid for)
+    t_round: float = 0.0        # round-granular regime (DESIGN.md §5):
+    #                             lockstep cost per batched-loop round —
+    #                             the gather issue + merge barrier every
+    #                             live query waits on (0 → hops-granular
+    #                             pricing, the pre-PR-5 behavior)
+    t_round_comp: float = 0.0   # per live query per round compute share
+    #                             (rank + merge of its fetched tiles) —
+    #                             weighted by rounds_active_weight so
+    #                             idle rounds of a converged query are
+    #                             free
     name: str = "model"
+
+    def _round_chain(self, s: IOStats) -> float:
+        """The lockstep round chain: one DMA-latency + barrier unit per
+        batched-loop round (0 outside the round-granular regime)."""
+        if self.t_round <= 0.0 or s.batch_rounds <= 0:
+            return 0.0
+        return s.batch_rounds * self.t_round
+
+    def _round_comp(self, s: IOStats) -> float:
+        """Occupancy-weighted round compute: batch_rounds x
+        rounds_active_weight = the query's live rounds (summed over a
+        merged batch: total live query-rounds), each paying
+        ``t_round_comp`` — monotone in ``rounds_active_weight``."""
+        if self.t_round <= 0.0 or s.batch_rounds <= 0:
+            return 0.0
+        return s.batch_rounds * s.rounds_active_weight * self.t_round_comp
 
     def _io_time(self, s: IOStats) -> float:
         # Demand misses sit on the critical path: each pays a full round
@@ -183,12 +241,19 @@ class CostModel:
         full_reads = max(s.block_reads - s.tier0_hits - s.cache_hits
                         - s.tier2_hits - s.inflight_joins
                         - s.dedup_saved_fetches, 0)
+        # round-granular regime: the lockstep chain (``_round_chain``)
+        # already pays the per-round DMA latency once for the whole
+        # batch, so cold DMAs stream at the bandwidth rate instead of
+        # each paying its own full round trip
+        round_granular = self.t_round > 0.0 and s.batch_rounds > 0
+        t_miss = t_batch if round_granular else self.t_block_io
         # trips beyond one-per-miss are speculative-only (hit + prefetch);
         # async demand submissions count one trip per non-joined miss, so
         # adding inflight_joins back keeps the sync surplus exact.
         spec_trips = min(max(s.io_round_trips - s.cache_misses
                             + s.inflight_joins, 0), s.prefetched_blocks)
-        return (full_reads * self.t_block_io
+        return (self._round_chain(s)
+                + full_reads * t_miss
                 + spec_trips * self.t_block_io
                 + (s.prefetched_blocks - spec_trips) * t_batch
                 + s.queue_occ_weight * t_batch
@@ -200,7 +265,8 @@ class CostModel:
 
     def latency_us(self, s: IOStats, pipeline: bool = False) -> float:
         t_io = self._io_time(s)
-        t_comp = s.dist_comps * self.t_dist + s.pq_comps * self.t_pq
+        t_comp = (s.dist_comps * self.t_dist + s.pq_comps * self.t_pq
+                  + self._round_comp(s))
         t_other = s.hops * self.t_hop_other
         if pipeline:
             # §5.1: DR and DC run concurrently; serial residue is the max
@@ -210,11 +276,16 @@ class CostModel:
 
     def breakdown(self, s: IOStats, pipeline: bool = False) -> dict:
         t_io = self._io_time(s)
-        t_comp = s.dist_comps * self.t_dist + s.pq_comps * self.t_pq
+        t_comp = (s.dist_comps * self.t_dist + s.pq_comps * self.t_pq
+                  + self._round_comp(s))
         t_other = s.hops * self.t_hop_other
         total = self.latency_us(s, pipeline)
         return {"t_io_us": t_io, "t_comp_us": t_comp, "t_other_us": t_other,
                 "total_us": total,
+                # round-granular terms (0 outside that regime): the
+                # lockstep chain and the occupancy-weighted compute
+                "t_round_chain_us": self._round_chain(s),
+                "t_round_comp_us": self._round_comp(s),
                 "io_frac": t_io / max(t_io + t_comp + t_other, 1e-9),
                 # per-tier demand-read service counts (tier 0 = device
                 # VMEM hot tiles, 1 = host full blocks, 2 = compressed
@@ -243,7 +314,14 @@ NVME_SEGMENT = CostModel(t_block_io=95.0, t_dist=0.055, t_pq=0.012,
 # hot tile already *in VMEM* — no DMA at all, just the probe, ~10 ns.
 # A dedup hit rides another query's same-round DMA: the tile lands in
 # VMEM once and broadcasts, so it prices like a tier-0 hit.
+# Round-granular terms (DESIGN.md §5, active only on stats that carry
+# batch_rounds): one lockstep loop round costs the latency-bound DMA
+# issue plus the candidate-merge barrier ≈ 1.5 µs, and each *live*
+# query adds ≈ 0.15 µs of VPU rank + top-k merge for its tiles — idle
+# rounds of a converged query are free (occupancy-weighted via
+# rounds_active_weight).
 TPU_HBM_SEGMENT = CostModel(t_block_io=1.2, t_dist=0.02, t_pq=0.002,
                             t_cache_hit=0.05, t_batch_block=0.35,
                             t_tier2_hit=0.08, t_tier0_hit=0.01,
-                            t_dedup_hit=0.01, name="tpu-hbm")
+                            t_dedup_hit=0.01, t_round=1.5,
+                            t_round_comp=0.15, name="tpu-hbm")

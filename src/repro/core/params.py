@@ -179,6 +179,42 @@ class CacheParams:
 
 
 @dataclasses.dataclass(frozen=True)
+class RepackParams:
+    """Knobs of the serving-plane tier-0 repack scheduler
+    (``repro.serving.scheduler.RepackScheduler``, DESIGN.md §5).
+
+    The scheduler folds the host stores' observed per-block demand
+    (``CachedBlockStore.block_freq``) and the device search's tier-0 /
+    dedup columns into a periodic repack decision for the VMEM hot-tile
+    pack. ``hysteresis`` is the control-loop damper: a repack fires
+    only when at least that fraction of the pack's slots would change,
+    so a below-threshold drift costs nothing (the no-op invariant the
+    property tests pin down) and the loop cannot oscillate between two
+    near-equal packs.
+    """
+    interval_batches: int = 8     # evaluate every N served batches
+    hysteresis: float = 0.25      # min fraction of pack slots that must
+    #                               change for a repack to fire (0 =
+    #                               repack on any drift)
+    min_observed: int = 1         # ignore blocks with fewer demand reads
+    #                               (noise floor of the drift signal)
+    hit_rate_ceiling: float = 0.95  # skip repacks while the observed
+    #                               tier-0 hit rate is already above
+    #                               this (the pack absorbs the stream;
+    #                               churn buys nothing)
+
+    def __post_init__(self):
+        if self.interval_batches < 1:
+            raise ValueError("interval_batches must be >= 1")
+        if not (0.0 <= self.hysteresis <= 1.0
+                and 0.0 <= self.hit_rate_ceiling <= 1.0):
+            raise ValueError(
+                "hysteresis and hit_rate_ceiling must be in [0, 1]")
+        if self.min_observed < 1:
+            raise ValueError("min_observed must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
 class SegmentBudget:
     """Per-segment space budget (§2.2: ≤2 GB DRAM, ≤10 GB disk;
     DESIGN.md §3: plus a device VMEM cap for the tier-0 hot-tile pack —

@@ -231,6 +231,25 @@ class CachedBlockStore:
     def hit_rate(self) -> float:
         return self.total.cache_hit_rate
 
+    def freq_delta(self, since: Optional[Counter] = None) -> Counter:
+        """Demand-read counts accumulated since ``since`` (an earlier
+        snapshot of ``block_freq``; None = lifetime).
+
+        The per-interval drift signal the serving ``RepackScheduler``
+        folds: lifetime counts would let a long-dead workload anchor
+        the pack forever, so the scheduler windows each decision on the
+        traffic since its last one. ``block_freq`` itself keeps
+        accumulating — snapshots are the caller's watermark, the store
+        never forgets."""
+        if since is None:
+            return Counter(self.block_freq)
+        out = Counter()
+        for b, c in self.block_freq.items():
+            d = c - since.get(b, 0)
+            if d > 0:
+                out[b] = d
+        return out
+
 
 def make_cached_store(store: BlockStore, cache_params,
                       block_of: Optional[np.ndarray] = None,

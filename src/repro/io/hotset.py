@@ -26,7 +26,7 @@ admission as a periodic repack rather than per-query churn.
 from __future__ import annotations
 
 from collections import Counter
-from typing import List, Mapping, Optional, Sequence
+from typing import AbstractSet, List, Mapping, Optional, Sequence
 
 import numpy as np
 
@@ -96,6 +96,40 @@ def repack_from_frequencies(ranking: Sequence[int],
     seen.sort(key=lambda b: (-int(observed[b]), pos.get(b, far), b))
     hot = set(seen)
     return seen + [b for b in ranking if int(b) not in hot]
+
+
+def plan_tier0(ranking: Sequence[int], observed: Mapping[int, int],
+               num_blocks: int, total_blocks: int,
+               min_observed: int = 1) -> List[int]:
+    """The tier-0 pack a repack WOULD select, without building arrays.
+
+    This is the planning half of dynamic admission: re-rank the
+    build-time ``ranking`` by ``observed`` demand counts (entries below
+    ``min_observed`` are noise-floored out) and fill to the budget —
+    exactly the selection ``device_search._tier0_pack`` materializes,
+    so the serving scheduler can price a repack's drift before paying
+    for one (its hysteresis gate compares this plan against the live
+    pack via ``pack_drift``)."""
+    obs = {b: c for b, c in observed.items() if c >= min_observed}
+    if obs:
+        ranking = repack_from_frequencies(ranking, obs)
+    return fill_to(ranking, num_blocks, total_blocks)
+
+
+def pack_drift(current: AbstractSet, planned: Sequence[int]) -> float:
+    """Fraction of pack slots a repack would change — the hysteresis
+    signal of the serving scheduler.
+
+    For the equal-budget repacks the scheduler performs this is
+    ``|planned - current| / |pack|``; the max() form also registers
+    growing/shrinking plans. 0.0 means the plan IS the live pack (the
+    no-op-repack-is-free invariant); 1.0 a full replacement."""
+    planned_set = set(int(b) for b in planned)
+    denom = max(len(current), len(planned_set))
+    if denom == 0:
+        return 0.0
+    return max(len(planned_set - current),
+               len(set(current) - planned_set)) / denom
 
 
 def fill_to(ranking: Sequence[int], num_blocks: int,

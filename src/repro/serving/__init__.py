@@ -3,3 +3,4 @@ from repro.serving.coordinator import (HostSegmentServer, QueryCoordinator,
                                        attach_shared_fetch_queue,
                                        merge_topk)
 from repro.serving.batcher import RequestBatcher
+from repro.serving.scheduler import RepackDecision, RepackScheduler

@@ -45,6 +45,10 @@ class RequestBatcher:
         self.queue: List[PendingRequest] = []
         self._next_id = 0
         self._waited = 0
+        self.batches_emitted = 0   # lifetime batches handed out —
+        #                            serving-loop telemetry (note: the
+        #                            RepackScheduler keeps its own count
+        #                            of batches it was actually shown)
 
     def submit(self, query: np.ndarray) -> int:
         rid = self._next_id
@@ -70,6 +74,7 @@ class RequestBatcher:
         bucket = next(b for b in self.buckets if b >= n)
         take, self.queue = self.queue[:n], self.queue[n:]
         self._waited = 0
+        self.batches_emitted += 1
         q = np.zeros((bucket, self.dim), np.float32)
         ids = []
         for i, r in enumerate(take):

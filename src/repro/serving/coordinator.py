@@ -59,13 +59,19 @@ class SegmentServer:
     touches land in ``last_tier0_hits`` instead of the io column;
     cold touches that joined another query's same-round gather (the
     batched path's cross-query dedup) land in ``last_dedup_saved`` —
-    actual DMAs for the batch = io - dedup_saved."""
+    actual DMAs for the batch = io - dedup_saved.
+
+    ``host`` (optional) keeps the host ``Segment`` the device arrays
+    were packed from; the serving ``RepackScheduler`` needs it to
+    rebuild the tier-0 pack online (``repack``). Servers without it
+    simply cannot be repack targets."""
     segment: DeviceSegment
     offset: int                   # base of this segment's id space
     num_vectors: int
     k_default: int = 10
     params: DeviceSearchParams = SERVE_DEVICE_SEARCH
     metric: str = "l2"
+    host: Optional[object] = None  # the host Segment (repack source)
 
     def search(self, queries: np.ndarray, k: Optional[int] = None
                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -77,11 +83,27 @@ class SegmentServer:
             self.params, k=k, candidates=max(self.params.candidates, k))
         r = device_anns(self.segment, jnp.asarray(queries, jnp.float32),
                         p, metric=self.metric)
+        self.last_io = np.asarray(r.io)
         self.last_tier0_hits = np.asarray(r.tier0_hits)
         self.last_hops = np.asarray(r.hops)
         self.last_dedup_saved = np.asarray(r.dedup_saved)
         self.last_rounds = int(r.rounds)
         return np.asarray(r.ids), np.asarray(r.dists), np.asarray(r.io)
+
+    def repack(self, observed, plan=None) -> int:
+        """Swap the tier-0 pack for one re-ranked by ``observed``
+        per-block demand counts (same budget, same compiled
+        executable; results stay bit-identical — exact copies either
+        way). ``plan`` short-circuits selection when the caller (the
+        scheduler) already planned the pack to price its drift.
+        Returns the number of pack slots that changed."""
+        if self.host is None:
+            raise ValueError("SegmentServer.host is unset — build the "
+                             "server with its host Segment to repack")
+        from repro.core.device_search import repack_tier0
+        self.segment, changed = repack_tier0(self.segment, self.host,
+                                             observed, plan=plan)
+        return changed
 
 
 @dataclasses.dataclass
@@ -134,7 +156,8 @@ class HostSegmentServer:
 
 
 def attach_shared_fetch_queue(servers: Sequence["HostSegmentServer"],
-                              depth: int = 8) -> AsyncFetchQueue:
+                              depth: int = 8,
+                              scheduler=None) -> AsyncFetchQueue:
     """Share ONE AsyncFetchQueue across every cache-fronted server view.
 
     This is the serving-plane half of the async subsystem: with a
@@ -144,7 +167,13 @@ def attach_shared_fetch_queue(servers: Sequence["HostSegmentServer"],
     existing ticket (``IOStats.inflight_joins``) instead of issuing a
     new round trip. Returns the queue so callers can inspect its
     lifetime counters (``submitted``/``delivered``/``reorders``/
-    ``inflight_peak``)."""
+    ``inflight_peak``).
+
+    ``scheduler`` (a ``repro.serving.RepackScheduler``) additionally
+    registers every attached store as a demand feed, so a shared-queue
+    deployment's tier-0 repacks select from the *union* of what all
+    its stores observed — the same cross-query scope the queue dedups
+    fetches in."""
     q = AsyncFetchQueue(depth=depth)
     attached = 0
     for s in servers:
@@ -153,6 +182,8 @@ def attach_shared_fetch_queue(servers: Sequence["HostSegmentServer"],
             # drains any private queue first so its in-flight fetches
             # are delivered, not orphaned
             view.store.attach_queue(q)
+            if scheduler is not None:
+                scheduler.attach_feed(view.store)
             attached += 1
     if attached == 0:
         raise ValueError("no cache-fronted HostSegmentServer views to "
@@ -161,14 +192,33 @@ def attach_shared_fetch_queue(servers: Sequence["HostSegmentServer"],
 
 
 class QueryCoordinator:
-    """Scatter -> per-segment search -> hierarchical merge."""
+    """Scatter -> per-segment search -> hierarchical merge.
+
+    ``scheduler`` (a ``repro.serving.RepackScheduler``) turns the
+    coordinator into the adaptive serving plane's control point: device
+    servers carrying their host ``Segment`` register as repack targets,
+    cache-fronted host servers as demand feeds, and after every served
+    batch the coordinator notes the device columns and lets the
+    scheduler evaluate — so tier-0 packs follow the query stream with
+    no extra plumbing at call sites."""
 
     def __init__(self, servers: List[SegmentServer],
-                 prune_fn: Optional[Callable] = None):
+                 prune_fn: Optional[Callable] = None,
+                 scheduler=None):
         self.servers = servers
         self.prune_fn = prune_fn          # (queries) -> segment indices
+        self.scheduler = scheduler
         self._cache_seen: Dict[int, Tuple[int, int]] = {}  # per-server
         #   (hits, misses) lifetime watermark for per-call delta reporting
+        if scheduler is not None:
+            for s in servers:
+                if getattr(s, "host", None) is not None and \
+                        getattr(s, "segment", None) is not None:
+                    scheduler.attach_target(s)
+                view = getattr(s, "view", None)
+                if view is not None and isinstance(view.store,
+                                                   CachedBlockStore):
+                    scheduler.attach_feed(view.store)
 
     def search(self, queries: np.ndarray, k: int = 10
                ) -> Tuple[np.ndarray, np.ndarray, Dict]:
@@ -221,4 +271,18 @@ class QueryCoordinator:
             stats["cache_hits"] = hits
             stats["cache_misses"] = misses
             stats["cache_hit_rate"] = hits / (hits + misses)
+        # adaptive serving plane: fold this batch's device columns into
+        # the scheduler window and let it evaluate on its own cadence.
+        # The repack (if any) lands AFTER this batch returned, so a
+        # request never observes a pack swap mid-flight.
+        if self.scheduler is not None:
+            self.scheduler.note_batch([self.servers[si] for si in targets])
+            decision = self.scheduler.maybe_repack()
+            if decision is not None:
+                stats["repack"] = {
+                    "repacked": decision.repacked,
+                    "changed_slots": decision.changed_slots,
+                    "max_drift": decision.max_drift,
+                    "tier0_hit_rate": decision.tier0_hit_rate,
+                    "modeled_step_us": decision.modeled_step_us}
         return gi, gd, stats

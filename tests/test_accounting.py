@@ -1,9 +1,13 @@
 """Space/byte accounting: Example 2, Eq. 8/10, segment budgets (§2.2,
-§4.1, §6.4)."""
+§4.1, §6.4) — plus the IOStats merge semantics and the round-granular
+cost model (ISSUE 5)."""
+import dataclasses
+
 import numpy as np
 import pytest
 
 from repro.configs.starling_segment import PAPER_DATASETS
+from repro.core.iostats import IOStats, NVME_SEGMENT, TPU_HBM_SEGMENT
 from repro.core.params import LayoutParams
 
 
@@ -89,3 +93,104 @@ def test_save_load_roundtrip(small_segment, tmp_path, small_data):
                       small_segment.params.search)
     ids2, _, _ = anns(seg2.view, q[:4], 5, small_segment.params.search)
     np.testing.assert_array_equal(ids1, ids2)
+
+
+# -------------------------------------- IOStats merge semantics (PR 2–5)
+
+def test_iostats_merge_additive_and_max_counters():
+    """ISSUE 5 coverage gap: the PR 2–4 counters' merge semantics.
+    dedup_saved_fetches and rounds_active_weight are additive across
+    queries; inflight_peak and batch_rounds are level/shared values and
+    merge by max."""
+    a = IOStats(block_reads=5, cache_misses=5, dedup_saved_fetches=2,
+                rounds_active_weight=0.5, inflight_peak=3,
+                batch_rounds=10, hops=4, hops_to_best=2)
+    b = IOStats(block_reads=3, cache_misses=3, dedup_saved_fetches=1,
+                rounds_active_weight=0.75, inflight_peak=7,
+                batch_rounds=6, hops=6, hops_to_best=5)
+    a.merge(b)
+    assert a.dedup_saved_fetches == 3          # additive
+    assert a.rounds_active_weight == 1.25      # additive (occupancy sum)
+    assert a.inflight_peak == 7                # max-merge
+    assert a.batch_rounds == 10                # max-merge (shared level)
+    assert a.hops_to_best == 5                 # max-merge
+    assert a.hops == 10 and a.block_reads == 8
+
+
+def test_iostats_merge_still_validates_trip_invariant():
+    a = IOStats(block_reads=2, io_round_trips=2)
+    bad = IOStats(block_reads=0, io_round_trips=1)
+    with pytest.raises(ValueError):
+        a.merge(bad)
+    # the failed merge left the accumulator untouched
+    assert a.io_round_trips == 2 and a.block_reads == 2
+
+
+def test_from_device_sets_round_columns():
+    s = IOStats.from_device(10, 3, 6, 2, 8)
+    assert s.block_reads == 13 and s.cache_misses == 10
+    assert s.io_round_trips == 8               # io - dedup_saved
+    assert s.batch_rounds == 8
+    assert s.rounds_active_weight == 6 / 8
+    s0 = IOStats.from_device(4, 0, 4, 0, 0)    # no round count carried
+    assert s0.batch_rounds == 0 and s0.rounds_active_weight == 0.0
+
+
+def test_from_device_batch_fold():
+    """The batch fold = per-query from_device merged: counters sum,
+    batch_rounds is the shared round count, rounds_active_weight the
+    mean live queries per round."""
+    io, t0 = [10, 4, 0], [3, 1, 0]
+    hops, sv = [6, 8, 0], [2, 0, 0]
+    agg = IOStats.from_device_batch(io, t0, hops, sv, 8)
+    assert agg.block_reads == 18 and agg.cache_misses == 14
+    assert agg.io_round_trips == 12
+    assert agg.batch_rounds == 8
+    assert agg.rounds_active_weight == pytest.approx(14 / 8)
+    assert agg.hops == 14 and agg.dedup_saved_fetches == 2
+
+
+# ------------------------------------- round-granular cost model (d)
+
+def test_round_granular_pricing_monotone_in_occupancy():
+    """ROADMAP (d): with batch_rounds carried, the TPU model charges
+    the lockstep chain once and occupancy-weighted compute per live
+    query-round — strictly monotone in rounds_active_weight."""
+    cm = TPU_HBM_SEGMENT
+    assert cm.t_round > 0 and cm.t_round_comp > 0
+    agg = IOStats.from_device_batch([10, 4], [3, 1], [6, 8], [2, 0], 8)
+    base = cm.latency_us(agg)
+    denser = dataclasses.replace(
+        agg, rounds_active_weight=agg.rounds_active_weight * 2)
+    assert cm.latency_us(denser) > base
+    br = cm.breakdown(agg)
+    assert br["t_round_chain_us"] == pytest.approx(8 * cm.t_round)
+    assert br["t_round_comp_us"] == pytest.approx(
+        8 * agg.rounds_active_weight * cm.t_round_comp)
+    # in the round-granular regime cold DMAs stream at bandwidth: the
+    # io term is chain + DMAs x t_batch_block + broadcast touches
+    dma = agg.cache_misses - agg.dedup_saved_fetches
+    assert br["t_io_us"] == pytest.approx(
+        8 * cm.t_round + dma * cm.t_batch_block
+        + agg.dedup_saved_fetches * cm.t_dedup_hit
+        + agg.tier0_hits * cm.t_tier0_hit)
+
+
+def test_round_granular_is_opt_in():
+    """Stats without a round count (host paths) and models without
+    t_round (the NVMe segment) price exactly as before."""
+    host = IOStats(block_reads=5, cache_misses=5, io_round_trips=5,
+                   hops=5)
+    assert NVME_SEGMENT.latency_us(host) == pytest.approx(
+        5 * NVME_SEGMENT.t_block_io + 5 * NVME_SEGMENT.t_hop_other)
+    # TPU model on round-less stats: hops-granular (the seed pricing)
+    dev = IOStats.from_device(6, 2, 6, 0, 0)
+    assert TPU_HBM_SEGMENT.latency_us(dev) == pytest.approx(
+        6 * TPU_HBM_SEGMENT.t_block_io
+        + 2 * TPU_HBM_SEGMENT.t_tier0_hit
+        + 6 * TPU_HBM_SEGMENT.t_hop_other)
+    # NVMe model ignores batch_rounds entirely (t_round unset)
+    rdev = IOStats.from_device(6, 2, 6, 0, 9)
+    assert NVME_SEGMENT.latency_us(rdev) == pytest.approx(
+        NVME_SEGMENT.latency_us(dataclasses.replace(
+            rdev, batch_rounds=0)))

@@ -181,6 +181,47 @@ def test_compaction_is_result_invariant(device_seg, small_data):
         assert int(r.rounds) == int(base.rounds)
 
 
+def test_compaction_gathers_are_cond_gated(device_seg, small_data):
+    """ROADMAP (a) regression (ISSUE 5): compaction must cost nothing
+    on rounds that do not compact. The permuted ``queries``/``lut``
+    rows are carried in the loop state and every permutation gather
+    sits behind a ``lax.cond``, so the while-loop body's *top-level*
+    gather count is identical with compaction on or off — a
+    no-compaction trace issues zero extra gathers per round. (Before
+    the fix the compact body re-gathered queries/lut plus all eleven
+    state arrays unconditionally: ~13 extra top-level gathers.)"""
+    import jax
+
+    _, q = small_data
+
+    def while_body_gathers(p):
+        closed = jax.make_jaxpr(
+            lambda qq: DS.device_anns(device_seg, qq, p))(jnp.asarray(q))
+        counts = []
+
+        def walk(jaxpr):
+            for eqn in jaxpr.eqns:
+                if eqn.primitive.name == "while":
+                    body = eqn.params["body_jaxpr"].jaxpr
+                    # top level only: gathers inside cond branches are
+                    # exactly the ones a non-compacting round skips
+                    counts.append(sum(1 for e in body.eqns
+                                      if e.primitive.name == "gather"))
+                    walk(body)
+                elif eqn.primitive.name in ("pjit", "scan"):
+                    walk(eqn.params["jaxpr"].jaxpr)
+        walk(closed.jaxpr)
+        return counts
+
+    p = dataclasses.replace(P48, max_hops=64)
+    off = while_body_gathers(p)
+    on = while_body_gathers(dataclasses.replace(p, compact_frac=0.5))
+    assert len(off) == len(on) == 1      # one batched block-search loop
+    assert on[0] == off[0], (
+        f"compaction added {on[0] - off[0]} unconditional gathers per "
+        f"round — the permutation must stay cond-gated")
+
+
 @pytest.mark.slow
 def test_dedup_counters_consistent(device_seg, small_data):
     """dedup_saved counts a subset of cold touches (io keeps its seed

@@ -1,0 +1,318 @@
+"""Adaptive serving plane: the feedback-driven tier-0 repack scheduler
+(ISSUE 5 tentpole). Deterministic twins of the hypothesis properties in
+``test_scheduler_props.py`` — these always run.
+
+The invariants under test (DESIGN.md §5):
+
+  * a scheduled repack NEVER changes ``(ids, dists)`` — exact copies
+    either way, only the io/tier0_hits split moves;
+  * hysteresis: a drift that would change fewer than ``hysteresis x H``
+    pack slots fires ZERO repacks (the no-op is free — nothing is
+    rebuilt);
+  * idempotence: at fixed observed frequencies the second evaluation
+    plans the live pack (drift 0) and does nothing;
+  * the demand signal is the *union* across feeds, windowed by
+    ``freq_delta`` watermarks.
+"""
+import dataclasses
+from collections import Counter
+
+import numpy as np
+import pytest
+
+from repro.core.blockstore import BlockStore
+from repro.core.params import CacheParams, DeviceSearchParams, RepackParams
+from repro.io import hotset
+from repro.io.cache import BlockCache
+from repro.io.cached_store import CachedBlockStore, cached_view
+from repro.serving import (HostSegmentServer, QueryCoordinator,
+                           RepackScheduler, SegmentServer,
+                           attach_shared_fetch_queue)
+
+P_SRV = DeviceSearchParams(k=10, candidates=48, max_hops=64,
+                           fetch_width=2, compact_frac=0.25)
+
+
+def _tiny_store() -> CachedBlockStore:
+    """A 4-block store just big enough to exercise freq accounting."""
+    base = BlockStore(vid=np.arange(8, dtype=np.int32).reshape(4, 2),
+                      vecs=np.zeros((4, 2, 8), np.float32),
+                      meta=np.full((4, 2, 5), -1, np.int32),
+                      block_kb=1.0)
+    return CachedBlockStore(base, BlockCache(4096, 1024))
+
+
+def _device_server(seg, tier0_blocks=8) -> SegmentServer:
+    from repro.core import device_search as DS
+    return SegmentServer(
+        segment=DS.from_segment(seg, tier0_blocks=tier0_blocks),
+        offset=0, num_vectors=seg.num_vectors, host=seg, params=P_SRV)
+
+
+def _hot_set(ds) -> set:
+    from repro.core.device_search import hot_pack_blocks
+    return hot_pack_blocks(ds)
+
+
+# ---------------------------------------------------------- freq window
+
+def test_freq_delta_windowing():
+    store = _tiny_store()
+    store.block_freq.update({0: 3, 2: 1})
+    mark = Counter(store.block_freq)
+    assert store.freq_delta(mark) == Counter()
+    store.block_freq.update({0: 2, 1: 5})
+    assert store.freq_delta(mark) == Counter({1: 5, 0: 2})
+    # lifetime view when no watermark is given; the store never forgets
+    assert store.freq_delta() == Counter({0: 5, 1: 5, 2: 1})
+    assert store.block_freq[0] == 5
+
+
+def test_attach_feed_rejects_bare_stores():
+    sched = RepackScheduler()
+    with pytest.raises(TypeError):
+        sched.attach_feed(object())
+    store = _tiny_store()
+    sched.attach_feed(store)
+    sched.attach_feed(store)              # idempotent attach
+    assert len(sched._feeds) == 1
+
+
+def test_demand_union_across_feeds():
+    s1, s2 = _tiny_store(), _tiny_store()
+    sched = RepackScheduler()
+    sched.attach_feed(s1)
+    sched.attach_feed(s2)
+    s1.block_freq.update({0: 2, 1: 1})
+    s2.block_freq.update({1: 4, 3: 2})
+    assert sched.demand_union() == Counter({0: 2, 1: 5, 3: 2})
+
+
+# ------------------------------------------------------ plan invariants
+
+def test_plan_matches_materialized_pack(small_segment):
+    """hotset.plan_tier0 and the pack from_segment builds must select
+    the same blocks — the hysteresis gate prices the real repack."""
+    from repro.core import device_search as DS
+    seg = small_segment
+    v = seg.view
+    rho = v.store.num_blocks
+    ranking = hotset.hot_block_ranking(
+        v.layout.block_of, seg.graph.adj, seg.graph.deg,
+        hotset.view_seed_ids(v))
+    obs = {b: rho - b for b in range(0, rho, 3)}
+    plan = hotset.plan_tier0(ranking, obs, 8, rho)
+    ds = DS.from_segment(seg, tier0_blocks=8, observed=obs)
+    assert set(plan) == _hot_set(ds)
+
+
+def test_pack_drift_edges():
+    assert hotset.pack_drift(set(), []) == 0.0
+    assert hotset.pack_drift({1, 2}, [1, 2]) == 0.0
+    assert hotset.pack_drift({1, 2}, [3, 4]) == 1.0
+    assert hotset.pack_drift({1, 2, 3, 4}, [1, 2, 3, 9]) == 0.25
+    # growing / shrinking plans register too
+    assert hotset.pack_drift({1, 2}, [1, 2, 3]) == pytest.approx(1 / 3)
+
+
+def test_repack_idempotent_at_fixed_frequencies():
+    """Planning is deterministic: plan(obs) re-planned under the same
+    obs is itself — so the decision after a repack is drift 0."""
+    ranking = [5, 3, 8, 1, 9, 0]
+    obs = {8: 7, 0: 7, 4: 2}
+    p1 = hotset.plan_tier0(ranking, obs, 4, 12)
+    p2 = hotset.plan_tier0(ranking, obs, 4, 12)
+    assert p1 == p2
+    assert hotset.pack_drift(set(p1), p2) == 0.0
+
+
+# ----------------------------------------------- the control loop itself
+
+@pytest.mark.slow
+def test_scheduled_repack_fires_and_is_bit_identical(small_segment,
+                                                     small_data):
+    """Drifted stream -> scheduler fires at its interval -> modeled
+    block touches move into tier 0 -> (ids, dists) bit-identical."""
+    _, q = small_data
+    seg = small_segment
+    cview = cached_view(seg.view, seg.graph,
+                        CacheParams(budget_frac=0.10))
+    hserver = HostSegmentServer(view=cview, params=seg.params.search,
+                                offset=0, num_vectors=seg.num_vectors)
+    server = _device_server(seg)
+    sched = RepackScheduler(RepackParams(interval_batches=2,
+                                         hysteresis=0.2))
+    sched.attach_feed(cview.store)
+    coord = QueryCoordinator([server], scheduler=sched)
+
+    # a stream aimed at vectors whose blocks the build-time pack left
+    # cold: maximal drift against the entry-neighborhood prior
+    x = small_data[0]
+    cold_vid = np.flatnonzero(~np.isin(
+        seg.view.layout.block_of, sorted(_hot_set(server.segment))))
+    rng = np.random.default_rng(3)
+    qs = (x[rng.choice(cold_vid, 16)]
+          + rng.normal(0, 0.01, (16, x.shape[1]))).astype(np.float32)
+
+    hserver.search(qs)                        # demand feed
+    gi0, gd0, st0 = coord.search(qs, k=10)    # batch 1: not due yet
+    assert "repack" not in st0 and sched.repacks == 0
+    old_pack = _hot_set(server.segment)
+    gi1, gd1, st1 = coord.search(qs, k=10)    # batch 2: evaluation due
+    assert st1["repack"]["repacked"] == 1
+    assert sched.repacks == 1
+    assert _hot_set(server.segment) != old_pack
+    gi2, gd2, st2 = coord.search(qs, k=10)
+    np.testing.assert_array_equal(gi0, gi2)
+    np.testing.assert_array_equal(gd0, gd2)
+    # the repacked pack absorbs more touches on the shifted stream
+    assert (st2.get("total_tier0_hits", 0)
+            > st0.get("total_tier0_hits", 0))
+    assert st2["total_block_reads"] < st0["total_block_reads"]
+
+
+@pytest.mark.slow
+def test_hysteresis_below_threshold_fires_nothing(small_segment,
+                                                  small_data):
+    """Deterministic twin of the hypothesis property: a drift that
+    would change fewer than hysteresis x H slots is a free no-op."""
+    seg = small_segment
+    server = _device_server(seg, tier0_blocks=8)
+    pack = sorted(_hot_set(server.segment))
+    store = _tiny_store()
+    sched = RepackScheduler(RepackParams(interval_batches=1,
+                                         hysteresis=0.5))
+    sched.attach_feed(store)
+    sched.attach_target(server)
+    # observed traffic = the pack itself plus ONE outside block: drift
+    # 1/8 < 0.5. (The tiny feed store only supplies the counter — the
+    # scheduler unions counters, it never reads feed arrays.)
+    rho = seg.view.store.num_blocks
+    outside = next(b for b in range(rho) if b not in pack)
+    store.block_freq.update({b: 10 for b in pack})
+    store.block_freq[outside] = 100
+    before = np.asarray(server.segment.hot_slot_of).copy()
+    sched.note_batch([server])
+    d = sched.maybe_repack()
+    assert d is not None and d.repacked == 0 and d.evaluated == 1
+    assert 0.0 < d.max_drift < 0.5
+    assert sched.repacks == 0 and sched.skipped == 1
+    np.testing.assert_array_equal(
+        before, np.asarray(server.segment.hot_slot_of))
+    # ...and the window survives, so drift can still accumulate later
+    assert len(sched._window) > 0
+
+
+@pytest.mark.slow
+def test_hit_rate_ceiling_suppresses_churn(small_segment, small_data):
+    """A pack already absorbing the stream is left alone even at full
+    drift (the device columns are a real input to the decision)."""
+    _, q = small_data
+    seg = small_segment
+    server = _device_server(seg, tier0_blocks=8)
+    store = _tiny_store()
+    sched = RepackScheduler(RepackParams(interval_batches=1,
+                                         hysteresis=0.1,
+                                         hit_rate_ceiling=0.0))
+    sched.attach_feed(store)
+    sched.attach_target(server)
+    rho = seg.view.store.num_blocks
+    drifted = [b for b in range(rho)
+               if b not in _hot_set(server.segment)][:8]
+    store.block_freq.update({b: 50 for b in drifted})
+    server.search(q[:8], 10)      # real columns: hit rate < 1.0 is
+    sched.note_batch([server])    # still >= ceiling 0.0 -> suppressed
+    d = sched.maybe_repack()
+    assert d.repacked == 0 and d.max_drift >= 0.1
+    assert d.tier0_hit_rate >= 0.0
+
+
+@pytest.mark.slow
+def test_cache_stats_consistent_after_scheduled_repack(small_segment,
+                                                       small_data):
+    """ISSUE 5 coverage gap: HostSegmentServer.cache_stats() keeps its
+    lifetime counters across a scheduled repack — the scheduler windows
+    via watermarks, it never resets the store."""
+    _, q = small_data
+    seg = small_segment
+    cview = cached_view(seg.view, seg.graph,
+                        CacheParams(budget_frac=0.10, queue_depth=4))
+    hserver = HostSegmentServer(view=cview, params=seg.params.search,
+                                offset=0, num_vectors=seg.num_vectors)
+    server = _device_server(seg)
+    sched = RepackScheduler(RepackParams(interval_batches=1,
+                                         hysteresis=0.05))
+    attach_shared_fetch_queue([hserver], scheduler=sched)
+    assert len(sched._feeds) == 1         # queue wiring registered it
+    sched.attach_target(server)
+    hserver.search(q[:8])
+    before = hserver.cache_stats()
+    assert before["cache_hits"] + before["cache_misses"] > 0
+    freq_before = dict(cview.store.block_freq)
+    sched.note_batch([server])
+    d = sched.maybe_repack()
+    assert d is not None
+    after = hserver.cache_stats()
+    # lifetime counters monotone and untouched by the decision
+    assert after == before
+    assert dict(cview.store.block_freq) == freq_before
+    hserver.search(q[8:16])
+    later = hserver.cache_stats()
+    assert later["cache_hits"] >= after["cache_hits"]
+    assert (later["cache_hits"] + later["cache_misses"]
+            > after["cache_hits"] + after["cache_misses"])
+
+
+@pytest.mark.slow
+def test_partial_repack_keeps_window_for_lagging_targets(small_segment):
+    """Multi-target invariant: one target's repack must NOT wipe the
+    shared demand window — a sibling still under the hysteresis gate
+    keeps accumulating drift (else slow drifters starve forever)."""
+    from repro.core import device_search as DS
+    seg = small_segment
+    rho = seg.view.store.num_blocks
+    srv_a = _device_server(seg, tier0_blocks=8)     # build-time pack
+    drifted = [b for b in range(rho)
+               if b not in _hot_set(srv_a.segment)][:8]
+    window = Counter({b: 50 for b in drifted})
+    # target B already sits on the observed-hot pack: its drift is 0
+    srv_b = SegmentServer(
+        segment=DS.from_segment(seg, tier0_blocks=8, observed=window),
+        offset=0, num_vectors=seg.num_vectors, host=seg, params=P_SRV)
+    assert _hot_set(srv_b.segment) == set(drifted)
+    sched = RepackScheduler(RepackParams(interval_batches=1,
+                                         hysteresis=0.25))
+    sched.attach_target(srv_a)
+    sched.attach_target(srv_b)
+    sched._window.update(window)
+    sched.batches = 1
+    d = sched.maybe_repack()
+    assert d.evaluated == 2 and d.repacked == 1     # A fired, B held
+    assert _hot_set(srv_a.segment) == set(drifted)
+    assert sched.repacks == 1 and sched.skipped == 1
+    # the window survived the partial repack
+    assert sched.demand_union() == window
+
+
+def test_attach_target_requires_host(small_segment):
+    from repro.core import device_search as DS
+    sched = RepackScheduler()
+    orphan = SegmentServer(segment=DS.from_segment(small_segment,
+                                                   tier0_blocks=4),
+                           offset=0,
+                           num_vectors=small_segment.num_vectors)
+    with pytest.raises(ValueError):
+        sched.attach_target(orphan)
+    with pytest.raises(ValueError):
+        orphan.repack({0: 1})
+
+
+def test_repack_params_validation():
+    with pytest.raises(ValueError):
+        RepackParams(interval_batches=0)
+    with pytest.raises(ValueError):
+        RepackParams(hysteresis=1.5)
+    with pytest.raises(ValueError):
+        RepackParams(min_observed=0)
+    with pytest.raises(ValueError):
+        RepackParams(hit_rate_ceiling=-0.1)

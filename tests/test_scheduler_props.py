@@ -1,0 +1,102 @@
+"""Property tests for the repack scheduler (ISSUE 5 satellite).
+
+Guarded hypothesis import, matching test_batch_props/test_io_props:
+the whole module skips when hypothesis is absent; deterministic twins
+of every property live in test_scheduler.py and always run.
+
+Properties:
+
+  * ANY observed-frequency map leaves ``(ids, dists)`` bit-identical
+    across a repack — the pack holds exact copies, frequencies only
+    steer which blocks get them (batch pinned to one compiled shape);
+  * planning is idempotent at fixed frequencies: the pack a repack
+    selects, re-planned under the same window, is itself (drift 0);
+  * hysteresis: a window whose plan changes fewer than ``hysteresis x
+    H`` slots fires zero repacks and leaves the pack arrays untouched.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis; rest of the suite runs without")
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import device_search as DS
+from repro.core.params import DeviceSearchParams, RepackParams
+from repro.io import hotset
+from repro.serving import RepackScheduler, SegmentServer
+
+BATCH = 8
+P_PROP = DeviceSearchParams(k=5, candidates=24, max_hops=48,
+                            fetch_width=2)
+
+freq_maps = st.dictionaries(st.integers(0, 300), st.integers(1, 1000),
+                            max_size=24)
+
+
+@pytest.mark.slow
+@given(observed=freq_maps)
+@settings(max_examples=6, deadline=None)
+def test_repack_never_changes_results(observed, small_segment,
+                                      small_data):
+    _, q = small_data
+    qb = jnp.asarray(q[:BATCH])
+    rho = small_segment.view.store.num_blocks
+    observed = {b % rho: c for b, c in observed.items()}
+    base = DS.device_anns(DS.from_segment(small_segment, tier0_blocks=8),
+                          qb, P_PROP)
+    ds = DS.from_segment(small_segment, tier0_blocks=8,
+                         observed=observed)
+    r = DS.device_anns(ds, qb, P_PROP)
+    np.testing.assert_array_equal(np.asarray(base.ids), np.asarray(r.ids))
+    np.testing.assert_array_equal(np.asarray(base.dists),
+                                  np.asarray(r.dists))
+    # block touches are conserved: only the io/tier0 split moves
+    np.testing.assert_array_equal(
+        np.asarray(base.io) + np.asarray(base.tier0_hits),
+        np.asarray(r.io) + np.asarray(r.tier0_hits))
+
+
+@given(observed=freq_maps, budget=st.integers(1, 16))
+@settings(max_examples=30, deadline=None)
+def test_plan_idempotent_at_fixed_frequencies(observed, budget):
+    ranking = list(range(0, 40, 2))
+    p1 = hotset.plan_tier0(ranking, observed, budget, 40)
+    p2 = hotset.plan_tier0(ranking, observed, budget, 40)
+    assert p1 == p2
+    assert hotset.pack_drift(set(p1), p2) == 0.0
+    assert len(p1) == min(budget, 40) == len(set(p1))
+
+
+@pytest.mark.slow
+@given(outside=st.integers(0, 1), weights=st.lists(
+    st.integers(1, 50), min_size=8, max_size=8))
+@settings(max_examples=10, deadline=None)
+def test_below_threshold_drift_fires_zero_repacks(outside, weights,
+                                                  small_segment):
+    """Traffic over the live pack plus at most ONE outside block can
+    move at most one of 8 slots (drift <= 1/8), which sits under the
+    0.5 hysteresis gate — so no repack, no array churn, ever."""
+    server = SegmentServer(
+        segment=DS.from_segment(small_segment, tier0_blocks=8),
+        offset=0, num_vectors=small_segment.num_vectors,
+        host=small_segment, params=P_PROP)
+    pack = sorted(DS.hot_pack_blocks(server.segment))
+    rho = small_segment.view.store.num_blocks
+    sched = RepackScheduler(RepackParams(interval_batches=1,
+                                         hysteresis=0.5))
+    sched.attach_target(server)
+    window = {b: w for b, w in zip(pack, weights)}
+    if outside:
+        window[next(b for b in range(rho) if b not in pack)] = 1000
+    sched._window.update(window)
+    before = np.asarray(server.segment.hot_slot_of).copy()
+    sched.batches = sched.params.interval_batches
+    d = sched.maybe_repack()
+    assert d is not None and d.repacked == 0
+    assert d.max_drift <= 1 / 8 + 1e-9
+    np.testing.assert_array_equal(
+        before, np.asarray(server.segment.hot_slot_of))
