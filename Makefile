@@ -2,8 +2,8 @@
 
 PY ?= python
 
-.PHONY: test test-fast test-device test-e2e bench bench-io bench-device \
-	bench-batch dev-deps
+.PHONY: test test-fast test-device test-e2e test-obs bench bench-io \
+	bench-device bench-batch bench-obs dev-deps
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -56,6 +56,20 @@ bench-batch:
 		--only device_batch_dedup_sweep
 	BENCH_SMOKE=1 PYTHONPATH=src $(PY) -m benchmarks.run \
 		--only device_drift_repack_sweep
+
+# the observability plane (repro.obs): trace/metrics/export/roundlog/
+# calibration unit + property tests, then the Perfetto-exporting trace
+# smoke and the cost-calibration harness (BENCH_* perf artifacts +
+# results/trace_smoke.json + CALIB_*.json presets land in results/)
+test-obs:
+	PYTHONPATH=src $(PY) -m pytest -x -q -m "not slow" \
+		tests/test_obs.py tests/test_trace_roundlog.py
+
+bench-obs:
+	BENCH_SMOKE=1 PYTHONPATH=src $(PY) -m benchmarks.run \
+		--only obs_trace_smoke
+	BENCH_SMOKE=1 PYTHONPATH=src $(PY) -m benchmarks.run \
+		--only cost_calibration
 
 dev-deps:
 	$(PY) -m pip install -r requirements-dev.txt

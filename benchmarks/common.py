@@ -85,6 +85,68 @@ def modeled(stats: List[IOStats], pipeline: bool = True,
 
 _results: List[Dict] = []
 
+# standardized perf artifacts (repro.obs satellite): one
+# results/BENCH_<name>.json per bench smoke, schema-stable across PRs
+# so the perf trajectory is diffable and CI-uploadable
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+ARTIFACT_SCHEMA = "repro.bench.v1"
+
+
+def config_hash(config: Dict) -> str:
+    """Stable short hash of a bench configuration — artifacts with
+    equal hashes are comparable across PRs; a hash change flags that a
+    metric moved because the *config* moved."""
+    import hashlib
+    blob = json.dumps(config, sort_keys=True, default=str)
+    return hashlib.sha256(blob.encode()).hexdigest()[:12]
+
+
+def perf_artifact(name: str, metrics: List[Dict],
+                  config: Optional[Dict] = None,
+                  measured: bool = False) -> str:
+    """Write ``results/BENCH_<name>.json``.
+
+    ``metrics`` rows carry ``name``/``value``/``units`` (and may
+    override the artifact-level ``measured`` flag per row); ``measured``
+    states whether values came from wall-clock (True) or the cost model
+    (False) — the modeled-vs-measured flag every consumer must check
+    before comparing numbers across hardware."""
+    config = config or {}
+    rows = []
+    for m in metrics:
+        row = {"name": str(m["name"]), "value": m["value"],
+               "units": str(m.get("units", "")),
+               "measured": bool(m.get("measured", measured))}
+        rows.append(row)
+    payload = {"schema": ARTIFACT_SCHEMA, "bench": name,
+               "config": config, "config_hash": config_hash(config),
+               "measured": bool(measured), "metrics": rows}
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    path = os.path.join(ARTIFACT_DIR, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    print(f"[artifact] {os.path.basename(path)}: {len(rows)} metrics "
+          f"(measured={measured})", flush=True)
+    return path
+
+
+def validate_perf_artifact(payload: Dict) -> List[str]:
+    """Schema check for BENCH_*.json (used by tests and the CI obs
+    lane); returns a list of problems, empty when valid."""
+    problems = []
+    if payload.get("schema") != ARTIFACT_SCHEMA:
+        problems.append(f"schema must be {ARTIFACT_SCHEMA!r}")
+    for key in ("bench", "config", "config_hash", "measured", "metrics"):
+        if key not in payload:
+            problems.append(f"missing {key!r}")
+    for i, m in enumerate(payload.get("metrics", [])):
+        for key in ("name", "value", "units", "measured"):
+            if key not in m:
+                problems.append(f"metrics[{i}]: missing {key!r}")
+        if "value" in m and not isinstance(m["value"], (int, float)):
+            problems.append(f"metrics[{i}]: value must be a number")
+    return problems
+
 
 def record(bench: str, **fields) -> Dict:
     rec = {"bench": bench, **fields}

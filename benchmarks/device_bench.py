@@ -195,6 +195,18 @@ def device_batch_dedup_sweep():
                  occupancy=float(np.asarray(r.hops).mean()
                                  / max(int(r.rounds), 1)),
                  modeled_latency_us_tpu=lat)
+    # perf-trajectory artifact at the largest batch swept in this lane
+    C.perf_artifact(
+        "device_batch_dedup", [
+            {"name": "modeled_dma_per_query", "value": io_m - sv_m,
+             "units": "blocks"},
+            {"name": "dedup_saved_per_query", "value": sv_m,
+             "units": "blocks"},
+            {"name": "modeled_latency_us_tpu", "value": lat,
+             "units": "us"}],
+        config={"batch": b, "n": C.N_BASE, "dim": C.DIM,
+                "tier0_frac": 0.05, "smoke": smoke},
+        measured=False)
 
 
 def device_drift_repack_sweep():
@@ -304,6 +316,18 @@ def device_drift_repack_sweep():
                  server.last_hops, server.last_dedup_saved,
                  int(server.last_rounds)),
              sched_evals=sched.evals, sched_skipped=sched.skipped)
+    C.perf_artifact(
+        "device_drift_repack", [
+            {"name": "modeled_dma_cut",
+             "value": 1.0 - dma_after / max(dma_before, 1e-9),
+             "units": "ratio"},
+            {"name": "batches_to_repack", "value": repack_at + 1,
+             "units": "batches"},
+            {"name": "dma_per_query_adaptive", "value": dma_after,
+             "units": "blocks"}],
+        config={"n": C.N_BASE, "dim": C.DIM, "tier0_frac": 0.1,
+                "hysteresis": SERVE_REPACK.hysteresis, "smoke": smoke},
+        measured=False)
 
 
 def batched_beam_throughput():

@@ -137,6 +137,19 @@ def io_queue_depth_sweep():
                 st, TPU_HBM_SEGMENT),
             latency_reduction_vs_sync=1.0 - lat / lat_sync,
             latency_reduction_vs_uncached=1.0 - lat / lat_u)
+        if depth == 8:
+            # perf-trajectory artifact at the representative depth
+            common.perf_artifact(
+                "io_queue_depth", [
+                    {"name": "latency_us_nvme", "value": lat,
+                     "units": "us"},
+                    {"name": "hit_rate", "value": tot.cache_hit_rate,
+                     "units": "ratio"},
+                    {"name": "latency_reduction_vs_sync",
+                     "value": 1.0 - lat / lat_sync, "units": "ratio"}],
+                config={"queue_depth": depth, "n": common.N_BASE,
+                        "dim": common.DIM, "cache": "async+tier2"},
+                measured=False)
 
 
 def io_tier2_budget_sweep():

@@ -322,10 +322,22 @@ def mesh_qps_estimate():
                  t_round_comp_us=br["t_round_comp_us"],
                  t_io_us=br["t_io_us"], t_other_us=br["t_other_us"])
     worst = max(step_us)
+    qps = batch * data_ranks / (worst * 1e-6)
     C.record("mesh_qps", mesh=f"model{model_ranks}xdata{data_ranks}",
              batch=batch, slowest_rank_step_us=worst,
              rank_skew=worst / max(min(step_us), 1e-9),
-             qps_modeled=batch * data_ranks / (worst * 1e-6))
+             qps_modeled=qps)
+    C.perf_artifact(
+        "mesh_qps", [
+            {"name": "qps_modeled", "value": qps, "units": "qps"},
+            {"name": "slowest_rank_step_us", "value": worst,
+             "units": "us"},
+            {"name": "rank_skew",
+             "value": worst / max(min(step_us), 1e-9),
+             "units": "ratio"}],
+        config={"model_ranks": model_ranks, "data_ranks": data_ranks,
+                "batch": batch, "cost_model": cm.name},
+        measured=False)
 
 
 # ------------------------------------------------------------ Fig. 15

@@ -14,7 +14,7 @@ import sys
 import time
 import traceback
 
-from benchmarks import (device_bench, io_bench, paper_tables,
+from benchmarks import (device_bench, io_bench, obs_bench, paper_tables,
                         roofline_report)
 
 BENCHES = [
@@ -46,6 +46,8 @@ BENCHES = [
     device_bench.device_range_search_rounds,
     device_bench.batched_beam_throughput,
     device_bench.kernel_micro,
+    obs_bench.obs_trace_smoke,
+    obs_bench.cost_calibration,
     roofline_report.roofline_tables,
 ]
 

@@ -57,6 +57,11 @@ from repro.core.params import DeviceSearchParams
 
 Tree = dict
 
+# per-round trace-buffer columns (p.trace_rounds) — the device-side
+# twin of repro.obs.roundlog.ROUND_LOG_COLS (kept import-free here so
+# core never depends on the obs plane; equality is pinned by a test)
+_ROUND_LOG_COLS = ("live", "cold", "tier0", "joins", "compacted")
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
@@ -97,6 +102,12 @@ class DeviceSearchResult(NamedTuple):
     #                            issued for this query = io - dedup_saved)
     rounds: jnp.ndarray        # scalar: loop rounds the batch ran
     #                            (hops / rounds = a query's occupancy)
+    round_log: Optional[jnp.ndarray] = None
+    #                            [max_hops, 5] i32 per-round trace buffer
+    #                            (p.trace_rounds; repro.obs.roundlog —
+    #                            cols live/cold/tier0/joins/compacted;
+    #                            rows >= ``rounds`` are unwritten). None
+    #                            when tracing is off.
 
 
 class DeviceRangeResult(NamedTuple):
@@ -446,7 +457,7 @@ def _block_search_loop(ds: DeviceSegment, queries: jnp.ndarray, lut,
                        state, *, res_size: int, candidates: int,
                        sigma: float, max_hops: int, metric: str,
                        fetch_width: int, fetch_impl: str,
-                       compact_frac: float = 0.0):
+                       compact_frac: float = 0.0, trace: bool = False):
     """The batched best-first block search from a given carried state.
 
     ``state`` = (cand_id, cand_key, open_key, visited, res_id, res_key,
@@ -467,7 +478,18 @@ def _block_search_loop(ds: DeviceSegment, queries: jnp.ndarray, lut,
     rounds are free — ROADMAP (a)); only the round that actually
     compacts pays the sort + re-gather. The permutation is inverted
     before returning, so callers see original query order either
-    way."""
+    way.
+
+    ``trace`` (jit-static) carries a ``[max_hops, 5] i32`` per-round
+    buffer (``repro.obs.roundlog`` columns: live, cold, tier0, joins,
+    compacted) written once per round from the same masks the counters
+    sum — a lossless refinement, so the log's column sums equal the
+    counter totals by construction. The buffer's round axis is never
+    permuted by compaction (its rows are batch-level sums, which are
+    permutation-invariant). Returns ``(state, round_log)``; the log is
+    ``None`` when tracing is off, and the counters/results are
+    bit-identical either way (the trace writes are pure additions to
+    the dataflow)."""
     qn = queries.shape[0]
     eps = ds.vid.shape[1]
     fw = max(fetch_width, 1)
@@ -481,15 +503,20 @@ def _block_search_loop(ds: DeviceSegment, queries: jnp.ndarray, lut,
         return jnp.isfinite(open_key).any() & (t < max_hops)
 
     def body(st):
+        (cand_id, cand_key, open_key, visited, res_id, res_key,
+         io, t0, hops, saved) = st[:10]
+        pos = 10
         if compact:
-            (cand_id, cand_key, open_key, visited, res_id, res_key,
-             io, t0, hops, saved, perm, q_r, lut_r, t) = st
-        else:
-            (cand_id, cand_key, open_key, visited, res_id, res_key,
-             io, t0, hops, saved, t) = st
+            perm, q_r, lut_r = st[10:13]
+            pos = 13
+        if trace:
+            rlog = st[pos]
+            pos += 1
+        t = st[-1]
 
         # --- active mask + optional live-query compaction
         live = jnp.isfinite(open_key).any(axis=1)            # [Q]
+        fired = jnp.asarray(False)
         if compact:
             frac = live.astype(jnp.float32).mean()
             # repack only when the live rows are no longer front-packed
@@ -500,6 +527,7 @@ def _block_search_loop(ds: DeviceSegment, queries: jnp.ndarray, lut,
             # every other round takes the identity branch for free
             unpacked = (jnp.any(jnp.logical_not(live[:-1]) & live[1:])
                         if qn > 1 else jnp.asarray(False))
+            fired = (frac < compact_frac) & unpacked
             carried = (cand_id, cand_key, open_key, visited, res_id,
                        res_key, io, t0, hops, saved, perm, q_r, lut_r)
 
@@ -510,8 +538,8 @@ def _block_search_loop(ds: DeviceSegment, queries: jnp.ndarray, lut,
                 ordr = jnp.argsort(jnp.logical_not(live))
                 return tuple(jnp.take(a, ordr, axis=0) for a in arrs)
 
-            carried = jax.lax.cond((frac < compact_frac) & unpacked,
-                                   _repack, lambda arrs: arrs, carried)
+            carried = jax.lax.cond(fired, _repack,
+                                   lambda arrs: arrs, carried)
             (cand_id, cand_key, open_key, visited, res_id, res_key,
              io, t0, hops, saved, perm, q_r, lut_r) = carried
         else:
@@ -537,6 +565,19 @@ def _block_search_loop(ds: DeviceSegment, queries: jnp.ndarray, lut,
         t0 = t0 + hot.sum(axis=1).astype(jnp.int32)
         saved = saved + joined.sum(axis=1).astype(jnp.int32)
         hops = hops + active.astype(jnp.int32)               # round trips
+
+        if trace:
+            # the round's row is the batch-level sum of exactly the
+            # masks the per-query counters just accumulated, so the
+            # log's column sums equal the counter totals identically
+            # (the fold invariant tests/test_trace_roundlog.py pins);
+            # sums are permutation-invariant, so compaction is moot
+            rlog = rlog.at[t].set(jnp.stack([
+                active.sum().astype(jnp.int32),
+                cold.sum().astype(jnp.int32),
+                hot.sum().astype(jnp.int32),
+                joined.sum().astype(jnp.int32),
+                fired.astype(jnp.int32)]))
 
         # --- DC: fold the exact-ranked residents into results
         f_valid = jnp.repeat(f_active, eps, axis=1)
@@ -573,21 +614,34 @@ def _block_search_loop(ds: DeviceSegment, queries: jnp.ndarray, lut,
         cand_key, cand_id = _merge_top(cand_key, cand_id, f_key, f_id,
                                        candidates)
         open_key = _open_keys(cand_id, cand_key, visited)
+        out = (cand_id, cand_key, open_key, visited, res_id, res_key,
+               io, t0, hops, saved)
         if compact:
-            return (cand_id, cand_key, open_key, visited, res_id,
-                    res_key, io, t0, hops, saved, perm, q_r, lut_r,
-                    t + 1)
-        return (cand_id, cand_key, open_key, visited, res_id, res_key,
-                io, t0, hops, saved, t + 1)
+            out = out + (perm, q_r, lut_r)
+        if trace:
+            out = out + (rlog,)
+        return out + (t + 1,)
 
-    if not compact:
-        return jax.lax.while_loop(cond, body, state)
-    perm0 = jnp.arange(qn, dtype=jnp.int32)
-    st = state[:-1] + (perm0, queries, lut, state[-1])
-    out = jax.lax.while_loop(cond, body, st)
-    *arrs, perm, _q_r, _lut_r, t = out
-    inv = jnp.argsort(perm)                  # undo the compaction order
-    return tuple(jnp.take(a, inv, axis=0) for a in arrs) + (t,)
+    # extended state: core10 + (perm, queries, lut | compact)
+    #                        + (round log | trace) + (t,)
+    st = state[:-1]
+    if compact:
+        st = st + (jnp.arange(qn, dtype=jnp.int32), queries, lut)
+    if trace:
+        st = st + (jnp.zeros((max_hops, len(_ROUND_LOG_COLS)),
+                             jnp.int32),)
+    out = jax.lax.while_loop(cond, body, st + (state[-1],))
+    arrs = out[:10]
+    pos = 10
+    if compact:
+        perm = out[10]
+        pos = 13
+        inv = jnp.argsort(perm)              # undo the compaction order
+        arrs = tuple(jnp.take(a, inv, axis=0) for a in arrs)
+    rlog = None
+    if trace:
+        rlog = out[pos]                      # round axis: never permuted
+    return arrs + (out[-1],), rlog
 
 
 DEFAULT_DEVICE_SEARCH = DeviceSearchParams()
@@ -642,14 +696,14 @@ def device_anns(ds: DeviceSegment, queries: jnp.ndarray,
              jnp.zeros((qn,), jnp.int32),                    # hops
              jnp.zeros((qn,), jnp.int32),                    # dedup joins
              jnp.zeros((), jnp.int32))
-    state = _block_search_loop(
+    state, rlog = _block_search_loop(
         ds, queries, lut, state, res_size=res_size,
         candidates=p.candidates, sigma=p.sigma, max_hops=p.max_hops,
         metric=metric, fetch_width=fw, fetch_impl=p.fetch_impl,
-        compact_frac=p.compact_frac)
+        compact_frac=p.compact_frac, trace=p.trace_rounds)
     _, _, _, _, res_id, res_key, io, t0, hops, saved, t = state
     return DeviceSearchResult(res_id[:, : p.k], res_key[:, : p.k], io,
-                              hops, t0, saved, t)
+                              hops, t0, saved, t, rlog)
 
 
 # --------------------------------------------- production mesh search step
@@ -824,11 +878,14 @@ def device_range_search(ds: DeviceSegment, queries: jnp.ndarray,
                  _open_keys(cand_id, cand_key, visited), visited,
                  r_id, r_key, io, t0, hops, saved,
                  jnp.zeros((), jnp.int32))
-        state = _block_search_loop(
+        # trace stays off here: RS re-enters the loop per round, so a
+        # stitched multi-round log has no single ``rounds`` to fold
+        # against — the ANNS path is the traced one
+        state, _ = _block_search_loop(
             ds, queries, lut, state, res_size=res_size, candidates=c,
             sigma=p.sigma, max_hops=p.max_hops, metric=metric,
             fetch_width=fw, fetch_impl=p.fetch_impl,
-            compact_frac=p.compact_frac)
+            compact_frac=p.compact_frac, trace=False)
         (_, _, _, visited, res_id, res_key, io, t0, hops, saved,
          t) = state
         total_rounds = total_rounds + t

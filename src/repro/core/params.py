@@ -263,6 +263,11 @@ class DeviceSearchParams:
     compact_frac: float = 0.0     # repack live queries to the front when
     #                               the active fraction falls below this
     #                               (0 = never compact)
+    trace_rounds: bool = False    # carry the per-round trace buffer
+    #                               (repro.obs.roundlog) through the loop
+    #                               and return it on the result; (ids,
+    #                               dists) and every counter are
+    #                               bit-identical on or off
 
     def __post_init__(self):
         if self.k < 1 or self.candidates < self.k:

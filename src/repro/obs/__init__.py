@@ -1,0 +1,33 @@
+"""repro.obs — the observability plane (DESIGN.md §6).
+
+Three layers over the search/serving stack:
+
+  * round-granular device tracing (``roundlog`` +
+    ``DeviceSearchParams.trace_rounds``) — exact per-round records of
+    the batched while-loop, a lossless refinement of ``IOStats``;
+  * host span/event tracing (``trace``, injectable ``clock``) and the
+    serving ``metrics`` registry the coordinator/stores report through;
+  * ``export`` (Chrome-trace-event / Perfetto JSON) and ``calibrate``
+    (measured-vs-modeled ``CostModel`` fitting into stored presets).
+"""
+from repro.obs.calibrate import (CalibrationPreset, CalibrationSample,
+                                 calibrate, fit_cost_model)
+from repro.obs.clock import ManualClock, WallClock
+from repro.obs.export import (chrome_trace, timeline_from_round_log,
+                              validate_chrome_trace, write_chrome_trace)
+from repro.obs.metrics import (Counter, Gauge, Histogram,
+                               MetricsRegistry)
+from repro.obs.roundlog import (N_ROUND_COLS, ROUND_LOG_COLS,
+                                RoundRecord, fold_round_log,
+                                round_log_totals)
+from repro.obs.trace import TraceEvent, Tracer, manual_tracer
+
+__all__ = [
+    "CalibrationPreset", "CalibrationSample", "calibrate",
+    "fit_cost_model", "ManualClock", "WallClock", "chrome_trace",
+    "timeline_from_round_log", "validate_chrome_trace",
+    "write_chrome_trace", "Counter", "Gauge", "Histogram",
+    "MetricsRegistry", "N_ROUND_COLS", "ROUND_LOG_COLS", "RoundRecord",
+    "fold_round_log", "round_log_totals", "TraceEvent", "Tracer",
+    "manual_tracer",
+]

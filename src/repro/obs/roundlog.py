@@ -1,0 +1,84 @@
+"""Per-round device search records (ROADMAP adaptive-plane v2, item 3).
+
+``DeviceSearchParams.trace_rounds`` makes the batched while-loop in
+``repro.core.device_search`` carry a bounded ``[max_hops, 5] int32``
+buffer; row ``t`` is written once per round, *before* compaction
+permutes the query rows, so every column is a batch-level sum or flag
+that is permutation-invariant by construction:
+
+  == ======================= ==========================================
+  col name                    per-round meaning
+  == ======================= ==========================================
+  0  ``live``                 queries still active this round
+  1  ``cold``                 cold block DMAs issued (post-dedup)
+  2  ``tier0``                tier-0 VMEM hot-tile hits
+  3  ``joins``                cross-query dedup joins (gathers saved)
+  4  ``compacted``            1 if active-query compaction fired
+  == ======================= ==========================================
+
+The fold invariants (asserted in tests/test_trace_roundlog.py) tie the
+log exactly to the coarse ``IOStats`` totals the serving plane already
+accounts with: ``sum(live) == hops``, ``sum(cold) == io``,
+``sum(tier0) == tier0_hits``, ``sum(joins) == dedup_saved``, and
+``sum(live) / rounds == rounds_active_weight / batch_rounds`` — the
+round log is a lossless refinement of ``IOStats.from_device_batch``,
+not a second bookkeeping system that can drift from it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+ROUND_LOG_COLS = ("live", "cold", "tier0", "joins", "compacted")
+N_ROUND_COLS = len(ROUND_LOG_COLS)
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundRecord:
+    """One lockstep round of a batched device search."""
+    round: int
+    live: int        # queries active this round
+    cold: int        # cold block DMAs issued (post-dedup)
+    tier0: int       # tier-0 hot-tile hits
+    joins: int       # cross-query dedup joins
+    compacted: bool  # active-query compaction fired this round
+
+
+def fold_round_log(round_log, rounds: int) -> List[RoundRecord]:
+    """Materialize the device buffer into exact per-round records.
+
+    ``round_log`` is the ``[max_hops, 5]`` array off the device (any
+    array-like); ``rounds`` is the loop's final trip count — rows at or
+    beyond it are unwritten padding and are dropped."""
+    log = np.asarray(round_log)
+    if log.ndim != 2 or log.shape[1] != N_ROUND_COLS:
+        raise ValueError(
+            f"round_log must be [rounds, {N_ROUND_COLS}], got {log.shape}")
+    rounds = int(rounds)
+    out = []
+    for t in range(min(rounds, log.shape[0])):
+        live, cold, tier0, joins, compacted = (int(v) for v in log[t])
+        out.append(RoundRecord(round=t, live=live, cold=cold, tier0=tier0,
+                               joins=joins, compacted=bool(compacted)))
+    return out
+
+
+def round_log_totals(records: Sequence[RoundRecord]) -> Dict[str, float]:
+    """Sum a folded log back down to the ``IOStats``-comparable totals.
+
+    Matches ``IOStats.from_device_batch`` exactly: ``hops`` = total
+    query-rounds of liveness, ``io``/``tier0_hits``/``dedup_saved`` =
+    column sums, ``rounds`` = record count, ``rounds_active_weight`` =
+    mean live fraction numerator (sum of live, to be divided by the
+    batch width by the caller that knows it)."""
+    return {
+        "rounds": len(records),
+        "hops": sum(r.live for r in records),
+        "io": sum(r.cold for r in records),
+        "tier0_hits": sum(r.tier0 for r in records),
+        "dedup_saved": sum(r.joins for r in records),
+        "compactions": sum(1 for r in records if r.compacted),
+        "live_weight": sum(r.live for r in records),
+    }

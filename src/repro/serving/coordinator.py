@@ -88,6 +88,10 @@ class SegmentServer:
         self.last_hops = np.asarray(r.hops)
         self.last_dedup_saved = np.asarray(r.dedup_saved)
         self.last_rounds = int(r.rounds)
+        # per-round trace buffer (params.trace_rounds; repro.obs) —
+        # None when tracing is off
+        self.last_round_log = (np.asarray(r.round_log)
+                               if r.round_log is not None else None)
         return np.asarray(r.ids), np.asarray(r.dists), np.asarray(r.io)
 
     def repack(self, observed, plan=None) -> int:
@@ -122,6 +126,7 @@ class HostSegmentServer:
     offset: int                   # base of this segment's id space
     num_vectors: int
     k_default: int = 10
+    tracer: Optional[object] = None  # repro.obs.trace.Tracer (optional)
 
     @classmethod
     def from_segment(cls, seg, offset: int) -> "HostSegmentServer":
@@ -130,6 +135,18 @@ class HostSegmentServer:
 
     def search(self, queries: np.ndarray, k: Optional[int] = None
                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        if self.tracer is not None:
+            with self.tracer.span("host.search", cat="serve",
+                                  track=f"seg{self.offset}",
+                                  n_queries=int(queries.shape[0]),
+                                  k=int(k or self.k_default)) as sp:
+                ids, dists, io = self._search(queries, k)
+                sp["block_reads"] = int(io.sum())
+            return ids, dists, io
+        return self._search(queries, k)
+
+    def _search(self, queries: np.ndarray, k: Optional[int]
+                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         ids, dists, stats = anns(self.view, queries,
                                  k or self.k_default, self.params)
         self.last_stats = stats
@@ -138,10 +155,14 @@ class HostSegmentServer:
 
     def cache_stats(self) -> Dict[str, float]:
         """Lifetime cache counters of the shared store (empty if
-        uncached)."""
+        uncached). When the store carries a metrics registry
+        (``CachedBlockStore.attach_obs``), the same counters are
+        republished through it first, so this dict is a view of what
+        the registry reports."""
         store = self.view.store
         if not isinstance(store, CachedBlockStore):
             return {}
+        store.publish_metrics()
         t = store.total
         return {"cache_hits": t.cache_hits,
                 "tier2_hits": t.tier2_hits,
@@ -204,55 +225,107 @@ class QueryCoordinator:
 
     def __init__(self, servers: List[SegmentServer],
                  prune_fn: Optional[Callable] = None,
-                 scheduler=None):
+                 scheduler=None, tracer=None, metrics=None):
         self.servers = servers
         self.prune_fn = prune_fn          # (queries) -> segment indices
         self.scheduler = scheduler
+        self.tracer = tracer              # repro.obs: coord.batch /
+        #                                   coord.segment spans
+        self.metrics = metrics            # repro.obs.MetricsRegistry the
+        #                                   stats dict is re-expressed
+        #                                   through (same keys, same
+        #                                   values — snapshot() is the
+        #                                   dashboard view of it)
         self._cache_seen: Dict[int, Tuple[int, int]] = {}  # per-server
         #   (hits, misses) lifetime watermark for per-call delta reporting
-        if scheduler is not None:
-            for s in servers:
-                if getattr(s, "host", None) is not None and \
-                        getattr(s, "segment", None) is not None:
-                    scheduler.attach_target(s)
-                view = getattr(s, "view", None)
-                if view is not None and isinstance(view.store,
-                                                   CachedBlockStore):
+        for s in servers:
+            if scheduler is not None and \
+                    getattr(s, "host", None) is not None and \
+                    getattr(s, "segment", None) is not None:
+                scheduler.attach_target(s)
+            view = getattr(s, "view", None)
+            if view is not None and isinstance(view.store,
+                                               CachedBlockStore):
+                if scheduler is not None:
                     scheduler.attach_feed(view.store)
+                # wire the store (and its fetch queue) into the same
+                # observability plane the coordinator reports through
+                if tracer is not None or metrics is not None:
+                    view.store.attach_obs(tracer, metrics,
+                                          target=f"seg{s.offset}")
+            if tracer is not None and hasattr(s, "tracer") and \
+                    getattr(s, "tracer", None) is None:
+                s.tracer = tracer
+        if scheduler is not None and tracer is not None and \
+                getattr(scheduler, "tracer", None) is None:
+            scheduler.tracer = tracer
+
+    # every search() stats dict carries ALL of these keys, zeros
+    # included — downstream consumers (dashboards, the obs bench) must
+    # never KeyError on a cold batch. "repack" additionally appears on
+    # batches where the scheduler evaluated.
+    STATS_SCHEMA = ("segments_searched", "total_block_reads",
+                    "mean_block_reads_per_query", "total_tier0_hits",
+                    "total_dedup_saved", "deduped_block_reads",
+                    "cache_hits", "cache_misses", "cache_hit_rate")
 
     def search(self, queries: np.ndarray, k: int = 10
                ) -> Tuple[np.ndarray, np.ndarray, Dict]:
+        if self.tracer is not None:
+            with self.tracer.span("coord.batch", cat="serve",
+                                  track="coord",
+                                  n_queries=int(queries.shape[0]),
+                                  k=int(k)) as sp:
+                gi, gd, stats = self._search(queries, k)
+                sp["block_reads"] = stats["total_block_reads"]
+                sp["segments"] = stats["segments_searched"]
+            return gi, gd, stats
+        return self._search(queries, k)
+
+    def _search(self, queries: np.ndarray, k: int
+                ) -> Tuple[np.ndarray, np.ndarray, Dict]:
         targets = (self.prune_fn(queries) if self.prune_fn
                    else list(range(len(self.servers))))
         ids, dists, offs = [], [], []
         total_io, total_t0, total_saved = 0, 0, 0
         for si in targets:
             s = self.servers[si]
-            i, d, io = s.search(queries, k)
+            if self.tracer is not None:
+                with self.tracer.span("coord.segment", cat="serve",
+                                      track="coord",
+                                      target=f"seg{s.offset}") as sp:
+                    i, d, io = s.search(queries, k)
+                    sp["block_reads"] = int(io.sum())
+            else:
+                i, d, io = s.search(queries, k)
             ids.append(i)
             dists.append(d)
             offs.append(s.offset)
-            total_io += int(io.sum())
+            seg_io = int(io.sum())
+            total_io += seg_io
             t0 = getattr(s, "last_tier0_hits", None)
             if t0 is not None:
                 total_t0 += int(t0.sum())
             sv = getattr(s, "last_dedup_saved", None)
             if sv is not None:
                 total_saved += int(sv.sum())
+            if self.metrics is not None:
+                # per-target attribution: which segment the reads hit
+                self.metrics.counter("serve.block_reads",
+                                     f"seg{s.offset}").inc(seg_io)
         gi, gd = merge_topk(ids, dists, offs, k)
         stats = {"segments_searched": len(targets),
                  "total_block_reads": total_io,
                  "mean_block_reads_per_query":
-                     total_io / max(queries.shape[0], 1)}
-        if total_t0:
-            # device tier-0: block touches the VMEM hot-tile pack
-            # absorbed (they are not in total_block_reads)
-            stats["total_tier0_hits"] = total_t0
-        if total_saved:
-            # cross-query dedup: cold touches that rode another query's
-            # same-round gather — the DMAs the device actually issued
-            stats["total_dedup_saved"] = total_saved
-            stats["deduped_block_reads"] = total_io - total_saved
+                     total_io / max(queries.shape[0], 1),
+                 # device tier-0: block touches the VMEM hot-tile pack
+                 # absorbed (they are not in total_block_reads)
+                 "total_tier0_hits": total_t0,
+                 # cross-query dedup: cold touches that rode another
+                 # query's same-round gather — deduped_block_reads is
+                 # what the device actually issued
+                 "total_dedup_saved": total_saved,
+                 "deduped_block_reads": total_io - total_saved}
         # repro.io: aggregate shared-cache counters from servers that
         # expose them, as deltas so every key in the dict is per-call
         # (the cache itself stays warm across calls — only the
@@ -267,10 +340,12 @@ class QueryCoordinator:
             self._cache_seen[si] = now
             hits += now[0] - before[0]
             misses += now[1] - before[1]
-        if hits or misses:
-            stats["cache_hits"] = hits
-            stats["cache_misses"] = misses
-            stats["cache_hit_rate"] = hits / (hits + misses)
+        stats["cache_hits"] = hits
+        stats["cache_misses"] = misses
+        stats["cache_hit_rate"] = (hits / (hits + misses)
+                                   if hits or misses else 0.0)
+        if self.metrics is not None:
+            self._publish_metrics(queries.shape[0], stats)
         # adaptive serving plane: fold this batch's device columns into
         # the scheduler window and let it evaluate on its own cadence.
         # The repack (if any) lands AFTER this batch returned, so a
@@ -285,4 +360,30 @@ class QueryCoordinator:
                     "max_drift": decision.max_drift,
                     "tier0_hit_rate": decision.tier0_hit_rate,
                     "modeled_step_us": decision.modeled_step_us}
+                if self.metrics is not None:
+                    self.metrics.counter("sched.evals").inc()
+                    self.metrics.counter("sched.repacks").inc(
+                        decision.repacked)
         return gi, gd, stats
+
+    def _publish_metrics(self, n_queries: int, stats: Dict) -> None:
+        """Re-express the batch stats through the metrics registry —
+        the same numbers the stats dict returns, under ``serve.*``
+        names, so a dashboard scraping ``metrics.snapshot()`` and a
+        caller reading the dict can never disagree."""
+        m = self.metrics
+        m.counter("serve.batches").inc()
+        m.counter("serve.queries").inc(n_queries)
+        m.counter("serve.total_block_reads").inc(
+            stats["total_block_reads"])
+        m.counter("serve.total_tier0_hits").inc(
+            stats["total_tier0_hits"])
+        m.counter("serve.total_dedup_saved").inc(
+            stats["total_dedup_saved"])
+        m.counter("serve.cache_hits").inc(stats["cache_hits"])
+        m.counter("serve.cache_misses").inc(stats["cache_misses"])
+        m.gauge("serve.cache_hit_rate").set(stats["cache_hit_rate"])
+        m.histogram("serve.batch_block_reads").observe(
+            stats["total_block_reads"])
+        m.histogram("serve.batch_mean_reads_per_query").observe(
+            stats["mean_block_reads_per_query"])

@@ -85,9 +85,12 @@ class RepackScheduler:
     """
 
     def __init__(self, params: RepackParams = RepackParams(),
-                 cost_model: CostModel = TPU_HBM_SEGMENT):
+                 cost_model: CostModel = TPU_HBM_SEGMENT,
+                 tracer=None):
         self.params = params
         self.cost_model = cost_model
+        self.tracer = tracer            # repro.obs: sched.eval /
+        #                                 sched.repack events, None-guarded
         self._feeds: List[CachedBlockStore] = []
         self._marks: List[Counter] = []     # per-feed freq watermarks
         self._targets: List = []            # SegmentServers with .host
@@ -237,8 +240,15 @@ class RepackScheduler:
             own_rate = self._hit_rate(self._server_stats.get(id(server)))
             if drift < p.hysteresis or own_rate >= p.hit_rate_ceiling:
                 continue                    # no-op repack: free by design
-            changed += server.repack(obs, plan=plan)
+            moved = server.repack(obs, plan=plan)
+            changed += moved
             repacked += 1
+            if self.tracer is not None:
+                self.tracer.event(
+                    "sched.repack", cat="sched", track="sched",
+                    target=str(getattr(server, "offset", i)),
+                    changed_slots=moved, drift=drift,
+                    tier0_hit_rate=own_rate)
             # the repacked target's telemetry restarts; siblings keep
             # their window counters
             self._server_stats.pop(id(server), None)
@@ -260,6 +270,12 @@ class RepackScheduler:
             evaluated=evaluated, repacked=repacked, changed_slots=changed,
             max_drift=max_drift, tier0_hit_rate=hit_rate,
             modeled_step_us=step_us, observed_blocks=len(union))
+        if self.tracer is not None:
+            self.tracer.event(
+                "sched.eval", cat="sched", track="sched",
+                evaluated=evaluated, repacked=repacked,
+                changed_slots=changed, max_drift=max_drift,
+                tier0_hit_rate=hit_rate, modeled_step_us=step_us)
         return self.last_decision
 
     def stats(self) -> Dict[str, float]:

@@ -1,0 +1,379 @@
+"""Unit tests for the observability plane (repro.obs, DESIGN.md §6):
+clocks, tracer, metrics registry, Chrome-trace export, perf artifacts,
+and the measured-vs-modeled cost calibration. All fast — no segment
+builds, no jax; the device round-log integration lives in
+tests/test_trace_roundlog.py."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.iostats import IOStats, NVME_SEGMENT, TPU_HBM_SEGMENT
+from repro.obs import (CalibrationPreset, CalibrationSample, Counter,
+                       Gauge, Histogram, ManualClock, MetricsRegistry,
+                       RoundRecord, Tracer, WallClock, calibrate,
+                       chrome_trace, fit_cost_model, fold_round_log,
+                       manual_tracer, round_log_totals,
+                       timeline_from_round_log, validate_chrome_trace,
+                       write_chrome_trace)
+
+
+# ------------------------------------------------------------------ clocks
+def test_wall_clock_monotone():
+    c = WallClock()
+    ts = [c.now_us() for _ in range(100)]
+    assert all(b >= a for a, b in zip(ts, ts[1:]))
+
+
+def test_manual_clock_advance_and_set():
+    c = ManualClock(start_us=10.0)
+    assert c.now_us() == 10.0
+    c.advance(5.0)
+    assert c.now_us() == 15.0
+    c.set(100.0)
+    assert c.now_us() == 100.0
+    with pytest.raises(ValueError):
+        c.advance(-1.0)
+    with pytest.raises(ValueError):
+        c.set(0.0)                        # clocks only move forward
+
+
+def test_manual_clock_auto_tick():
+    c = ManualClock(auto_tick_us=2.0)
+    assert (c.now_us(), c.now_us(), c.now_us()) == (0.0, 2.0, 4.0)
+
+
+# ------------------------------------------------------------------ tracer
+def test_tracer_span_records_duration_and_outcome_args():
+    tr = Tracer(clock=ManualClock())
+    with tr.span("host.search", cat="serve", track="seg0", k=10) as sp:
+        tr.clock.advance(7.0)
+        sp["block_reads"] = 42
+    (ev,) = tr.events
+    assert ev.name == "host.search" and ev.ph == "X"
+    assert ev.ts_us == 0.0 and ev.dur_us == 7.0
+    assert ev.args == {"k": 10, "block_reads": 42}
+    assert ev.track == "seg0"
+
+
+def test_tracer_span_records_on_exception():
+    tr = Tracer(clock=ManualClock())
+    with pytest.raises(RuntimeError):
+        with tr.span("coord.batch"):
+            tr.clock.advance(3.0)
+            raise RuntimeError("boom")
+    assert len(tr) == 1 and tr.events[0].dur_us == 3.0
+
+
+def test_tracer_event_and_slice():
+    tr = manual_tracer(auto_tick_us=1.0)
+    tr.event("sched.repack", cat="sched", target="seg0")
+    tr.slice("device.round", ts_us=100.0, dur_us=5.0, live=8)
+    inst, sl = tr.events
+    assert inst.ph == "i" and inst.args == {"target": "seg0"}
+    assert sl.ph == "X" and sl.ts_us == 100.0 and sl.dur_us == 5.0
+
+
+def test_tracer_head_capture_drops_past_max_events():
+    tr = Tracer(clock=ManualClock(auto_tick_us=1.0), max_events=3)
+    for i in range(10):
+        tr.event("e", i=i)
+    assert len(tr) == 3 and tr.dropped == 7
+    assert [e.args["i"] for e in tr.events] == [0, 1, 2]  # head, not ring
+    tr.clear()
+    assert len(tr) == 0 and tr.dropped == 0
+
+
+def test_tracer_by_name():
+    tr = manual_tracer()
+    tr.event("a")
+    tr.event("b")
+    tr.event("a")
+    assert len(tr.by_name("a")) == 2 and len(tr.by_name("c")) == 0
+
+
+# ----------------------------------------------------------------- metrics
+def test_counter_monotone():
+    c = Counter()
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+
+
+def test_histogram_window_quantiles():
+    h = Histogram(window=4)
+    for v in (1.0, 2.0, 3.0, 4.0, 100.0):  # 1.0 fell out of the window
+        h.observe(v)
+    assert h.count == 5 and h.total == 110.0
+    assert h.quantile(0.0) == 2.0
+    assert h.quantile(0.99) == 100.0
+    s = h.summary()
+    assert s["count"] == 5 and s["window"] == 4
+    assert s["mean"] == 22.0 and s["max"] == 100.0
+    assert s["p50"] == 4.0                 # nearest-rank over [2,3,4,100]
+    assert Histogram().quantile(0.5) == 0.0
+
+
+def test_registry_create_on_first_use_and_per_target():
+    m = MetricsRegistry()
+    m.counter("serve.block_reads", "seg0").inc(10)
+    m.counter("serve.block_reads", "seg1").inc(20)
+    m.gauge("serve.cache_hit_rate").set(0.5)
+    m.histogram("serve.batch_block_reads").observe(30)
+    assert m.value("serve.block_reads", "seg0") == 10
+    assert m.value("serve.block_reads", "seg1") == 20
+    assert m.value("nope") is None
+    assert m.targets("serve.block_reads") == ["seg0", "seg1"]
+    snap = m.snapshot()
+    assert snap["serve.block_reads"] == {"seg0": 10, "seg1": 20}
+    assert snap["serve.cache_hit_rate"][""] == 0.5
+    assert snap["serve.batch_block_reads"][""]["count"] == 1
+
+
+def test_registry_kind_mismatch_raises():
+    m = MetricsRegistry()
+    m.counter("serve.batches")
+    with pytest.raises(TypeError):
+        m.gauge("serve.batches")
+    with pytest.raises(TypeError):
+        m.histogram("serve.batches")
+    # same name under a DIFFERENT target is a separate instrument
+    assert isinstance(m.gauge("serve.batches", "segX"), Gauge)
+
+
+# ------------------------------------------------------------------ export
+def _demo_tracer():
+    tr = Tracer(clock=ManualClock(auto_tick_us=1.0))
+    with tr.span("coord.batch", track="coord", n_queries=8):
+        tr.event("io.read", cat="io", track="io", block=3)
+    return tr
+
+
+def test_chrome_trace_structure():
+    tr = _demo_tracer()
+    obj = chrome_trace(tr, metadata={"run": "t"})
+    assert validate_chrome_trace(obj) == []
+    evs = obj["traceEvents"]
+    metas = [e for e in evs if e["ph"] == "M"]
+    assert {m["args"]["name"] for m in metas} == {"coord", "io"}
+    tids = {m["args"]["name"]: m["tid"] for m in metas}
+    x = next(e for e in evs if e["ph"] == "X")
+    i = next(e for e in evs if e["ph"] == "i")
+    assert x["tid"] == tids["coord"] and i["tid"] == tids["io"]
+    assert x["dur"] >= 0 and i["s"] == "t"
+    assert obj["metadata"] == {"run": "t"}
+
+
+def test_chrome_trace_reports_dropped():
+    tr = Tracer(clock=ManualClock(auto_tick_us=1.0), max_events=1)
+    tr.event("a")
+    tr.event("b")
+    assert chrome_trace(tr)["obs_dropped_events"] == 1
+
+
+def test_write_chrome_trace_round_trip(tmp_path):
+    path = tmp_path / "deep" / "trace.json"   # parent dir is created
+    write_chrome_trace(path, _demo_tracer())
+    with open(path) as f:
+        assert validate_chrome_trace(json.load(f)) == []
+
+
+def test_validate_chrome_trace_catches_corruption():
+    assert validate_chrome_trace([]) != []
+    assert validate_chrome_trace({"traceEvents": 3}) != []
+    bad = {"traceEvents": [
+        {"ph": "Q", "name": "x", "pid": 1, "tid": 1},          # bad ph
+        {"ph": "X", "pid": 1, "tid": 1, "ts": 0, "dur": 1},    # no name
+        {"ph": "X", "name": "x", "pid": 1, "tid": 1, "ts": 0,
+         "dur": -1},                                           # bad dur
+        {"ph": "i", "name": "x", "pid": 1, "tid": 1, "ts": "a"}]}
+    assert len(validate_chrome_trace(bad)) == 4
+
+
+def test_timeline_from_round_log_modeled_durations():
+    records = [RoundRecord(0, live=8, cold=10, tier0=2, joins=3,
+                           compacted=False),
+               RoundRecord(1, live=4, cold=6, tier0=1, joins=1,
+                           compacted=True)]
+    cm = TPU_HBM_SEGMENT
+    tr = timeline_from_round_log(records, cm)
+    a, b = tr.by_name("device.round")
+    t_stream = cm.t_batch_block if cm.t_batch_block else cm.t_block_io
+    want0 = (cm.t_round + 8 * cm.t_round_comp + 7 * t_stream
+             + 2 * cm.t_tier0_hit + 3 * cm.t_dedup_hit)
+    assert a.ts_us == 0.0 and a.dur_us == pytest.approx(want0)
+    assert b.ts_us == pytest.approx(a.dur_us)   # back-to-back slices
+    assert a.args["live"] == 8 and b.args["compacted"] is True
+    assert validate_chrome_trace(chrome_trace(tr)) == []
+
+
+# ---------------------------------------------------------- round-log fold
+def test_fold_round_log_drops_padding_and_validates_shape():
+    log = np.zeros((6, 5), np.int32)
+    log[0] = [8, 10, 2, 3, 0]
+    log[1] = [4, 6, 1, 1, 1]
+    recs = fold_round_log(log, rounds=2)
+    assert len(recs) == 2
+    assert recs[1] == RoundRecord(1, 4, 6, 1, 1, True)
+    tot = round_log_totals(recs)
+    assert tot == {"rounds": 2, "hops": 12, "io": 16, "tier0_hits": 3,
+                   "dedup_saved": 4, "compactions": 1, "live_weight": 12}
+    with pytest.raises(ValueError):
+        fold_round_log(np.zeros((6, 4), np.int32), 2)
+
+
+# ----------------------------------------------------------- perf artifact
+def test_perf_artifact_schema_round_trip(tmp_path, monkeypatch):
+    from benchmarks import common as C
+    monkeypatch.setattr(C, "ARTIFACT_DIR", str(tmp_path))
+    path = C.perf_artifact(
+        "t_bench", [{"name": "lat", "value": 1.5, "units": "us"},
+                    {"name": "hits", "value": 3, "units": "blocks",
+                     "measured": True}],
+        config={"n": 10}, measured=False)
+    with open(path) as f:
+        payload = json.load(f)
+    assert C.validate_perf_artifact(payload) == []
+    assert payload["bench"] == "t_bench"
+    assert payload["config_hash"] == C.config_hash({"n": 10})
+    assert payload["metrics"][0]["measured"] is False
+    assert payload["metrics"][1]["measured"] is True   # per-row override
+
+
+def test_validate_perf_artifact_catches_problems():
+    from benchmarks import common as C
+    assert C.validate_perf_artifact({}) != []
+    bad = {"schema": C.ARTIFACT_SCHEMA, "bench": "b", "config": {},
+           "config_hash": "x", "measured": False,
+           "metrics": [{"name": "m", "value": "NaNstr", "units": "",
+                        "measured": False}]}
+    assert any("number" in p for p in C.validate_perf_artifact(bad))
+
+
+def test_config_hash_stable_and_order_independent():
+    from benchmarks import common as C
+    assert C.config_hash({"a": 1, "b": 2}) == C.config_hash({"b": 2,
+                                                             "a": 1})
+    assert C.config_hash({"a": 1}) != C.config_hash({"a": 2})
+
+
+# ------------------------------------------------------------- calibration
+def _device_stats(io, t0, hops, saved, rounds):
+    return IOStats.from_device(io, t0, hops, saved, rounds)
+
+
+def test_calibration_recovers_known_device_constants():
+    truth = dataclasses.replace(TPU_HBM_SEGMENT, t_batch_block=0.7,
+                                t_round=2.5, t_round_comp=0.3)
+    rng = [(40, 5, 30, 4, 12), (80, 9, 55, 10, 20), (25, 2, 18, 1, 9),
+           (60, 7, 44, 6, 16)]
+    samples = [CalibrationSample(_device_stats(*r),
+                                 truth.latency_us(_device_stats(*r)))
+               for r in rng]
+    fields = ("t_batch_block", "t_round", "t_round_comp")
+    model, report = fit_cost_model(TPU_HBM_SEGMENT, samples, fields)
+    for f in fields:
+        assert getattr(model, f) == pytest.approx(getattr(truth, f),
+                                                  abs=1e-6)
+    assert report["unfit"] == []
+    assert report["error_after"]["mean_abs_rel_err"] < 1e-9
+
+
+def test_calibration_reports_unidentifiable_fields():
+    # host-regime samples never exercise the round chain: t_round /
+    # t_round_comp columns are all-zero and must come back unfit with
+    # base values, never silently "fitted"
+    samples = [CalibrationSample(IOStats(block_reads=r, cache_misses=r,
+                                         hops=r), float(100 * r))
+               for r in (5, 11, 23)]
+    model, report = fit_cost_model(
+        NVME_SEGMENT, samples,
+        fields=("t_block_io", "t_round", "t_round_comp"))
+    assert set(report["unfit"]) == {"t_round", "t_round_comp"}
+    assert model.t_round == NVME_SEGMENT.t_round
+    assert "t_block_io" in report["fitted"]
+    assert model.t_block_io >= 0.0
+
+
+def test_calibration_clips_negative_constants_and_needs_samples():
+    with pytest.raises(ValueError):
+        fit_cost_model(NVME_SEGMENT, [])
+    s = [CalibrationSample(IOStats(block_reads=r, cache_misses=r),
+                           0.0)           # measured 0 → raw fit < base
+         for r in (3, 7)]
+    model, _ = fit_cost_model(NVME_SEGMENT, s, fields=("t_block_io",))
+    assert model.t_block_io >= 0.0
+
+
+def test_preset_save_load_apply(tmp_path):
+    truth = dataclasses.replace(TPU_HBM_SEGMENT, t_round=4.0)
+    stats = [_device_stats(40, 5, 30, 4, 12), _device_stats(70, 6, 50,
+                                                            8, 18)]
+    samples = [CalibrationSample(s, truth.latency_us(s)) for s in stats]
+    path = tmp_path / "preset.json"
+    model, preset, report = calibrate(
+        TPU_HBM_SEGMENT, samples, fields=("t_round",),
+        source="unit test", preset_path=str(path))
+    loaded = CalibrationPreset.load(path)
+    assert loaded == preset
+    applied = loaded.apply(TPU_HBM_SEGMENT)
+    assert applied.t_round == pytest.approx(4.0, abs=1e-6)
+    assert applied.t_block_io == TPU_HBM_SEGMENT.t_block_io  # untouched
+    with pytest.raises(ValueError):
+        loaded.apply(NVME_SEGMENT)         # backend mismatch
+
+
+# -------------------------------------------- coordinator stats/obs wiring
+class _FakeServer:
+    """Duck-typed device-less server: fixed results, zero traffic."""
+
+    def __init__(self, offset=0):
+        self.offset = offset
+
+    def search(self, queries, k):
+        n = queries.shape[0]
+        ids = np.tile(np.arange(k, dtype=np.int64), (n, 1))
+        dists = np.ones((n, k), np.float32)
+        return ids, dists, np.zeros(n, np.int64)
+
+
+def test_coordinator_stats_schema_complete_on_cold_batch():
+    """Every STATS_SCHEMA key is present with zeros included — a
+    downstream consumer must never KeyError on a batch that hit no
+    cache and saved no dedup (the PR 6 stats-shape fix)."""
+    from repro.serving import QueryCoordinator
+    coord = QueryCoordinator([_FakeServer()])
+    q = np.zeros((4, 8), np.float32)
+    _, _, stats = coord.search(q, k=3)
+    for key in QueryCoordinator.STATS_SCHEMA:
+        assert key in stats, f"stats dict missing {key!r}"
+    assert stats["total_tier0_hits"] == 0
+    assert stats["total_dedup_saved"] == 0
+    assert stats["deduped_block_reads"] == 0
+    assert stats["cache_hits"] == 0 and stats["cache_misses"] == 0
+    assert stats["cache_hit_rate"] == 0.0
+    assert stats["segments_searched"] == 1
+
+
+def test_coordinator_emits_spans_and_metrics():
+    from repro.serving import QueryCoordinator
+    tr = manual_tracer()
+    m = MetricsRegistry()
+    coord = QueryCoordinator([_FakeServer(0), _FakeServer(100)],
+                             tracer=tr, metrics=m)
+    q = np.zeros((4, 8), np.float32)
+    coord.search(q, k=3)
+    coord.search(q, k=3)
+    assert len(tr.by_name("coord.batch")) == 2
+    assert len(tr.by_name("coord.segment")) == 4   # 2 segments x 2
+    batch = tr.by_name("coord.batch")[0]
+    assert batch.args["n_queries"] == 4 and "block_reads" in batch.args
+    assert m.value("serve.batches") == 2
+    assert m.value("serve.queries") == 8
+    assert m.value("serve.block_reads", "seg0") == 0
+    assert m.snapshot()["serve.batch_block_reads"][""]["count"] == 2
+    # registry view and stats dict can never disagree
+    assert m.value("serve.total_block_reads") == 0

@@ -1,0 +1,136 @@
+"""Round-granular device search tracing (repro.obs.roundlog +
+``DeviceSearchParams.trace_rounds``).
+
+The two contracts this suite pins:
+
+  * **zero-cost invariance** — tracing is pure observation: with
+    ``trace_rounds`` on, ``(ids, dists)`` and every counter column are
+    bit-identical to the untraced run, under every combination of
+    compaction and fetch_impl;
+  * **lossless refinement** — the ``[rounds, 5]`` buffer folds exactly
+    to the ``IOStats`` totals the serving plane accounts with:
+    per-round ``live``/``cold``/``tier0``/``joins`` sums equal the
+    batch's hops/io/tier0_hits/dedup_saved, and the fold reproduces
+    ``IOStats.from_device_batch``'s ``rounds_active_weight``.
+
+Deterministic versions always run (slow — they build the session
+segment); the hypothesis property sweeps batch compositions with the
+pinned batch size so each example reuses one compiled executable.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import device_search as DS
+from repro.core.iostats import IOStats
+from repro.core.params import DeviceSearchParams
+from repro.obs import ROUND_LOG_COLS, fold_round_log, round_log_totals
+
+P = DeviceSearchParams(k=5, candidates=24, max_hops=48, fetch_width=2)
+
+
+@pytest.fixture(scope="module")
+def packed_seg(small_segment):
+    return DS.from_segment(small_segment, tier0_frac=0.1)
+
+
+def test_round_log_cols_pinned_to_device_search():
+    """The obs-side column schema and the loop's write order are the
+    same tuple — the import-free mirror in device_search cannot drift
+    from repro.obs.roundlog."""
+    assert DS._ROUND_LOG_COLS == ROUND_LOG_COLS
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("compact_frac", [0.0, 0.5])
+def test_trace_on_off_bit_identical(packed_seg, small_data,
+                                    compact_frac):
+    _, q = small_data
+    qb = jnp.asarray(q[:8])
+    p_off = dataclasses.replace(P, compact_frac=compact_frac)
+    p_on = dataclasses.replace(p_off, trace_rounds=True)
+    r_off = DS.device_anns(packed_seg, qb, p_off)
+    r_on = DS.device_anns(packed_seg, qb, p_on)
+    for f in ("ids", "dists", "io", "tier0_hits", "hops",
+              "dedup_saved"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(r_off, f)), np.asarray(getattr(r_on, f)),
+            err_msg=f"trace_rounds changed {f}")
+    assert int(r_off.rounds) == int(r_on.rounds)
+    assert r_off.round_log is None
+    assert r_on.round_log is not None
+    assert r_on.round_log.shape == (P.max_hops, len(ROUND_LOG_COLS))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("compact_frac", [0.0, 0.5])
+def test_round_log_folds_exactly_to_iostats(packed_seg, small_data,
+                                            compact_frac):
+    _, q = small_data
+    p = dataclasses.replace(P, compact_frac=compact_frac,
+                            trace_rounds=True)
+    r = DS.device_anns(packed_seg, jnp.asarray(q[:8]), p)
+    rounds = int(r.rounds)
+    records = fold_round_log(r.round_log, rounds)
+    tot = round_log_totals(records)
+    assert tot["rounds"] == rounds
+    assert tot["hops"] == int(np.asarray(r.hops).sum())
+    assert tot["io"] == int(np.asarray(r.io).sum())
+    assert tot["tier0_hits"] == int(np.asarray(r.tier0_hits).sum())
+    assert tot["dedup_saved"] == int(np.asarray(r.dedup_saved).sum())
+    # unwritten rows beyond the trip count stay zero padding
+    tail = np.asarray(r.round_log)[rounds:]
+    assert not tail.any()
+    # per-round live counts never exceed the batch width and only fall
+    live = np.array([rec.live for rec in records])
+    assert (live <= 8).all() and (np.diff(live) <= 0).all()
+    # the fold reproduces the coarse batch accounting exactly
+    batch = IOStats.from_device_batch(
+        np.asarray(r.io), np.asarray(r.tier0_hits), np.asarray(r.hops),
+        np.asarray(r.dedup_saved), rounds)
+    assert batch.batch_rounds == tot["rounds"]
+    assert batch.rounds_active_weight == pytest.approx(
+        tot["live_weight"] / max(rounds, 1))
+    # compaction flags only appear when compaction is enabled
+    if compact_frac == 0.0:
+        assert tot["compactions"] == 0
+
+
+# ----------------------------------------------------------- property form
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                       # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+BATCH = 8
+P_TRACE = dataclasses.replace(P, compact_frac=0.5, trace_rounds=True)
+P_PLAIN = dataclasses.replace(P_TRACE, trace_rounds=False)
+
+if HAVE_HYPOTHESIS:
+    @pytest.mark.slow
+    @given(rows=st.lists(st.integers(0, 23), min_size=BATCH,
+                         max_size=BATCH))
+    @settings(max_examples=6, deadline=None)
+    def test_trace_invariance_and_fold_property(rows, packed_seg,
+                                                small_data):
+        """ANY batch composition: tracing never perturbs results, and
+        the round log folds exactly to the counter totals."""
+        _, q = small_data
+        qb = jnp.asarray(q[np.asarray(rows)])
+        r0 = DS.device_anns(packed_seg, qb, P_PLAIN)
+        r1 = DS.device_anns(packed_seg, qb, P_TRACE)
+        np.testing.assert_array_equal(np.asarray(r0.ids),
+                                      np.asarray(r1.ids))
+        np.testing.assert_array_equal(np.asarray(r0.dists),
+                                      np.asarray(r1.dists))
+        tot = round_log_totals(fold_round_log(r1.round_log,
+                                              int(r1.rounds)))
+        assert tot["io"] == int(np.asarray(r1.io).sum())
+        assert tot["hops"] == int(np.asarray(r1.hops).sum())
+        assert tot["tier0_hits"] == int(np.asarray(r1.tier0_hits).sum())
+        assert tot["dedup_saved"] == int(
+            np.asarray(r1.dedup_saved).sum())
