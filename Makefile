@@ -2,8 +2,8 @@
 
 PY ?= python
 
-.PHONY: test test-fast test-device test-e2e test-obs bench bench-io \
-	bench-device bench-batch bench-obs dev-deps
+.PHONY: test test-fast test-device test-e2e test-obs test-mesh bench \
+	bench-io bench-device bench-batch bench-obs bench-mesh dev-deps
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -70,6 +70,23 @@ bench-obs:
 		--only obs_trace_smoke
 	BENCH_SMOKE=1 PYTHONPATH=src $(PY) -m benchmarks.run \
 		--only cost_calibration
+
+# the mesh-serving plane (ISSUE 7): shard_map fan-out router over a
+# forced 8-device host mesh — XLA_FLAGS must be set before jax
+# initializes, hence the dedicated lane. Asserts routed-vs-single-
+# target bit-identity, per-rank IOStats fold exactness, and the
+# rebalance fire/quiet behaviour; skips (rather than fails) on worlds
+# smaller than 8 devices
+test-mesh:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+		PYTHONPATH=src $(PY) -m pytest -x -q tests/test_router.py
+
+# modeled-vs-served per-rank step time on the same forced mesh
+# (results/BENCH_mesh_router.json, uploaded by the CI mesh lane)
+bench-mesh:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+		BENCH_SMOKE=1 PYTHONPATH=src $(PY) -m benchmarks.run \
+		--only mesh_router_bench
 
 dev-deps:
 	$(PY) -m pip install -r requirements-dev.txt

@@ -1,0 +1,152 @@
+"""Mesh router bench (ISSUE 7): modeled vs served step time per rank.
+
+Routes query batches through a ``MeshQueryRouter`` over 4 sharded
+segments on a forced multi-device host mesh
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8`` — the ``make
+bench-mesh`` lane) and emits ``results/BENCH_mesh_router.json``:
+
+  * per-rank ``modeled_step_us`` — the calibrated ``CostModel`` priced
+    from THE shared per-rank ``IOStats`` fold
+    (``IOStats.fold_rank_batches``, the same fold
+    ``mesh_qps_estimate`` and the ``RepackScheduler`` consume), plus
+    the slowest-rank gate the mesh step is paced by;
+  * ``served_step_us`` — wall-clock per routed batch on this host
+    (``measured: true`` rows; a CPU host mesh, so the absolute value
+    is NOT comparable to the modeled TPU figures — the artifact's
+    per-row ``measured`` flags keep the two regimes apart);
+  * the routed-vs-single-target bit-identity and fold-exactness
+    checks, asserted before anything is written — the artifact never
+    ships numbers from a step whose results or accounting are wrong.
+
+Skips gracefully (writes nothing, returns) on worlds smaller than 8
+devices or without a usable jax backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import perf_artifact, record
+
+SMOKE = bool(os.environ.get("BENCH_SMOKE"))
+N_SEG = 4
+N_PER_SEG = 400 if SMOKE else 1500
+N_QUERY = 16 if SMOKE else 64
+N_BATCH = 3 if SMOKE else 8
+DIM = 32
+
+
+def mesh_router_bench() -> None:
+    try:
+        import jax
+        world = jax.device_count()
+    except Exception:
+        print("[mesh_router] no jax backend; skipping", flush=True)
+        return
+    if world < 8:
+        print(f"[mesh_router] {world} devices < 8 — run under "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+              "(make bench-mesh); skipping", flush=True)
+        return
+
+    from repro.core import device_search as DS
+    from repro.core.iostats import IOStats, TPU_HBM_SEGMENT
+    from repro.core.segment import build_segment
+    from repro.core.params import (GraphParams, LayoutParams,
+                                   NavGraphParams, PQParams,
+                                   RouterParams, SegmentParams)
+    from repro.data.vectors import clustered_vectors, query_set
+    from repro.obs.calibrate import load_calibrated
+    from repro.serving import MeshQueryRouter, SegmentServer
+    from repro.serving.coordinator import SERVE_DEVICE_SEARCH, merge_topk
+
+    seg_params = SegmentParams(
+        graph=GraphParams(max_degree=16, build_beam=48),
+        layout=LayoutParams(block_kb=1.0, shuffle="bnf", bnf_iters=4),
+        pq=PQParams(num_subspaces=8, train_iters=6, train_sample=2048),
+        nav=NavGraphParams(sample_ratio=0.1, max_degree=8,
+                           build_beam=24))
+    sp = dataclasses.replace(SERVE_DEVICE_SEARCH, candidates=48,
+                             fetch_impl="jnp")
+    servers, xs, off = [], [], 0
+    for s in range(N_SEG):
+        x = clustered_vectors(N_PER_SEG, DIM, num_clusters=12,
+                              seed=40 + s)
+        seg = build_segment(x, seg_params)
+        servers.append(SegmentServer(
+            segment=DS.from_segment(seg, tier0_frac=0.1),
+            offset=off, num_vectors=x.shape[0], params=sp, host=seg))
+        xs.append(x)
+        off += x.shape[0]
+    q = query_set(np.concatenate(xs), N_QUERY, seed=9)
+
+    cm = load_calibrated(TPU_HBM_SEGMENT)
+    router = MeshQueryRouter(servers, params=RouterParams(),
+                             cost_model=cm)
+
+    # correctness gate: routed+merged == concatenated single-target
+    ri, rd, stats = router.route(q, k=10)
+    ids, dd, offs = [], [], []
+    for s in servers:
+        i, d, _ = s.search(q, 10)
+        ids.append(i)
+        dd.append(d)
+        offs.append(s.offset)
+    gi, gd = merge_topk(ids, dd, offs, 10)
+    assert np.array_equal(ri, gi) and np.array_equal(rd, gd), \
+        "routed result diverged from the single-target path"
+    assert IOStats.merge_ranks(stats["per_rank"]) == stats["total"], \
+        "per-rank fold does not merge to the router total"
+
+    served_us = np.zeros((N_BATCH, 1))
+    modeled = np.zeros((N_BATCH, router.world))
+    for b in range(N_BATCH):
+        t0 = time.perf_counter()
+        _, _, st = router.route(q, k=10)
+        served_us[b] = (time.perf_counter() - t0) * 1e6
+        modeled[b] = [st["per_rank_modeled_us"][r]
+                      for r in range(router.world)]
+
+    metrics = []
+    for r in range(router.world):
+        metrics.append({"name": f"rank{r}_modeled_step_us",
+                        "value": float(modeled[:, r].mean()),
+                        "units": "us", "measured": False})
+    metrics += [
+        {"name": "modeled_step_us_slowest_rank",
+         "value": float(modeled.max(axis=1).mean()), "units": "us",
+         "measured": False},
+        {"name": "served_step_us",
+         "value": float(served_us.mean()), "units": "us",
+         "measured": True},
+        {"name": "modeled_qps",
+         "value": float(N_QUERY / (modeled.max(axis=1).mean() / 1e6)),
+         "units": "qps", "measured": False},
+        {"name": "served_qps",
+         "value": float(N_QUERY / (served_us.mean() / 1e6)),
+         "units": "qps", "measured": True},
+        {"name": "total_block_reads",
+         "value": float(stats["total_block_reads"]), "units": "blocks",
+         "measured": False},
+        {"name": "rebalances", "value": float(router.rebalances),
+         "units": "count", "measured": False},
+    ]
+    record("mesh_router", ranks=router.world, segments=N_SEG,
+           n_query=N_QUERY,
+           modeled_step_us=float(modeled.max(axis=1).mean()),
+           served_step_us=float(served_us.mean()),
+           modeled_qps=float(N_QUERY / (modeled.max(axis=1).mean()
+                                        / 1e6)))
+    perf_artifact(
+        "mesh_router", metrics,
+        config={"ranks": router.world, "segments": N_SEG,
+                "n_per_seg": N_PER_SEG, "n_query": N_QUERY,
+                "n_batch": N_BATCH, "k": 10, "dim": DIM,
+                "cost_model": cm.name, "smoke": SMOKE})
+
+
+if __name__ == "__main__":
+    mesh_router_bench()

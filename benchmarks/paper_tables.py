@@ -269,11 +269,18 @@ def mesh_qps_estimate():
     and occupancy-weighted compute (``batch_rounds x
     rounds_active_weight x t_round_comp`` — a converged query's idle
     rounds are free). This is the SAME fold the serving
-    ``RepackScheduler`` uses as its objective, so the control loop and
-    the benchmark optimize one number. QPS = batch x data ranks /
-    max_rank(step time); the step time is asserted monotone in
-    ``rounds_active_weight`` in-bench (the acceptance invariant). All
-    latencies are modeled via TPU_HBM_SEGMENT (CPU container)."""
+    ``RepackScheduler`` uses as its objective — and, since the mesh
+    router landed, the SAME rank-keyed fold
+    (``IOStats.fold_rank_batches`` + ``merge_ranks``) the
+    ``MeshQueryRouter`` accounts a served step with, so the control
+    loop, the router and the benchmark optimize one number
+    (``benchmarks/mesh_bench.py`` pins modeled == served per rank).
+    QPS = batch x data ranks / max_rank(step time); the step time is
+    asserted monotone in ``rounds_active_weight`` in-bench (the
+    acceptance invariant). Pricing uses the TPU-HBM preset with any
+    calibrated ``results/CALIB_*.json`` constants applied
+    (``obs.calibrate.load_calibrated``); all latencies stay modeled on
+    this CPU container."""
     import dataclasses as dc
 
     import jax.numpy as jnp
@@ -282,25 +289,28 @@ def mesh_qps_estimate():
     from repro.core.iostats import IOStats
     from repro.core.segment import build_segment
     from repro.data.vectors import clustered_vectors, query_set
+    from repro.obs.calibrate import load_calibrated
 
-    cm = TPU_HBM_SEGMENT
+    cm = load_calibrated(TPU_HBM_SEGMENT)
     assert cm.t_round > 0 and cm.t_round_comp > 0, \
         "mesh QPS fold needs the round-granular terms"
     model_ranks, data_ranks, batch = 4, 16, 32
     xs = [clustered_vectors(1500, C.DIM, num_clusters=16, seed=20 + s)
           for s in range(model_ranks)]
     q = query_set(np.concatenate(xs), batch, seed=9)
-    step_us = []
+    rank_cols = {}
     for s, x in enumerate(xs):
         seg = build_segment(x, C.SEGMENT_BENCH)
         ds = DS.from_segment(seg, tier0_frac=0.1)
         r = DS.device_anns(ds, jnp.asarray(q), DEVICE_SEARCH_BATCH)
-        io = np.asarray(r.io)
-        sv = np.asarray(r.dedup_saved)
-        t0 = np.asarray(r.tier0_hits)
-        hops = np.asarray(r.hops)
-        rounds = int(r.rounds)
-        agg = IOStats.from_device_batch(io, t0, hops, sv, rounds)
+        rank_cols[s] = (np.asarray(r.io), np.asarray(r.tier0_hits),
+                        np.asarray(r.hops), np.asarray(r.dedup_saved),
+                        int(r.rounds))
+    per_rank = IOStats.fold_rank_batches(rank_cols)
+    step_us = []
+    for s in range(model_ranks):
+        agg = per_rank[s]
+        io, t0, hops, sv, rounds = rank_cols[s]
         t_rank = cm.latency_us(agg)
         # acceptance invariant: the round-granular step time is strictly
         # monotone in the occupancy (rounds_active_weight) — a batch
@@ -321,6 +331,12 @@ def mesh_qps_estimate():
                  t_round_chain_us=br["t_round_chain_us"],
                  t_round_comp_us=br["t_round_comp_us"],
                  t_io_us=br["t_io_us"], t_other_us=br["t_other_us"])
+    # the mesh total is DEFINED as the merge of the per-rank folds
+    # (rounds_active_weight is not additive across ranks) — the same
+    # identity the router's accounting tests pin
+    total = IOStats.merge_ranks(per_rank)
+    assert total.block_reads == sum(per_rank[s].block_reads
+                                    for s in per_rank)
     worst = max(step_us)
     qps = batch * data_ranks / (worst * 1e-6)
     C.record("mesh_qps", mesh=f"model{model_ranks}xdata{data_ranks}",

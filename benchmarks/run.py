@@ -14,8 +14,8 @@ import sys
 import time
 import traceback
 
-from benchmarks import (device_bench, io_bench, obs_bench, paper_tables,
-                        roofline_report)
+from benchmarks import (device_bench, io_bench, mesh_bench, obs_bench,
+                        paper_tables, roofline_report)
 
 BENCHES = [
     paper_tables.fig9_block_shuffling,
@@ -38,6 +38,7 @@ BENCHES = [
     io_bench.io_queue_depth_sweep,
     io_bench.io_tier2_budget_sweep,
     paper_tables.mesh_qps_estimate,
+    mesh_bench.mesh_router_bench,
     device_bench.device_vs_host,
     device_bench.device_tier0_budget_sweep,
     device_bench.device_batch_dedup_sweep,

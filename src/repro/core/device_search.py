@@ -708,6 +708,52 @@ def device_anns(ds: DeviceSegment, queries: jnp.ndarray,
 
 # --------------------------------------------- production mesh search step
 
+def merge_shard_topk(gids: jnp.ndarray, gd: jnp.ndarray,
+                     k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Merge stacked per-shard results on device: ``gids``/``gd``
+    [S, Q, kk] (global ids, -1 = invalid; dists, inf on invalid) ->
+    ([Q, k], [Q, k]) global top-k.
+
+    Ordering is (dist, global id) with invalid ids keyed past every
+    real id — the SAME total order the host ``serving.merge_topk``
+    sorts by, so a device-merged mesh fan-out and a host-merged concat
+    over the same shards are bit-identical, independent of shard
+    arrival order or placement (an argsort by position is NOT: moving
+    a segment to another rank would reorder equal-distance ties)."""
+    s, q, kk = gids.shape
+    flat_i = jnp.moveaxis(gids, 0, 1).reshape(q, s * kk)
+    flat_d = jnp.moveaxis(gd, 0, 1).reshape(q, s * kk)
+    flat_d = jnp.where(flat_i >= 0, flat_d, jnp.inf)
+    key_id = jnp.where(flat_i >= 0, flat_i,
+                       jnp.iinfo(flat_i.dtype).max)
+    # lexsort: last key is primary -> (dist, then id on ties)
+    order = jnp.lexsort((key_id, flat_d))[:, :k]
+    return (jnp.take_along_axis(flat_i, order, axis=1),
+            jnp.take_along_axis(flat_d, order, axis=1))
+
+
+def stack_segments(segments) -> DeviceSegment:
+    """Stack same-shape segment shards along a new leading axis — the
+    [W, ...] tree ``make_search_step``/the mesh router shard over the
+    ``model`` axis (one shard per rank; replicas are repeated
+    entries). All shards must agree on every array's shape and dtype
+    so a restack after a rebalance reuses the same compiled
+    executable (the mesh analogue of ``repack_tier0``'s same-shape
+    in-place swap)."""
+    if not segments:
+        raise ValueError("stack_segments needs at least one shard")
+    first = segments[0]
+    for idx, seg in enumerate(segments[1:], 1):
+        for f in dataclasses.fields(DeviceSegment):
+            a, b = getattr(first, f.name), getattr(seg, f.name)
+            if a.shape != b.shape or a.dtype != b.dtype:
+                raise ValueError(
+                    f"segment shard {idx} field {f.name!r} is "
+                    f"{b.shape}/{b.dtype}, shard 0 has "
+                    f"{a.shape}/{a.dtype} — mesh shards must be "
+                    "shape-identical (pad segments to a common size)")
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *segments)
+
 def make_search_step(mesh, rules, *,
                      n_local: int = 1 << 21, dim: int = 128,
                      eps: int = 16, lam: int = 31, q_global: int = 4096,
@@ -788,20 +834,17 @@ def make_search_step(mesh, rules, *,
         r = device_anns(seg, queries, search)
         ids, dists = r.ids, r.dists
         # hierarchical top-k merge over segment ranks: all-gather k
-        # results per rank (O(k) bytes cross-rank, not O(Gamma))
+        # results per rank (O(k) bytes cross-rank, not O(Gamma)),
+        # merged in the shared (dist, global id) order so the result
+        # is placement-invariant and bit-identical to the host
+        # ``serving.merge_topk`` concat over the same shards
         gids = jax.lax.all_gather(ids, "model")      # [S, Q, k]
         gd = jax.lax.all_gather(dists, "model")
-        s, q, kk = gids.shape
-        flat_d = jnp.moveaxis(gd, 0, 1).reshape(q, s * kk)
-        flat_i = jnp.moveaxis(gids, 0, 1).reshape(q, s * kk)
-        seg_of = jnp.repeat(jnp.arange(s, dtype=jnp.int32), kk)[None, :]
-        order = jnp.argsort(flat_d, axis=1)[:, :kk]
-        out_d = jnp.take_along_axis(flat_d, order, axis=1)
-        out_i = jnp.take_along_axis(flat_i, order, axis=1)
-        out_seg = jnp.take_along_axis(
-            jnp.broadcast_to(seg_of, flat_i.shape), order, axis=1)
+        s, _, kk = gids.shape
         # global id = segment rank * n_local + local id
-        gid = out_seg * n_local + out_i
+        seg_of = jnp.arange(s, dtype=jnp.int32)[:, None, None]
+        glob = jnp.where(gids >= 0, seg_of * n_local + gids, -1)
+        gid, out_d = merge_shard_topk(glob, gd, kk)
         col = jnp.ones((1, 1), jnp.int32)
         return (gid, out_d, r.io[:, None] * col, r.hops[:, None] * col,
                 r.tier0_hits[:, None] * col,

@@ -152,6 +152,32 @@ class IOStats:
             agg.merge(cls.from_device(i, t0, h, sv, rounds))
         return agg
 
+    @classmethod
+    def fold_rank_batches(cls, columns) -> "dict[int, IOStats]":
+        """Rank-keyed fold of a mesh-served step: ``columns[rank] =
+        (io, tier0_hits, hops, dedup_saved, rounds)`` — each rank's
+        per-query device columns, folded per rank with
+        ``from_device_batch``. This is THE shared mesh fold: the
+        router's windowed per-rank stats, the scheduler objective and
+        ``mesh_qps_estimate`` all price these same per-rank IOStats,
+        and ``merge_ranks`` defines the one correct total."""
+        return {int(r): cls.from_device_batch(*cols)
+                for r, cols in columns.items()}
+
+    @staticmethod
+    def merge_ranks(per_rank) -> "IOStats":
+        """Mesh totals from a rank-keyed fold: counters sum across
+        ranks, ``_MAX_FIELDS`` (incl. ``batch_rounds`` — the step is
+        gated by the slowest rank's chain) merge by max. NOTE
+        ``rounds_active_weight`` is a per-batch occupancy (Σ hops /
+        that rank's rounds); summing it across ranks with different
+        round counts is only meaningful through this merge — never
+        re-fold summed columns."""
+        total = IOStats()
+        for r in sorted(per_rank):
+            total.merge(per_rank[r])
+        return total
+
     @property
     def cache_hit_rate(self) -> float:
         """Fraction of demand reads served by any cache tier."""

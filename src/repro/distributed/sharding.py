@@ -49,6 +49,20 @@ MULTI_POD_RULES: AxisRules = dict(
     fsdp=("pod", "data"),
 )
 
+# Serving-plane placement rules (DESIGN.md §7): the leading ``segment``
+# axis of a stacked DeviceSegment tree shards one sub-segment (or
+# replica) per ``model`` rank — the Fig. 1(b) segments <-> ranks
+# layout ``make_search_step`` and the MeshQueryRouter fan out over —
+# while the ``query`` batch axis rides ``data`` and everything else
+# (block, vertex, neighbor dims) replicates within a rank's shard.
+SEGMENT_SERVE_RULES: AxisRules = {
+    "segment": ("model",),
+    "query": ("data",),
+    "block": (),
+    "vertex": (),
+    "dim": (),
+}
+
 _local = threading.local()
 
 

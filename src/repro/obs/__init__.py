@@ -11,7 +11,8 @@ Three layers over the search/serving stack:
     (measured-vs-modeled ``CostModel`` fitting into stored presets).
 """
 from repro.obs.calibrate import (CalibrationPreset, CalibrationSample,
-                                 calibrate, fit_cost_model)
+                                 calibrate, fit_cost_model,
+                                 load_calibrated)
 from repro.obs.clock import ManualClock, WallClock
 from repro.obs.export import (chrome_trace, timeline_from_round_log,
                               validate_chrome_trace, write_chrome_trace)
@@ -24,7 +25,8 @@ from repro.obs.trace import TraceEvent, Tracer, manual_tracer
 
 __all__ = [
     "CalibrationPreset", "CalibrationSample", "calibrate",
-    "fit_cost_model", "ManualClock", "WallClock", "chrome_trace",
+    "fit_cost_model", "load_calibrated", "ManualClock", "WallClock",
+    "chrome_trace",
     "timeline_from_round_log", "validate_chrome_trace",
     "write_chrome_trace", "Counter", "Gauge", "Histogram",
     "MetricsRegistry", "N_ROUND_COLS", "ROUND_LOG_COLS", "RoundRecord",

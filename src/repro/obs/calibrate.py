@@ -161,6 +161,31 @@ class CalibrationPreset:
                    source=source)
 
 
+def load_calibrated(base: CostModel, results_dir=None) -> CostModel:
+    """The shipped preset with any stored calibration applied on top.
+
+    Looks for ``results/CALIB_<base.name>.json`` (the file ``make
+    bench-obs`` fits and CI uploads) and overlays its fitted constants
+    via ``CalibrationPreset.apply``. Any way the preset cannot be
+    honored — file missing, unparseable, or fitted for a different
+    backend — falls back to ``base`` unchanged, so callers
+    (``RepackScheduler``, ``mesh_qps_estimate``, the router) can use
+    this as their default pricing unconditionally."""
+    import os
+    if results_dir is None:
+        # src/repro/obs/calibrate.py -> repo root / results
+        here = os.path.dirname(os.path.abspath(__file__))
+        results_dir = os.path.join(here, "..", "..", "..", "results")
+    path = os.path.join(results_dir, f"CALIB_{base.name}.json")
+    if not os.path.exists(path):
+        return base
+    try:
+        return CalibrationPreset.load(path).apply(base)
+    except (ValueError, KeyError, TypeError, json.JSONDecodeError,
+            OSError):
+        return base
+
+
 def calibrate(base: CostModel, samples: Sequence[CalibrationSample],
               fields: Sequence[str] = DEFAULT_FIELDS,
               source: str = "",

@@ -3,4 +3,6 @@ from repro.serving.coordinator import (HostSegmentServer, QueryCoordinator,
                                        attach_shared_fetch_queue,
                                        merge_topk)
 from repro.serving.batcher import RequestBatcher
+from repro.serving.router import MeshQueryRouter
 from repro.serving.scheduler import RepackDecision, RepackScheduler
+from repro.serving.target import SegmentTarget, is_target

@@ -21,6 +21,7 @@ from repro.core.params import DeviceSearchParams, SearchParams
 from repro.core.search import SegmentView, anns
 from repro.io.async_fetch import AsyncFetchQueue
 from repro.io.cached_store import CachedBlockStore
+from repro.serving import target as tgt
 
 # serving default: the divergence-aware batched preset (wide fetch +
 # cross-query dedup + active-query compaction) at the paper's Γ;
@@ -38,13 +39,22 @@ def merge_topk(ids: Sequence[np.ndarray], dists: Sequence[np.ndarray],
     """Merge per-segment results into global top-k.
 
     ids[i]/dists[i]: [Q, k_i] from segment i; offsets[i]: id-space base
-    of segment i. Invalid slots: id < 0 / dist inf."""
+    of segment i. Invalid slots: id < 0 / dist inf.
+
+    Ordering is (dist, global id) — ties broken by the smaller global
+    id, with invalid slots keyed past every real id. This matches the
+    device-side shard merge (``device_search.merge_shard_topk``)
+    exactly, so a host-merged and a device-merged fan-out over the
+    same shards return bit-identical ``(ids, dists)`` regardless of
+    segment arrival order or placement."""
     gids = np.concatenate(
         [np.where(i >= 0, i + off, -1) for i, off in zip(ids, offsets)],
-        axis=1)
+        axis=1).astype(np.int64)
     gd = np.concatenate(dists, axis=1)
     gd = np.where(gids >= 0, gd, np.inf)
-    order = np.argsort(gd, axis=1)[:, :k]
+    key_id = np.where(gids >= 0, gids, np.iinfo(np.int64).max)
+    # lexsort: last key is primary -> sort by dist, break ties by id
+    order = np.lexsort((key_id, gd), axis=1)[:, :k]
     return (np.take_along_axis(gids, order, axis=1),
             np.take_along_axis(gd, order, axis=1))
 
@@ -108,6 +118,20 @@ class SegmentServer:
         self.segment, changed = repack_tier0(self.segment, self.host,
                                              observed, plan=plan)
         return changed
+
+    # ------------------------------------- SegmentTarget capability hooks
+    def batch_stats(self) -> Dict[str, object]:
+        """Device columns of the last served batch (the exact
+        ``IOStats.from_device_batch`` inputs); {} before any batch."""
+        if getattr(self, "last_tier0_hits", None) is None:
+            return {}
+        return {"io": self.last_io, "tier0_hits": self.last_tier0_hits,
+                "hops": self.last_hops,
+                "dedup_saved": self.last_dedup_saved,
+                "rounds": self.last_rounds}
+
+    def repack_source(self):
+        return self.host
 
 
 @dataclasses.dataclass
@@ -175,6 +199,22 @@ class HostSegmentServer:
                 "completion_reorders": t.completion_reorders,
                 "hit_rate": t.cache_hit_rate}
 
+    # ------------------------------------- SegmentTarget capability hooks
+    def lifetime_stats(self) -> Dict[str, float]:
+        return self.cache_stats()
+
+    def demand_feed(self):
+        store = self.view.store
+        return store if isinstance(store, CachedBlockStore) else None
+
+    def attach_obs(self, tracer, metrics) -> None:
+        if tracer is not None and self.tracer is None:
+            self.tracer = tracer
+        store = self.view.store
+        if isinstance(store, CachedBlockStore) and \
+                (tracer is not None or metrics is not None):
+            store.attach_obs(tracer, metrics, target=f"seg{self.offset}")
+
 
 def attach_shared_fetch_queue(servers: Sequence["HostSegmentServer"],
                               depth: int = 8,
@@ -194,21 +234,26 @@ def attach_shared_fetch_queue(servers: Sequence["HostSegmentServer"],
     registers every attached store as a demand feed, so a shared-queue
     deployment's tier-0 repacks select from the *union* of what all
     its stores observed — the same cross-query scope the queue dedups
-    fetches in."""
+    fetches in.
+
+    Discovery goes through the ``SegmentTarget`` protocol: any target
+    whose ``demand_feed()`` yields a ``CachedBlockStore`` is attached,
+    so routers and future remote proxies participate without this
+    function knowing their concrete type."""
     q = AsyncFetchQueue(depth=depth)
     attached = 0
     for s in servers:
-        view = getattr(s, "view", None)
-        if view is not None and isinstance(view.store, CachedBlockStore):
+        store = tgt.demand_feed(s)
+        if isinstance(store, CachedBlockStore):
             # drains any private queue first so its in-flight fetches
             # are delivered, not orphaned
-            view.store.attach_queue(q)
+            store.attach_queue(q)
             if scheduler is not None:
-                scheduler.attach_feed(view.store)
+                scheduler.attach_feed(store)
             attached += 1
     if attached == 0:
-        raise ValueError("no cache-fronted HostSegmentServer views to "
-                         "attach the shared fetch queue to")
+        raise ValueError("no cache-fronted serving targets to attach "
+                         "the shared fetch queue to")
     return q
 
 
@@ -216,14 +261,20 @@ class QueryCoordinator:
     """Scatter -> per-segment search -> hierarchical merge.
 
     ``scheduler`` (a ``repro.serving.RepackScheduler``) turns the
-    coordinator into the adaptive serving plane's control point: device
-    servers carrying their host ``Segment`` register as repack targets,
-    cache-fronted host servers as demand feeds, and after every served
-    batch the coordinator notes the device columns and lets the
-    scheduler evaluate — so tier-0 packs follow the query stream with
-    no extra plumbing at call sites."""
+    coordinator into the adaptive serving plane's control point: any
+    target whose ``repack_source()`` yields a host ``Segment``
+    registers as a repack target, any whose ``demand_feed()`` yields a
+    cached store as a demand feed, and after every served batch the
+    coordinator notes the device columns and lets the scheduler
+    evaluate — so tier-0 packs follow the query stream with no extra
+    plumbing at call sites.
 
-    def __init__(self, servers: List[SegmentServer],
+    The coordinator speaks ONLY the ``SegmentTarget`` protocol (via
+    the ``serving.target`` adapters): host servers, device servers and
+    the mesh ``MeshQueryRouter`` are interchangeable entries of
+    ``servers``."""
+
+    def __init__(self, servers: List[tgt.SegmentTarget],
                  prune_fn: Optional[Callable] = None,
                  scheduler=None, tracer=None, metrics=None):
         self.servers = servers
@@ -239,23 +290,17 @@ class QueryCoordinator:
         self._cache_seen: Dict[int, Tuple[int, int]] = {}  # per-server
         #   (hits, misses) lifetime watermark for per-call delta reporting
         for s in servers:
-            if scheduler is not None and \
-                    getattr(s, "host", None) is not None and \
-                    getattr(s, "segment", None) is not None:
-                scheduler.attach_target(s)
-            view = getattr(s, "view", None)
-            if view is not None and isinstance(view.store,
-                                               CachedBlockStore):
-                if scheduler is not None:
-                    scheduler.attach_feed(view.store)
-                # wire the store (and its fetch queue) into the same
-                # observability plane the coordinator reports through
-                if tracer is not None or metrics is not None:
-                    view.store.attach_obs(tracer, metrics,
-                                          target=f"seg{s.offset}")
-            if tracer is not None and hasattr(s, "tracer") and \
-                    getattr(s, "tracer", None) is None:
-                s.tracer = tracer
+            if scheduler is not None:
+                if tgt.repack_source(s) is not None:
+                    scheduler.attach_target(s)
+                feed = tgt.demand_feed(s)
+                if feed is not None:
+                    scheduler.attach_feed(feed)
+            # wire the target (its store, fetch queue, ranks, ...) into
+            # the same observability plane the coordinator reports
+            # through
+            if tracer is not None or metrics is not None:
+                tgt.attach_obs(s, tracer, metrics)
         if scheduler is not None and tracer is not None and \
                 getattr(scheduler, "tracer", None) is None:
             scheduler.tracer = tracer
@@ -303,12 +348,10 @@ class QueryCoordinator:
             offs.append(s.offset)
             seg_io = int(io.sum())
             total_io += seg_io
-            t0 = getattr(s, "last_tier0_hits", None)
-            if t0 is not None:
-                total_t0 += int(t0.sum())
-            sv = getattr(s, "last_dedup_saved", None)
-            if sv is not None:
-                total_saved += int(sv.sum())
+            bs = tgt.batch_stats(s)
+            if bs:
+                total_t0 += int(np.asarray(bs["tier0_hits"]).sum())
+                total_saved += int(np.asarray(bs["dedup_saved"]).sum())
             if self.metrics is not None:
                 # per-target attribution: which segment the reads hit
                 self.metrics.counter("serve.block_reads",
@@ -332,7 +375,7 @@ class QueryCoordinator:
         # reporting is scoped to this batch)
         hits = misses = 0
         for si in targets:
-            cs = getattr(self.servers[si], "cache_stats", lambda: {})()
+            cs = tgt.lifetime_stats(self.servers[si])
             before = self._cache_seen.get(si, (0, 0))
             # tier-2 summary hits count as hits: they avoid the disk trip
             now = (cs.get("cache_hits", 0) + cs.get("tier2_hits", 0),

@@ -54,6 +54,7 @@ from repro.core.iostats import IOStats, TPU_HBM_SEGMENT, CostModel
 from repro.core.params import RepackParams
 from repro.io import hotset
 from repro.io.cached_store import CachedBlockStore
+from repro.serving import target as tgt
 
 
 @dataclasses.dataclass
@@ -85,9 +86,15 @@ class RepackScheduler:
     """
 
     def __init__(self, params: RepackParams = RepackParams(),
-                 cost_model: CostModel = TPU_HBM_SEGMENT,
+                 cost_model: Optional[CostModel] = None,
                  tracer=None):
         self.params = params
+        if cost_model is None:
+            # default pricing: the TPU-HBM preset with any calibrated
+            # constants from results/CALIB_*.json applied on top
+            # (backend mismatch / missing file -> the hardcoded preset)
+            from repro.obs.calibrate import load_calibrated
+            cost_model = load_calibrated(TPU_HBM_SEGMENT)
         self.cost_model = cost_model
         self.tracer = tracer            # repro.obs: sched.eval /
         #                                 sched.repack events, None-guarded
@@ -121,16 +128,18 @@ class RepackScheduler:
         self._marks.append(Counter(store.block_freq))
 
     def attach_target(self, server) -> None:
-        """Register a device ``SegmentServer`` whose tier-0 pack this
-        scheduler steers. The server must carry its host ``Segment``
-        (``SegmentServer.host``) — repacking selects from host arrays."""
-        if getattr(server, "host", None) is None:
+        """Register a serving target whose tier-0 pack this scheduler
+        steers. The target's ``repack_source()`` must yield the host
+        ``Segment`` the device pack is rebuilt from (``SegmentTarget``
+        protocol; ``SegmentServer.host`` for the concrete server)."""
+        seg = tgt.repack_source(server)
+        if seg is None:
             raise ValueError(
-                "repack targets need SegmentServer.host set (the host "
-                "Segment the device pack is rebuilt from)")
+                "repack targets need a repack_source() host Segment "
+                "(SegmentServer.host for device servers) — the device "
+                "pack is rebuilt from host arrays")
         if any(t is server for t in self._targets):
             return
-        seg = server.host
         v = seg.view
         self._targets.append(server)
         self._rankings.append(hotset.hot_block_ranking(
@@ -146,12 +155,13 @@ class RepackScheduler:
         comparable to ``mesh_qps_estimate``'s per-rank step)."""
         self.batches += 1
         for s in servers:
-            if getattr(s, "last_tier0_hits", None) is None:
+            bs = tgt.batch_stats(s)
+            if not bs:
                 continue
             batch = IOStats.from_device_batch(
-                np.asarray(s.last_io), np.asarray(s.last_tier0_hits),
-                np.asarray(s.last_hops), np.asarray(s.last_dedup_saved),
-                int(s.last_rounds))
+                np.asarray(bs["io"]), np.asarray(bs["tier0_hits"]),
+                np.asarray(bs["hops"]), np.asarray(bs["dedup_saved"]),
+                int(bs["rounds"]))
             self._server_stats.setdefault(id(s), IOStats()).merge(batch)
             self._step_us_sum += self.cost_model.latency_us(batch)
             self._step_batches += 1
@@ -225,7 +235,9 @@ class RepackScheduler:
         evaluated = repacked = changed = 0
         max_drift = 0.0
         for i, server in enumerate(self._targets):
-            ds = server.segment
+            ds = getattr(server, "segment", None)
+            if ds is None:
+                continue                    # no device pack to steer
             current = hot_pack_blocks(ds)
             if not current:
                 continue                    # tier 0 disabled: nothing to steer

@@ -1,4 +1,5 @@
-"""Distribution substrate: sharding rules, HLO analyzer, compression."""
+"""Distribution substrate: sharding rules, HLO analyzer, compression,
+re-mesh and segment-placement planning."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,8 +8,11 @@ from jax.sharding import PartitionSpec
 
 from repro.distributed.compress import (compress_with_feedback, dequantize,
                                         ef_init, quantize)
+from repro.distributed.elastic import (plan_placement, plan_rebalance,
+                                       plan_remesh)
 from repro.distributed.hlo import HloAnalyzer, analyze_hlo
-from repro.distributed.sharding import (SINGLE_POD_RULES, logical_spec)
+from repro.distributed.sharding import (SEGMENT_SERVE_RULES,
+                                        SINGLE_POD_RULES, logical_spec)
 
 
 class FakeMesh:
@@ -32,6 +36,97 @@ def test_logical_spec_no_axis_reuse():
     # both dims map to model -> second dim must not reuse the axis
     spec = logical_spec((64, 32), ("heads", "ff"), SINGLE_POD_RULES, mesh)
     assert spec == PartitionSpec("model", None)
+
+
+def test_segment_serve_rules_shard_segment_axis_only():
+    """The serving placement rules: one segment shard per model rank,
+    everything below the leading axis replicated within a rank."""
+    mesh = FakeMesh({"data": 1, "model": 8})
+    spec = logical_spec((8, 64, 32), ("segment", "block", "dim"),
+                        SEGMENT_SERVE_RULES, mesh)
+    assert spec == PartitionSpec("model", None, None)
+    # indivisible segment axis falls back to replication, not an error
+    spec = logical_spec((3, 64), ("segment", "vertex"),
+                        SEGMENT_SERVE_RULES, mesh)
+    assert spec == PartitionSpec(None, None)
+
+
+# ------------------------------------------------ elastic re-mesh plans
+
+def test_plan_remesh_non_power_of_two_survivors():
+    """12 survivors at TP=4: data shrinks to the largest power of two
+    (2), the 4 chips that don't fit the mesh are dropped."""
+    plan = plan_remesh(12, model=4, global_batch=64)
+    assert (plan.data, plan.model, plan.pods) == (2, 4, 1)
+    assert plan.chips == 8 and plan.dropped_chips == 4
+    assert plan.per_device_batch * plan.data * plan.grad_accum == 64
+
+
+def test_plan_remesh_pod_fallback_recursion():
+    """Survivors below the 2-pod minimum recurse into a 1-pod plan
+    rather than failing."""
+    plan = plan_remesh(6, model=4, global_batch=32, pods=2)
+    assert plan is not None and plan.pods == 1
+    assert (plan.data, plan.model) == (1, 4)
+    assert plan.dropped_chips == 2
+    # and below even the 1-pod minimum there is no plan at all
+    assert plan_remesh(3, model=4, global_batch=32, pods=2) is None
+
+
+def test_plan_remesh_grad_accum_divisibility():
+    """base_grad_accum that does not divide the global batch climbs
+    until dp_ways * accum does; per-device batch rescales to keep the
+    global batch constant."""
+    plan = plan_remesh(17, model=4, global_batch=32, base_grad_accum=3)
+    assert (plan.data, plan.model) == (4, 4)
+    assert plan.grad_accum == 4                  # 32 % (4*3) != 0 -> 4
+    assert plan.per_device_batch == 2            # 32 / (4 dp * 4 accum)
+    assert plan.per_device_batch * plan.data * plan.grad_accum == 32
+
+
+# ------------------------------------------- serving segment placement
+
+def test_plan_placement_uniform_and_proportional():
+    assert plan_placement([1.0] * 4, 8) == [0, 0, 1, 1, 2, 2, 3, 3]
+    # hot segment takes the surplus ranks, every segment keeps >= 1
+    hot = plan_placement([10.0, 1.0, 1.0, 1.0], 8)
+    counts = np.bincount(hot, minlength=4)
+    assert counts[0] > counts[1:].max() and counts.min() >= 1
+    # no load signal (all zero) degrades to uniform replicas
+    assert plan_placement([0.0, 0.0], 4) == [0, 0, 1, 1]
+
+
+def test_plan_placement_validation():
+    with pytest.raises(ValueError):
+        plan_placement([1.0, 1.0, 1.0], 2)       # ranks < segments
+    with pytest.raises(ValueError):
+        plan_placement([], 4)
+
+
+def test_plan_placement_move_minimizing_and_idempotent():
+    cur = [0, 0, 1, 1, 2, 2, 3, 3]
+    new = plan_placement([10.0, 1.0, 1.0, 1.0], 8, current=cur)
+    # ranks whose segment keeps quota stay put; only surplus ranks move
+    moved = [r for r in range(8) if new[r] != cur[r]]
+    assert moved and all(cur[r] != 0 for r in moved)
+    # planning again from the same loads changes nothing
+    assert plan_placement([10.0, 1.0, 1.0, 1.0], 8, current=new) == new
+
+
+def test_plan_rebalance_gates_on_skew():
+    cur = [0, 0, 1, 1]
+    quiet = plan_rebalance(cur, [1.0, 1.0], [1.0, 1.1, 1.0, 0.9],
+                           skew_threshold=1.5)
+    assert not quiet.fired and quiet.placement == tuple(cur)
+    loud = plan_rebalance(cur, [9.0, 1.0], [9.0, 9.0, 1.0, 1.0],
+                          skew_threshold=1.5)
+    assert loud.fired and loud.skew == pytest.approx(9.0 / 5.0)
+    assert set(loud.placement) == {0, 1}         # seg 1 still held
+    # applying the fired plan and re-evaluating settled loads is a
+    # no-op — the rebalance-idempotence invariant
+    again = plan_rebalance(list(loud.placement), [9.0, 1.0],
+                           [3.0, 3.0, 3.0, 3.0], skew_threshold=1.5)
+    assert not again.fired and again.placement == loud.placement
 
 
 def test_hlo_analyzer_scan_flops_exact():

@@ -326,6 +326,48 @@ def test_preset_save_load_apply(tmp_path):
         loaded.apply(NVME_SEGMENT)         # backend mismatch
 
 
+def test_load_calibrated_applies_stored_preset(tmp_path):
+    """ISSUE 7 satellite: the scheduler/router/mesh-bench default
+    pricing path — a stored CALIB_<backend>.json overlays its fitted
+    constants on the shipped base model."""
+    from repro.obs import load_calibrated
+    preset = CalibrationPreset(
+        backend=TPU_HBM_SEGMENT.name, constants={"t_round": 9.5},
+        unfit=[], n_samples=4, error={})
+    preset.save(tmp_path / f"CALIB_{TPU_HBM_SEGMENT.name}.json")
+    cm = load_calibrated(TPU_HBM_SEGMENT, results_dir=str(tmp_path))
+    assert cm.t_round == pytest.approx(9.5)
+    assert cm.t_block_io == TPU_HBM_SEGMENT.t_block_io   # unfit kept
+
+
+def test_load_calibrated_falls_back_on_mismatch_or_garbage(tmp_path):
+    """Any way the preset cannot be honored falls back to the base
+    model — missing file, wrong backend, unparseable JSON — so callers
+    can default to calibrated pricing unconditionally."""
+    from repro.obs import load_calibrated
+    # missing file
+    assert load_calibrated(NVME_SEGMENT,
+                           results_dir=str(tmp_path)) == NVME_SEGMENT
+    # preset fitted for a different backend than the file name claims
+    wrong = CalibrationPreset(
+        backend=TPU_HBM_SEGMENT.name, constants={"t_round": 9.5},
+        unfit=[], n_samples=4, error={})
+    wrong.save(tmp_path / f"CALIB_{NVME_SEGMENT.name}.json")
+    assert load_calibrated(NVME_SEGMENT,
+                           results_dir=str(tmp_path)) == NVME_SEGMENT
+    # unparseable file
+    (tmp_path / f"CALIB_{NVME_SEGMENT.name}.json").write_text("{nope")
+    assert load_calibrated(NVME_SEGMENT,
+                           results_dir=str(tmp_path)) == NVME_SEGMENT
+    # unknown constant name inside an otherwise valid preset
+    bad = CalibrationPreset(
+        backend=NVME_SEGMENT.name, constants={"t_warp_drive": 1.0},
+        unfit=[], n_samples=1, error={})
+    bad.save(tmp_path / f"CALIB_{NVME_SEGMENT.name}.json")
+    assert load_calibrated(NVME_SEGMENT,
+                           results_dir=str(tmp_path)) == NVME_SEGMENT
+
+
 # -------------------------------------------- coordinator stats/obs wiring
 class _FakeServer:
     """Duck-typed device-less server: fixed results, zero traffic."""

@@ -43,6 +43,50 @@ def test_merge_topk_correct():
     np.testing.assert_allclose(gd[0], [0.5, 1.0, 2.0])
 
 
+def test_merge_topk_duplicate_distance_tiebreak():
+    """ISSUE 7 satellite regression: equal distances break ties by
+    ascending GLOBAL id — the same (dist, id) total order the on-device
+    ``merge_shard_topk`` sorts by, so host and mesh merges agree no
+    matter which segment a duplicate lands in."""
+    ids = [np.asarray([[3, 1]]), np.asarray([[2, 0]])]
+    dd = [np.asarray([[1.0, 1.0]]), np.asarray([[1.0, 1.0]])]
+    gi, gd = merge_topk(ids, dd, offsets=[0, 100], k=4)
+    np.testing.assert_array_equal(gi[0], [1, 3, 100, 102])
+    np.testing.assert_allclose(gd[0], [1.0, 1.0, 1.0, 1.0])
+    # invalid slots (-1) always sort last, even against inf distances
+    ids = [np.asarray([[5, -1]]), np.asarray([[7, -1]])]
+    dd = [np.asarray([[2.0, np.inf]]), np.asarray([[2.0, np.inf]])]
+    gi, gd = merge_topk(ids, dd, offsets=[0, 100], k=4)
+    np.testing.assert_array_equal(gi[0], [5, 107, -1, -1])
+
+
+def test_merge_topk_matches_device_merge_on_ties():
+    """Host merge == device merge on the same duplicate-heavy inputs:
+    both sort the shared (dist, global id) key, so the mesh router's
+    on-device merge is bit-identical to the coordinator's."""
+    import jax.numpy as jnp
+
+    from repro.core.device_search import merge_shard_topk
+    rng = np.random.default_rng(5)
+    s, qn, kk, k = 3, 6, 8, 5
+    ids = [rng.integers(0, 40, (qn, kk)) for _ in range(s)]
+    # quantized dists force plenty of cross-segment ties
+    dd = [rng.integers(0, 4, (qn, kk)).astype(np.float64)
+          for _ in range(s)]
+    for i, d in zip(ids, dd):                     # some invalid slots
+        mask = rng.random((qn, kk)) < 0.2
+        i[mask] = -1
+        d[mask] = np.inf
+    offsets = [0, 100, 200]
+    hi, hd = merge_topk(ids, dd, offsets, k)
+    gids = np.stack([np.where(i >= 0, i + off, -1)
+                     for i, off in zip(ids, offsets)])
+    di, dv = merge_shard_topk(jnp.asarray(gids),
+                              jnp.asarray(np.stack(dd)), k)
+    np.testing.assert_array_equal(hi, np.asarray(di))
+    np.testing.assert_array_equal(hd, np.asarray(dv))
+
+
 @pytest.mark.slow
 def test_coordinator_recall_over_union(two_segments):
     xs, servers = two_segments
