@@ -50,12 +50,16 @@ bench-device:
 # smoke lane for the divergence-aware batched path (ISSUE 4) and the
 # adaptive repack control loop (ISSUE 5): tiny sweeps with the
 # bit-identity / strict-DMA-cut assertions on (BENCH_SMOKE shrinks
-# them; both skip gracefully with no jax backend)
+# them; both skip gracefully with no jax backend). The fresh
+# BENCH_device_batch_dedup.json is then gated against the committed
+# baseline (ISSUE 8): >10% regression of modeled DMA/query or modeled
+# latency fails the lane
 bench-batch:
 	BENCH_SMOKE=1 PYTHONPATH=src $(PY) -m benchmarks.run \
 		--only device_batch_dedup_sweep
 	BENCH_SMOKE=1 PYTHONPATH=src $(PY) -m benchmarks.run \
 		--only device_drift_repack_sweep
+	PYTHONPATH=src $(PY) -m benchmarks.check_regression
 
 # the observability plane (repro.obs): trace/metrics/export/roundlog/
 # calibration unit + property tests, then the Perfetto-exporting trace

@@ -1,0 +1,141 @@
+"""Perf-regression gate over the BENCH_*.json artifacts (ISSUE 8).
+
+Compares a freshly emitted ``results/BENCH_<name>.json`` (written by
+the bench smoke that just ran, e.g. ``make bench-batch``) against the
+committed baseline of the same artifact (``git show
+<ref>:results/BENCH_<name>.json``) and FAILS (exit 1) when any gated
+lower-is-better metric regressed by more than ``--threshold``
+(default 10%).
+
+Gated metrics for the batched-dedup artifact: ``modeled_dma_per_query``
+and ``modeled_latency_us_tpu`` — the two numbers the whole-batch dedup
++ DMA pipelining work moves. Everything else shared between the two
+artifacts is printed as an informational delta. Metrics present only
+on one side (a PR adding or retiring a metric) are reported, never
+failed on, so the gate does not block schema evolution.
+
+The gate compares like with like or not at all: if the comparability
+keys of the configs differ (``batch``, ``smoke``, ``n``, ``dim``) the
+numbers come from different sweeps and the gate SKIPS (exit 0 with a
+notice) instead of failing on an apples-to-oranges diff. Likewise when
+the baseline does not exist at the ref (first PR emitting the
+artifact) or the fresh file was never written (the sweep skipped for
+lack of a jax backend).
+
+Usage (what ``make bench-batch`` and the CI device lane run):
+
+    python -m benchmarks.check_regression
+    python -m benchmarks.check_regression --artifact device_batch_dedup \
+        --threshold 0.10 --ref HEAD
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+# lower-is-better metrics that fail the gate when they rise >threshold
+GATED_METRICS = ("modeled_dma_per_query", "modeled_latency_us_tpu")
+# config keys that must match for two artifacts to be comparable
+COMPARABILITY_KEYS = ("batch", "smoke", "n", "dim")
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _metric_map(payload):
+    return {m["name"]: float(m["value"])
+            for m in payload.get("metrics", [])
+            if isinstance(m.get("value"), (int, float))}
+
+
+def load_fresh(artifact: str):
+    path = os.path.join(REPO_ROOT, "results", f"BENCH_{artifact}.json")
+    if not os.path.exists(path):
+        return None, path
+    with open(path) as f:
+        return json.load(f), path
+
+
+def load_baseline(artifact: str, ref: str):
+    """The committed artifact at ``ref``, or None when it has none."""
+    try:
+        blob = subprocess.run(
+            ["git", "show", f"{ref}:results/BENCH_{artifact}.json"],
+            cwd=REPO_ROOT, capture_output=True, text=True, check=True,
+        ).stdout
+    except (subprocess.CalledProcessError, FileNotFoundError):
+        return None
+    try:
+        return json.loads(blob)
+    except json.JSONDecodeError:
+        return None
+
+
+def check(artifact: str, threshold: float, ref: str) -> int:
+    fresh, path = load_fresh(artifact)
+    if fresh is None:
+        print(f"[check_regression] SKIP: no fresh {path} (bench "
+              f"skipped?) — nothing to gate")
+        return 0
+    base = load_baseline(artifact, ref)
+    if base is None:
+        print(f"[check_regression] SKIP: no committed baseline for "
+              f"BENCH_{artifact}.json at {ref} — first emission passes")
+        return 0
+    fcfg, bcfg = fresh.get("config", {}), base.get("config", {})
+    mismatched = [k for k in COMPARABILITY_KEYS
+                  if fcfg.get(k) != bcfg.get(k)]
+    if mismatched:
+        print(f"[check_regression] SKIP: configs differ on "
+              f"{mismatched} (fresh {[fcfg.get(k) for k in mismatched]} "
+              f"vs baseline {[bcfg.get(k) for k in mismatched]}) — "
+              f"not comparable")
+        return 0
+    fm, bm = _metric_map(fresh), _metric_map(base)
+    failures = []
+    for name in sorted(set(fm) | set(bm)):
+        if name not in fm:
+            print(f"[check_regression] note: {name} retired "
+                  f"(baseline {bm[name]:.4g})")
+            continue
+        if name not in bm:
+            print(f"[check_regression] note: {name} is new "
+                  f"(fresh {fm[name]:.4g})")
+            continue
+        f_v, b_v = fm[name], bm[name]
+        rel = (f_v - b_v) / abs(b_v) if b_v else (0.0 if f_v == b_v
+                                                  else float("inf"))
+        gated = name in GATED_METRICS
+        tag = "GATED" if gated else "info "
+        print(f"[check_regression] {tag} {name}: {b_v:.4g} -> "
+              f"{f_v:.4g} ({rel:+.1%})")
+        if gated and rel > threshold:
+            failures.append(
+                f"{name} regressed {rel:+.1%} "
+                f"({b_v:.4g} -> {f_v:.4g}, threshold +{threshold:.0%})")
+    if failures:
+        print(f"[check_regression] FAIL BENCH_{artifact}.json vs {ref}:")
+        for f_msg in failures:
+            print(f"  - {f_msg}")
+        return 1
+    print(f"[check_regression] OK: BENCH_{artifact}.json within "
+          f"+{threshold:.0%} of the {ref} baseline")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--artifact", default="device_batch_dedup",
+                    help="BENCH_<artifact>.json to gate")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="max allowed relative rise of a gated metric")
+    ap.add_argument("--ref", default="HEAD",
+                    help="git ref holding the committed baseline")
+    args = ap.parse_args(argv)
+    return check(args.artifact, args.threshold, args.ref)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

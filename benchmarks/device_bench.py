@@ -109,7 +109,13 @@ def device_batch_dedup_sweep():
         TPU latency per query must be non-increasing with batch size
         at fixed recall (same knobs);
     (c) bit-identity vs the singleton-batch oracle, fused AND jnp
-        fetch_impl, asserted inside the sweep.
+        fetch_impl, asserted inside the sweep;
+    (d) cross-tile dup-rate axis (ISSUE 8): duplicates placed in a
+        DIFFERENT round tile than their twins (``round_tile_cap``
+        splits the batch), where only batch-scope dedup can join them.
+        The old tile-scope kernel's modeled DMA count is exactly
+        ``io - (dedup_saved - dedup_cross)`` (it missed the cross-tile
+        joins); the batch-scope number must sit STRICTLY below it.
 
     ``BENCH_SMOKE=1`` (the `make bench-batch` / CI smoke lane) shrinks
     the sweep to the two smallest batches. Skips gracefully when no
@@ -195,7 +201,51 @@ def device_batch_dedup_sweep():
                  occupancy=float(np.asarray(r.hops).mean()
                                  / max(int(r.rounds), 1)),
                  modeled_latency_us_tpu=lat)
-    # perf-trajectory artifact at the largest batch swept in this lane
+    # --- (d) cross-tile dup-rate axis (ISSUE 8)
+    rb = r                              # untiled run of the same batch
+    bx, cap = (16, 8) if smoke else (128, 64)
+    qx = query_set(x, 128, seed=5)[:bx]
+    pt = dataclasses.replace(p, round_tile_cap=cap)
+    prev_x = None
+    for dup in (0.0, 0.25, 0.5):
+        ndup = int(dup * bx)            # duplicates all land in tile 1
+        qd = qx.copy()
+        if ndup:
+            qd[bx - ndup:] = qx[:ndup]  # ...their twins stay in tile 0
+        rx = DS.device_anns(ds, jnp.asarray(qd), pt)
+        io_a = np.asarray(rx.io)
+        sv_a = np.asarray(rx.dedup_saved)
+        cx_a = np.asarray(rx.dedup_cross)
+        dma_x = float((io_a - sv_a).mean())
+        # what the per-tile-dedup kernel would have paid: it joined
+        # only within a tile, so add the cross-tile joins back
+        dma_tile = float((io_a - (sv_a - cx_a)).mean())
+        if ndup:
+            assert cx_a.sum() > 0, "cross-tile twins must join"
+            assert dma_x < dma_tile, (
+                f"batch-scope dedup must price strictly below the "
+                f"tile-scope kernel ({dma_x:.2f} !< {dma_tile:.2f})")
+            assert dma_x < prev_x, (
+                f"modeled DMAs must fall strictly with the cross-tile "
+                f"dup rate ({prev_x:.2f} -> {dma_x:.2f})")
+        else:
+            # tiling alone must not move results or any counter
+            assert np.array_equal(np.asarray(rx.ids), np.asarray(rb.ids))
+            assert np.array_equal(np.asarray(rx.dists),
+                                  np.asarray(rb.dists))
+            assert np.array_equal(io_a, np.asarray(rb.io))
+        prev_x = dma_x
+        C.record("device_cross_tile_dedup_sweep", batch=bx,
+                 round_tile_cap=cap, dup_rate=dup,
+                 dedup_saved_per_query=float(sv_a.mean()),
+                 cross_tile_saved_per_query=float(cx_a.mean()),
+                 modeled_dma_per_query=dma_x,
+                 modeled_dma_per_query_tile_scope=dma_tile,
+                 modeled_dma_cut_vs_tile_scope=(
+                     1.0 - dma_x / max(dma_tile, 1e-9)))
+
+    # perf-trajectory artifact: largest batch swept in this lane plus
+    # the cross-tile point (dup=0.5) batch-vs-tile-scope comparison
     C.perf_artifact(
         "device_batch_dedup", [
             {"name": "modeled_dma_per_query", "value": io_m - sv_m,
@@ -203,9 +253,20 @@ def device_batch_dedup_sweep():
             {"name": "dedup_saved_per_query", "value": sv_m,
              "units": "blocks"},
             {"name": "modeled_latency_us_tpu", "value": lat,
-             "units": "us"}],
+             "units": "us"},
+            {"name": "cross_tile_saved_per_query",
+             "value": float(cx_a.mean()), "units": "blocks"},
+            {"name": "modeled_dma_per_query_cross_tile", "value": dma_x,
+             "units": "blocks"},
+            {"name": "modeled_dma_per_query_tile_scope",
+             "value": dma_tile, "units": "blocks"},
+            {"name": "modeled_dma_cut_vs_tile_scope",
+             "value": 1.0 - dma_x / max(dma_tile, 1e-9),
+             "units": "ratio"}],
         config={"batch": b, "n": C.N_BASE, "dim": C.DIM,
-                "tier0_frac": 0.05, "smoke": smoke},
+                "tier0_frac": 0.05, "smoke": smoke,
+                "cross_tile_batch": bx, "round_tile_cap": cap,
+                "cross_tile_dup_rate": dup},
         measured=False)
 
 

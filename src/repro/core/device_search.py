@@ -59,8 +59,11 @@ Tree = dict
 
 # per-round trace-buffer columns (p.trace_rounds) — the device-side
 # twin of repro.obs.roundlog.ROUND_LOG_COLS (kept import-free here so
-# core never depends on the obs plane; equality is pinned by a test)
-_ROUND_LOG_COLS = ("live", "cold", "tier0", "joins", "compacted")
+# core never depends on the obs plane; equality is pinned by a test).
+# ``joins`` is ALL dedup joins in the round (batch scope, the kernel's
+# union pass); ``joins_x`` is the cross-tile subset of them.
+_ROUND_LOG_COLS = ("live", "cold", "tier0", "joins", "joins_x",
+                   "compacted")
 
 
 @jax.tree_util.register_dataclass
@@ -98,16 +101,25 @@ class DeviceSearchResult(NamedTuple):
     hops: jnp.ndarray          # [Q] DMA round trips (fetch_width blocks each)
     tier0_hits: jnp.ndarray    # [Q] block touches served by the VMEM pack
     dedup_saved: jnp.ndarray   # [Q] cold touches that joined another
-    #                            query's same-round gather (actual DMAs
-    #                            issued for this query = io - dedup_saved)
+    #                            request's same-round gather — BATCH
+    #                            scope, the union the kernel actually
+    #                            dedups across (actual DMAs issued for
+    #                            this query = io - dedup_saved)
+    dedup_cross: jnp.ndarray   # [Q] the cross-tile subset of
+    #                            ``dedup_saved``: joins onto a gather
+    #                            first requested in ANOTHER round-kernel
+    #                            query tile — what the batch-scope
+    #                            rework (DESIGN.md §8) wins over
+    #                            per-tile dedup (whose modeled DMAs =
+    #                            io - (dedup_saved - dedup_cross))
     rounds: jnp.ndarray        # scalar: loop rounds the batch ran
     #                            (hops / rounds = a query's occupancy)
     round_log: Optional[jnp.ndarray] = None
-    #                            [max_hops, 5] i32 per-round trace buffer
+    #                            [max_hops, 6] i32 per-round trace buffer
     #                            (p.trace_rounds; repro.obs.roundlog —
-    #                            cols live/cold/tier0/joins/compacted;
-    #                            rows >= ``rounds`` are unwritten). None
-    #                            when tracing is off.
+    #                            cols live/cold/tier0/joins/joins_x/
+    #                            compacted; rows >= ``rounds`` are
+    #                            unwritten). None when tracing is off.
 
 
 class DeviceRangeResult(NamedTuple):
@@ -117,7 +129,9 @@ class DeviceRangeResult(NamedTuple):
     in_range: jnp.ndarray      # [Q, k_cap] bool
     io: jnp.ndarray            # [Q] cold block touches across all rounds
     tier0_hits: jnp.ndarray    # [Q] tier-0 hits across all rounds
-    dedup_saved: jnp.ndarray   # [Q] same-round dedup joins, all rounds
+    dedup_saved: jnp.ndarray   # [Q] same-round dedup joins (batch
+    #                            scope), all rounds
+    dedup_cross: jnp.ndarray   # [Q] cross-tile subset of dedup_saved
     rounds: jnp.ndarray        # scalar: total loop rounds, all RS rounds
 
 
@@ -384,26 +398,30 @@ def nav_entry_points(ds: DeviceSegment, queries: jnp.ndarray,
 # ------------------------------------------------------ main block search
 
 def _round_stage(ds: DeviceSegment, queries: jnp.ndarray, u: jnp.ndarray,
-                 metric: str, impl: str, n_expand: int):
+                 metric: str, impl: str, n_expand: int, tile: int,
+                 pipeline_dma: bool):
     """The fused per-round fetch pipeline (DR): tier-0 probe,
-    cross-query-deduped block gather, exact rank, and the per-query
+    batch-scope-deduped block gather, exact rank, and the per-query
     top-``n_expand`` expansion order — one pass.
 
     u [Q, F] picked candidate ids (-1 = converged/empty slot) ->
     (vid [Q, F*eps], nbrs [Q, F*eps, Lam], dists [Q, F*eps],
     hit [Q, F] i32, order [Q, n_expand]). ``impl='fused'`` runs the
-    ``fused_round`` Pallas kernel (deduped gather, idle-tile skip);
-    ``'jnp'`` is the pure-jnp reference with straight per-request
-    gathers — bit-identical payloads (dedup only changes which gather
-    produced a tile, never its value; same f32 distance form, same
-    stable-argsort tie-breaking)."""
+    ``fused_round`` Pallas kernel (whole-batch deduped gather —
+    double-buffered cold DMAs when ``pipeline_dma`` and compiled —
+    idle-tile skip at the ``tile`` granularity); ``'jnp'`` is the
+    pure-jnp reference with straight per-request gathers —
+    bit-identical payloads (dedup only changes which gather produced a
+    tile, never its value; same f32 distance form, same stable-argsort
+    tie-breaking)."""
     from repro import kernels as K
 
     if impl == "fused":
         dd, vid, nbrs, hit, order = K.fused_round(
             queries, u, ds.block_of, ds.hot_slot_of, ds.hot_vecs,
             ds.hot_vid, ds.hot_nbrs, ds.vecs, ds.vid, ds.nbrs,
-            n_expand, metric=metric)
+            n_expand, metric=metric, bq=tile,
+            pipeline_dma=pipeline_dma)
     else:
         from repro.kernels import ref
         dd, vid, nbrs, hit, order = ref.fused_round_ref(
@@ -423,45 +441,53 @@ def _open_keys(cand_id: jnp.ndarray, cand_key: jnp.ndarray,
     return jnp.where(vis, jnp.inf, cand_key)
 
 
-def _dedup_joins(b: jnp.ndarray, cold: jnp.ndarray,
-                 tile: int) -> jnp.ndarray:
+def _dedup_joins(b: jnp.ndarray, cold: jnp.ndarray, tile: int):
     """Mark cold block requests that join an earlier request's gather.
 
-    b, cold [Q, F] -> joined [Q, F] bool: True where the same round
-    already gathers this block for an earlier (flat-order) cold request
-    in the same round-kernel query tile (``kernels.round_tile`` — the
-    scope one kernel invocation dedups across). The first requester
-    pays the DMA (stays in ``io``); joiners land in ``dedup_saved``."""
+    b, cold [Q, F] -> (joined, joined_x) [Q, F] bool. ``joined`` is
+    True where this round already gathers the block for an earlier
+    (flat-order) cold request ANYWHERE in the batch — the whole-batch
+    union scope the fused kernel's pass 1 dedups across; the first
+    requester pays the DMA (stays in ``io``), joiners land in
+    ``dedup_saved``. ``joined_x`` is the cross-tile subset: joins whose
+    paying requester sits in a DIFFERENT round-kernel query tile
+    (``kernels.round_tile``) — what batch scope wins over the old
+    per-tile dedup. Both masks come from the same sentinel-keyed flat
+    array through the shared ``kernels.dedup.join_mask`` (one row per
+    tile for the intra mask, one whole-batch row for the total), so
+    joined_x = joined & ~intra and intra ⊆ joined by the stable flat
+    order — the accounting can never disagree with the kernel's union
+    pass, which uses the same module."""
+    from repro.kernels import dedup
+
     qn, fw = b.shape
     pad = (-qn) % tile
     bp = jnp.pad(b, ((0, pad), (0, 0)))
     cp = jnp.pad(cold, ((0, pad), (0, 0)))
     t = bp.shape[0] // tile
     r = tile * fw
-    flat_b = bp.reshape(t, r)
-    flat_c = cp.reshape(t, r)
-    # non-cold slots get unique negative sentinels so they never form
-    # duplicate groups; stable sort keeps the earliest requester first
-    key = jnp.where(flat_c, flat_b,
-                    -1 - jnp.arange(r, dtype=jnp.int32)[None, :])
-    order = jnp.argsort(key, axis=1)
-    sk = jnp.take_along_axis(key, order, axis=1)
-    dup = jnp.concatenate(
-        [jnp.zeros((t, 1), bool), sk[:, 1:] == sk[:, :-1]], axis=1)
-    joined = jnp.zeros((t, r), bool).at[
-        jnp.arange(t)[:, None], order].set(dup)
-    return joined.reshape(-1)[: qn * fw].reshape(qn, fw)
+    # non-cold slots get globally unique negative sentinels so they
+    # never form duplicate groups in either scope
+    flat = jnp.where(cp.reshape(-1), bp.reshape(-1),
+                     -1 - jnp.arange(t * r, dtype=jnp.int32))
+    intra = dedup.join_mask(flat.reshape(t, r)).reshape(-1)
+    batch = dedup.join_mask(flat.reshape(1, t * r)).reshape(-1)
+    cross = batch & ~intra
+    return (batch[: qn * fw].reshape(qn, fw),
+            cross[: qn * fw].reshape(qn, fw))
 
 
 def _block_search_loop(ds: DeviceSegment, queries: jnp.ndarray, lut,
                        state, *, res_size: int, candidates: int,
                        sigma: float, max_hops: int, metric: str,
                        fetch_width: int, fetch_impl: str,
-                       compact_frac: float = 0.0, trace: bool = False):
+                       compact_frac: float = 0.0, trace: bool = False,
+                       pipeline_dma: bool = False,
+                       round_tile_cap: int = 0):
     """The batched best-first block search from a given carried state.
 
     ``state`` = (cand_id, cand_key, open_key, visited, res_id, res_key,
-    io, t0, hops, saved, t); the range-search driver re-enters with the
+    io, t0, hops, saved, saved_x, t); the range-search driver re-enters with the
     previous round's ``visited``/result arrays so already-expanded
     vertices are never re-fetched (PR 2's host RS resume fix, device
     formulation). ``open_key`` (``_open_keys``) is the carried active
@@ -480,9 +506,9 @@ def _block_search_loop(ds: DeviceSegment, queries: jnp.ndarray, lut,
     before returning, so callers see original query order either
     way.
 
-    ``trace`` (jit-static) carries a ``[max_hops, 5] i32`` per-round
+    ``trace`` (jit-static) carries a ``[max_hops, 6] i32`` per-round
     buffer (``repro.obs.roundlog`` columns: live, cold, tier0, joins,
-    compacted) written once per round from the same masks the counters
+    joins_x, compacted) written once per round from the same masks the counters
     sum — a lossless refinement, so the log's column sums equal the
     counter totals by construction. The buffer's round axis is never
     permuted by compaction (its rows are batch-level sums, which are
@@ -495,7 +521,7 @@ def _block_search_loop(ds: DeviceSegment, queries: jnp.ndarray, lut,
     fw = max(fetch_width, 1)
     n_expand = fw * (1 + max(int(np.ceil((eps - 1) * sigma)), 0))
     from repro import kernels as K
-    tile = K.round_tile(qn)
+    tile = K.round_tile(qn, round_tile_cap)
     compact = compact_frac > 0.0
 
     def cond(st):
@@ -504,11 +530,11 @@ def _block_search_loop(ds: DeviceSegment, queries: jnp.ndarray, lut,
 
     def body(st):
         (cand_id, cand_key, open_key, visited, res_id, res_key,
-         io, t0, hops, saved) = st[:10]
-        pos = 10
+         io, t0, hops, saved, saved_x) = st[:11]
+        pos = 11
         if compact:
-            perm, q_r, lut_r = st[10:13]
-            pos = 13
+            perm, q_r, lut_r = st[11:14]
+            pos = 14
         if trace:
             rlog = st[pos]
             pos += 1
@@ -529,7 +555,8 @@ def _block_search_loop(ds: DeviceSegment, queries: jnp.ndarray, lut,
                         if qn > 1 else jnp.asarray(False))
             fired = (frac < compact_frac) & unpacked
             carried = (cand_id, cand_key, open_key, visited, res_id,
-                       res_key, io, t0, hops, saved, perm, q_r, lut_r)
+                       res_key, io, t0, hops, saved, saved_x, perm,
+                       q_r, lut_r)
 
             def _repack(arrs):
                 # stable: live first, original order within each group;
@@ -541,7 +568,7 @@ def _block_search_loop(ds: DeviceSegment, queries: jnp.ndarray, lut,
             carried = jax.lax.cond(fired, _repack,
                                    lambda arrs: arrs, carried)
             (cand_id, cand_key, open_key, visited, res_id, res_key,
-             io, t0, hops, saved, perm, q_r, lut_r) = carried
+             io, t0, hops, saved, saved_x, perm, q_r, lut_r) = carried
         else:
             q_r, lut_r = queries, lut
 
@@ -557,13 +584,15 @@ def _block_search_loop(ds: DeviceSegment, queries: jnp.ndarray, lut,
         # --- DR round stage: probe tier 0, dedup + gather the round's
         # block union, rank, and order expansions — one fused pass
         vid, nbrs, dd, hit, order = _round_stage(
-            ds, q_r, u, metric, fetch_impl, n_expand)
+            ds, q_r, u, metric, fetch_impl, n_expand, tile,
+            pipeline_dma)
         hot = hit.astype(bool) & f_active
         cold = f_active & ~hot
-        joined = _dedup_joins(b, cold, tile)                 # [Q, F]
+        joined, joined_x = _dedup_joins(b, cold, tile)       # [Q, F]
         io = io + cold.sum(axis=1).astype(jnp.int32)
         t0 = t0 + hot.sum(axis=1).astype(jnp.int32)
         saved = saved + joined.sum(axis=1).astype(jnp.int32)
+        saved_x = saved_x + joined_x.sum(axis=1).astype(jnp.int32)
         hops = hops + active.astype(jnp.int32)               # round trips
 
         if trace:
@@ -577,6 +606,7 @@ def _block_search_loop(ds: DeviceSegment, queries: jnp.ndarray, lut,
                 cold.sum().astype(jnp.int32),
                 hot.sum().astype(jnp.int32),
                 joined.sum().astype(jnp.int32),
+                joined_x.sum().astype(jnp.int32),
                 fired.astype(jnp.int32)]))
 
         # --- DC: fold the exact-ranked residents into results
@@ -615,14 +645,14 @@ def _block_search_loop(ds: DeviceSegment, queries: jnp.ndarray, lut,
                                        candidates)
         open_key = _open_keys(cand_id, cand_key, visited)
         out = (cand_id, cand_key, open_key, visited, res_id, res_key,
-               io, t0, hops, saved)
+               io, t0, hops, saved, saved_x)
         if compact:
             out = out + (perm, q_r, lut_r)
         if trace:
             out = out + (rlog,)
         return out + (t + 1,)
 
-    # extended state: core10 + (perm, queries, lut | compact)
+    # extended state: core11 + (perm, queries, lut | compact)
     #                        + (round log | trace) + (t,)
     st = state[:-1]
     if compact:
@@ -631,11 +661,11 @@ def _block_search_loop(ds: DeviceSegment, queries: jnp.ndarray, lut,
         st = st + (jnp.zeros((max_hops, len(_ROUND_LOG_COLS)),
                              jnp.int32),)
     out = jax.lax.while_loop(cond, body, st + (state[-1],))
-    arrs = out[:10]
-    pos = 10
+    arrs = out[:11]
+    pos = 11
     if compact:
-        perm = out[10]
-        pos = 13
+        perm = out[11]
+        pos = 14
         inv = jnp.argsort(perm)              # undo the compaction order
         arrs = tuple(jnp.take(a, inv, axis=0) for a in arrs)
     rlog = None
@@ -695,15 +725,19 @@ def device_anns(ds: DeviceSegment, queries: jnp.ndarray,
              jnp.zeros((qn,), jnp.int32),                    # tier-0 hits
              jnp.zeros((qn,), jnp.int32),                    # hops
              jnp.zeros((qn,), jnp.int32),                    # dedup joins
+             jnp.zeros((qn,), jnp.int32),                    # cross-tile
              jnp.zeros((), jnp.int32))
     state, rlog = _block_search_loop(
         ds, queries, lut, state, res_size=res_size,
         candidates=p.candidates, sigma=p.sigma, max_hops=p.max_hops,
         metric=metric, fetch_width=fw, fetch_impl=p.fetch_impl,
-        compact_frac=p.compact_frac, trace=p.trace_rounds)
-    _, _, _, _, res_id, res_key, io, t0, hops, saved, t = state
+        compact_frac=p.compact_frac, trace=p.trace_rounds,
+        pipeline_dma=p.pipeline_dma,
+        round_tile_cap=p.round_tile_cap)
+    (_, _, _, _, res_id, res_key, io, t0, hops, saved, saved_x,
+     t) = state
     return DeviceSearchResult(res_id[:, : p.k], res_key[:, : p.k], io,
-                              hops, t0, saved, t, rlog)
+                              hops, t0, saved, saved_x, t, rlog)
 
 
 # --------------------------------------------- production mesh search step
@@ -773,10 +807,10 @@ def make_search_step(mesh, rules, *,
     when omitted): Γ, σ, fetch width, nav beam, compaction — and the
     tier-0 budget, which sizes the per-rank hot-tile pack in the
     argument specs. The step returns (gid, dists, io, hops,
-    tier0_hits, dedup_saved); the per-rank io/hops/tier-0/dedup
-    columns land in the ``(data, model)``-sharded outputs — the
-    mesh-level QPS fold in ``benchmarks/paper_tables.py`` consumes
-    exactly these."""
+    tier0_hits, dedup_saved, dedup_cross); the per-rank
+    io/hops/tier-0/dedup columns land in the ``(data, model)``-sharded
+    outputs — the mesh-level QPS fold in ``benchmarks/paper_tables.py``
+    consumes exactly these."""
     from jax.sharding import NamedSharding, PartitionSpec as P
     try:
         from jax import shard_map
@@ -824,7 +858,7 @@ def make_search_step(mesh, rules, *,
         hot_nbrs=P("model"), hot_slot_of=P("model")), P(data_axes))
     out_specs = (P(data_axes), P(data_axes), P(data_axes, "model"),
                  P(data_axes, "model"), P(data_axes, "model"),
-                 P(data_axes, "model"))
+                 P(data_axes, "model"), P(data_axes, "model"))
 
     def local_search(seg: DeviceSegment, queries):
         seg = jax.tree.map(lambda a: a[0], seg)      # strip shard dim
@@ -848,7 +882,8 @@ def make_search_step(mesh, rules, *,
         col = jnp.ones((1, 1), jnp.int32)
         return (gid, out_d, r.io[:, None] * col, r.hops[:, None] * col,
                 r.tier0_hits[:, None] * col,
-                r.dedup_saved[:, None] * col)
+                r.dedup_saved[:, None] * col,
+                r.dedup_cross[:, None] * col)
 
     import inspect
     flag = ("check_vma" if "check_vma"
@@ -901,6 +936,7 @@ def device_range_search(ds: DeviceSegment, queries: jnp.ndarray,
     t0 = jnp.zeros((qn,), jnp.int32)
     hops = jnp.zeros((qn,), jnp.int32)
     saved = jnp.zeros((qn,), jnp.int32)
+    saved_x = jnp.zeros((qn,), jnp.int32)
     total_rounds = jnp.zeros((), jnp.int32)
     seed_id, seed_key = entry, e_key
 
@@ -919,7 +955,7 @@ def device_range_search(ds: DeviceSegment, queries: jnp.ndarray,
                                      res_size)
         state = (cand_id, cand_key,
                  _open_keys(cand_id, cand_key, visited), visited,
-                 r_id, r_key, io, t0, hops, saved,
+                 r_id, r_key, io, t0, hops, saved, saved_x,
                  jnp.zeros((), jnp.int32))
         # trace stays off here: RS re-enters the loop per round, so a
         # stitched multi-round log has no single ``rounds`` to fold
@@ -928,9 +964,11 @@ def device_range_search(ds: DeviceSegment, queries: jnp.ndarray,
             ds, queries, lut, state, res_size=res_size, candidates=c,
             sigma=p.sigma, max_hops=p.max_hops, metric=metric,
             fetch_width=fw, fetch_impl=p.fetch_impl,
-            compact_frac=p.compact_frac, trace=False)
+            compact_frac=p.compact_frac, trace=False,
+            pipeline_dma=p.pipeline_dma,
+            round_tile_cap=p.round_tile_cap)
         (_, _, _, visited, res_id, res_key, io, t0, hops, saved,
-         t) = state
+         saved_x, t) = state
         total_rounds = total_rounds + t
         if c * 2 > k_cap:
             break
@@ -947,4 +985,4 @@ def device_range_search(ds: DeviceSegment, queries: jnp.ndarray,
         dists = jnp.pad(dists, ((0, 0), (0, pad)),
                         constant_values=jnp.inf)
     return DeviceRangeResult(ids, dists, dists <= radius, io, t0,
-                             saved, total_rounds)
+                             saved, saved_x, total_rounds)

@@ -34,11 +34,17 @@ Pricing summary (repro.io):
   * a demand read that joins an already-in-flight fetch
     (``inflight_joins``) pays only the modeled residual service time
     (``join_residual`` × ``t_block_io``) instead of a new round trip;
-  * a cold block touch that joins another query's gather of the same
+  * a cold block touch that joins another request's gather of the same
     block *in the same device round* (``dedup_saved_fetches`` — the
     batched device search unions per-round block requests across the
-    batch) pays ``t_dedup_hit`` (a VMEM broadcast of the one DMA that
-    did happen) instead of its own ``t_block_io``;
+    WHOLE batch, DESIGN.md §8; ``dedup_cross_tile`` counts the subset
+    joining across kernel query tiles) pays ``t_dedup_hit`` (a VMEM
+    broadcast of the one DMA that did happen) instead of its own
+    ``t_block_io``;
+  * stats flagged ``dma_pipelined`` (the fused kernel's double-buffered
+    cold gather) overlap the round-granular streaming-DMA term with the
+    occupancy-weighted round compute — ``max(dma, compute)`` per round
+    instead of their sum; unflagged stats price exactly as before;
   * stats that carry the batched loop's round count (``batch_rounds`` >
     0, set by ``from_device(rounds=...)``) switch a cost model with
     ``t_round`` > 0 into the *round-granular* regime (DESIGN.md §5):
@@ -76,8 +82,30 @@ class IOStats:
     join_residual: float = 0.0  # Σ residual service fraction over joins
     completion_reorders: int = 0  # completions delivered out of submit order
     dedup_saved_fetches: int = 0  # cold device touches that joined another
-    #                               query's same-round gather of the same
-    #                               block (cross-query dedup — no own DMA)
+    #                               request's same-round gather of the same
+    #                               block (cross-query dedup — no own DMA).
+    #                               Scope: the WHOLE device batch, the
+    #                               union the fused kernel's pass 1 dedups
+    #                               across (DESIGN.md §8) — NOT one kernel
+    #                               query tile. Additive under merge, like
+    #                               every join counter.
+    dedup_cross_tile: int = 0   # the cross-tile SUBSET of
+    #                             dedup_saved_fetches: joins whose paying
+    #                             requester sits in a different round-
+    #                             kernel query tile — what batch scope
+    #                             wins over per-tile dedup (whose modeled
+    #                             DMAs = cache_misses - (dedup_saved_fetches
+    #                             - dedup_cross_tile)). Always <= the
+    #                             total; additive under merge (both count
+    #                             joins, so a sum of queries' splits is
+    #                             the batch's split).
+    dma_pipelined: int = 0      # 1 when the fused kernel ran its cold
+    #                             gather double-buffered (params.
+    #                             pipeline_dma): the CostModel then
+    #                             overlaps the streaming cold-DMA term
+    #                             with round compute — max(dma, compute)
+    #                             per round. A flag, not a count: merged
+    #                             by max (a batch is pipelined or not).
     rounds_active_weight: float = 0.0  # Σ hops / batch rounds: the share
     #                               of the batched loop's rounds this query
     #                               was live for (divergence occupancy)
@@ -94,9 +122,10 @@ class IOStats:
     dist_comps: int = 0         # full-precision distance computations
     pq_comps: int = 0           # ADC distance computations
 
-    # merged with max(), not +: peaks, hop marks and the (batch-shared)
-    # round count are not additive
-    _MAX_FIELDS = ("hops_to_best", "inflight_peak", "batch_rounds")
+    # merged with max(), not +: peaks, hop marks, the (batch-shared)
+    # round count and the pipelined flag are not additive
+    _MAX_FIELDS = ("hops_to_best", "inflight_peak", "batch_rounds",
+                   "dma_pipelined")
 
     def merge(self, other: "IOStats") -> None:
         new_trips = self.io_round_trips + other.io_round_trips
@@ -118,47 +147,62 @@ class IOStats:
 
     @classmethod
     def from_device(cls, io, tier0_hits=0, hops=0, dedup_saved=0,
-                    rounds=0) -> "IOStats":
+                    rounds=0, dedup_cross=0,
+                    pipelined=False) -> "IOStats":
         """Counters of one query's device search (``device_anns``):
         ``io`` cold block touches, ``tier0_hits`` touches served by the
         VMEM hot-tile pack, ``hops`` DMA round trips, ``dedup_saved``
-        cold touches that joined another query's same-round gather
-        (so only ``io - dedup_saved`` DMAs actually issued), ``rounds``
-        total loop rounds of the batch this query rode in. Cold DMAs
-        price as misses (one trip each — batched-width amortization is
-        already in the hop count), hot touches at ``t_tier0_hit``,
-        deduped touches at ``t_dedup_hit``."""
+        cold touches that joined another request's same-round gather —
+        batch scope (so only ``io - dedup_saved`` DMAs actually
+        issued), ``dedup_cross`` its cross-tile subset, ``rounds``
+        total loop rounds of the batch this query rode in,
+        ``pipelined`` whether the kernel double-buffered its cold
+        gather. Cold DMAs price as misses (one trip each —
+        batched-width amortization is already in the hop count), hot
+        touches at ``t_tier0_hit``, deduped touches at
+        ``t_dedup_hit``."""
         io, t0, h = int(io), int(tier0_hits), int(hops)
         saved = min(int(dedup_saved), io)
+        cross = min(int(dedup_cross), saved)
         return cls(block_reads=io + t0, io_round_trips=io - saved,
                    cache_misses=io, tier0_hits=t0, hops=h,
-                   dedup_saved_fetches=saved, batch_rounds=int(rounds),
+                   dedup_saved_fetches=saved, dedup_cross_tile=cross,
+                   dma_pipelined=int(bool(pipelined)),
+                   batch_rounds=int(rounds),
                    rounds_active_weight=(h / int(rounds)
                                          if int(rounds) > 0 else 0.0))
 
     @classmethod
     def from_device_batch(cls, io, tier0_hits, hops, dedup_saved,
-                          rounds) -> "IOStats":
+                          rounds, dedup_cross=None,
+                          pipelined=False) -> "IOStats":
         """Fold one batch's per-query device columns (the arrays a
         ``DeviceSearchResult`` / ``make_search_step`` rank emits) into
         one merged ``IOStats``: counters sum, ``batch_rounds`` is the
         shared round count, ``rounds_active_weight`` becomes the mean
-        number of live queries per round. This is THE fold both the
-        serving ``RepackScheduler`` objective and the benchmark QPS
-        model (``paper_tables.mesh_qps_estimate``) price — one modeled
-        step time, two consumers."""
+        number of live queries per round. ``dedup_cross`` (the
+        cross-tile column) defaults to zeros for pre-split callers.
+        This is THE fold both the serving ``RepackScheduler``
+        objective and the benchmark QPS model
+        (``paper_tables.mesh_qps_estimate``) price — one modeled step
+        time, two consumers."""
+        if dedup_cross is None:
+            dedup_cross = [0] * len(io)
         agg = cls()
-        for i, t0, h, sv in zip(io, tier0_hits, hops, dedup_saved):
-            agg.merge(cls.from_device(i, t0, h, sv, rounds))
+        for i, t0, h, sv, cx in zip(io, tier0_hits, hops, dedup_saved,
+                                    dedup_cross):
+            agg.merge(cls.from_device(i, t0, h, sv, rounds, cx,
+                                      pipelined))
         return agg
 
     @classmethod
     def fold_rank_batches(cls, columns) -> "dict[int, IOStats]":
         """Rank-keyed fold of a mesh-served step: ``columns[rank] =
-        (io, tier0_hits, hops, dedup_saved, rounds)`` — each rank's
-        per-query device columns, folded per rank with
-        ``from_device_batch``. This is THE shared mesh fold: the
-        router's windowed per-rank stats, the scheduler objective and
+        (io, tier0_hits, hops, dedup_saved, rounds[, dedup_cross])`` —
+        each rank's per-query device columns, folded per rank with
+        ``from_device_batch`` (5-tuples price the cross-tile column as
+        zero). This is THE shared mesh fold: the router's windowed
+        per-rank stats, the scheduler objective and
         ``mesh_qps_estimate`` all price these same per-rank IOStats,
         and ``merge_ranks`` defines the one correct total."""
         return {int(r): cls.from_device_batch(*cols)
@@ -289,6 +333,20 @@ class CostModel:
                 + s.cache_hits * self.t_cache_hit
                 + s.tier2_hits * self.t_tier2_hit)
 
+    def _stream_dma(self, s: IOStats) -> float:
+        """The round-granular cold-DMA streaming term — the
+        ``t_batch_block``-rate part of ``_io_time`` (0 outside that
+        regime): what the double-buffered kernel puts in flight behind
+        round compute when ``dma_pipelined`` is set."""
+        if self.t_round <= 0.0 or s.batch_rounds <= 0:
+            return 0.0
+        t_batch = self.t_batch_block if self.t_batch_block else \
+            self.t_block_io
+        full_reads = max(s.block_reads - s.tier0_hits - s.cache_hits
+                        - s.tier2_hits - s.inflight_joins
+                        - s.dedup_saved_fetches, 0)
+        return full_reads * t_batch
+
     def latency_us(self, s: IOStats, pipeline: bool = False) -> float:
         t_io = self._io_time(s)
         t_comp = (s.dist_comps * self.t_dist + s.pq_comps * self.t_pq
@@ -298,6 +356,18 @@ class CostModel:
             # §5.1: DR and DC run concurrently; serial residue is the max
             # plus the non-overlappable other time.
             return max(t_io, t_comp) + t_other
+        if s.dma_pipelined and self.t_round > 0.0 and s.batch_rounds > 0:
+            # DESIGN.md §8: the double-buffered cold gather overlaps the
+            # streaming DMA term with the occupancy-weighted round
+            # compute — per round the kernel pays max(dma, compute),
+            # never their sum. The lockstep chain (issue + barrier) and
+            # every non-round term stay serial. Stats without the flag
+            # (pipeline_dma off, per-tile kernels, host paths) price
+            # exactly as before.
+            stream = self._stream_dma(s)
+            rcomp = self._round_comp(s)
+            return ((t_io - stream) + (t_comp - rcomp)
+                    + max(stream, rcomp) + t_other)
         return t_io + t_comp + t_other
 
     def breakdown(self, s: IOStats, pipeline: bool = False) -> dict:
@@ -309,9 +379,13 @@ class CostModel:
         return {"t_io_us": t_io, "t_comp_us": t_comp, "t_other_us": t_other,
                 "total_us": total,
                 # round-granular terms (0 outside that regime): the
-                # lockstep chain and the occupancy-weighted compute
+                # lockstep chain, the occupancy-weighted compute and
+                # the streaming cold-DMA share a dma_pipelined batch
+                # overlaps with compute (max(dma, compute) per round)
                 "t_round_chain_us": self._round_chain(s),
                 "t_round_comp_us": self._round_comp(s),
+                "t_dma_stream_us": self._stream_dma(s),
+                "dma_pipelined": bool(s.dma_pipelined),
                 "io_frac": t_io / max(t_io + t_comp + t_other, 1e-9),
                 # per-tier demand-read service counts (tier 0 = device
                 # VMEM hot tiles, 1 = host full blocks, 2 = compressed

@@ -304,6 +304,24 @@ class DeviceSearchParams:
     #                               and return it on the result; (ids,
     #                               dists) and every counter are
     #                               bit-identical on or off
+    pipeline_dma: bool = True     # double-buffer the fused kernel's
+    #                               cold-block gather (make_async_copy
+    #                               two-slot schedule) on compiled runs;
+    #                               interpret always takes the straight-
+    #                               line fallback, and the jnp fetch
+    #                               stage ignores it. Payloads are
+    #                               bit-identical on or off — only the
+    #                               DMA schedule (and the cost model's
+    #                               max(dma, compute) overlap pricing,
+    #                               via IOStats.dma_pipelined) moves.
+    round_tile_cap: int = 0       # cap on the round kernel's query-tile
+    #                               size (0 = the kernel's BQ ceiling).
+    #                               Dedup is batch-scope regardless; the
+    #                               tile is the idle-skip/compaction
+    #                               granularity and the intra- vs
+    #                               cross-tile accounting boundary —
+    #                               tests/benches shrink it to exercise
+    #                               multi-tile batches cheaply.
 
     def __post_init__(self):
         if self.k < 1 or self.candidates < self.k:
@@ -318,6 +336,8 @@ class DeviceSearchParams:
                 f"unknown fetch_impl {self.fetch_impl!r} (fused | jnp)")
         if not (0.0 <= self.compact_frac <= 1.0):
             raise ValueError("compact_frac must be in [0, 1]")
+        if self.round_tile_cap < 0:
+            raise ValueError("round_tile_cap must be >= 0 (0 = BQ)")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -5,9 +5,15 @@
 #   tier0_fetch — fused tier-0 probe + gather + rank: the device search's
 #                 ISSUE-3 fetch stage (VMEM hot-tile hit or HBM block DMA)
 #                 + fused_round, the divergence-aware batched round:
-#                 probe + cross-query-deduped gather + rank + top-M order
+#                 whole-batch sorted-unique dedup + once-per-distinct-
+#                 block gather (double-buffered DMA when compiled) +
+#                 per-tile broadcast + rank + top-M expansion order
+#   dedup       — the shared sorted-unique / join-mask helpers both the
+#                 kernel's union pass and the search loop's accounting
+#                 mirror group duplicates with (they must never drift)
 # Each kernel: <name>.py (pl.pallas_call + BlockSpec) with a pure-jnp
 # oracle in ref.py and the jit'd dispatch wrapper in ops.py.
+from repro.kernels.dedup import join_mask, sorted_unique_ranks
 from repro.kernels.ops import (pairwise_l2, pq_adc_batch, block_rank,
                                tier0_rank, fused_round, round_tile,
                                set_interpret, interpret_default)

@@ -85,28 +85,36 @@ def block_rank(queries: jnp.ndarray, tiles: jnp.ndarray, top_m: int,
     return d[: queries.shape[0]], idx[: queries.shape[0]]
 
 
-def round_tile(qn: int) -> int:
-    """The query-tile size the fused round kernel runs at for a batch
-    of ``qn`` — also the scope of its cross-query block dedup (the
-    search loop's ``dedup_saved`` accounting segments by this)."""
-    return min(_t0.BQ, max(8, qn))
+def round_tile(qn: int, cap: int = 0) -> int:
+    """The query-tile size the fused round kernel's rank pass runs at
+    for a batch of ``qn`` (``cap`` > 0 overrides the ``BQ`` ceiling —
+    ``DeviceSearchParams.round_tile_cap``, the knob the cross-tile
+    sweeps/tests force multi-tile batches with). Since the batch-scope
+    rework (DESIGN.md §8) dedup spans the WHOLE batch; the tile is only
+    the idle-skip / compaction granularity and the intra- vs cross-tile
+    boundary of the split ``dedup_saved`` accounting."""
+    lim = cap if cap > 0 else _t0.BQ
+    return min(lim, max(8, qn))
 
 
 @functools.partial(jax.jit,
                    static_argnames=("n_expand", "metric", "interpret",
-                                    "bq"))
+                                    "bq", "pipeline_dma", "_force_dma"))
 def fused_round(queries: jnp.ndarray, u: jnp.ndarray,
                 block_of: jnp.ndarray, hot_slot_of: jnp.ndarray,
                 hot_vecs: jnp.ndarray, hot_vid: jnp.ndarray,
                 hot_nbrs: jnp.ndarray, vecs: jnp.ndarray,
                 vid: jnp.ndarray, nbrs: jnp.ndarray, n_expand: int,
                 metric: str = "l2", interpret: bool = None,
-                bq: int = None):
+                bq: int = None, pipeline_dma: bool = False,
+                _force_dma: bool = False):
     """Fused per-round fetch pipeline of the batched device search:
-    tier-0 probe + cross-query-deduped gather + exact distances +
-    per-query top-``n_expand`` expansion order, one kernel pass.
+    whole-batch sorted-unique dedup (pass 1), once-per-distinct-block
+    gather — double-buffered when ``pipeline_dma`` is on and the
+    kernels compile (pass 2a) — then per-tile broadcast + exact
+    distances + per-query top-``n_expand`` expansion order (pass 2b).
     Padded query rows carry ``u = -1`` (converged), so all-pad tiles
-    take the kernel's skip path; their outputs are sliced off."""
+    take the rank kernel's skip path; their outputs are sliced off."""
     interpret = _INTERPRET if interpret is None else interpret
     bq = bq or round_tile(queries.shape[0])
     qp = _pad_rows(queries, bq)
@@ -116,7 +124,9 @@ def fused_round(queries: jnp.ndarray, u: jnp.ndarray,
     outs = _t0.fused_round(qp, up, block_of, hot_slot_of, hot_vecs,
                            hot_vid, hot_nbrs, vecs, vid, nbrs,
                            n_expand, metric=metric,
-                           interpret=interpret, bq=bq)
+                           interpret=interpret, bq=bq,
+                           pipeline_dma=pipeline_dma,
+                           _force_dma=_force_dma)
     return tuple(o[: queries.shape[0]] for o in outs)
 
 

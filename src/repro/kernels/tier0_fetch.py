@@ -1,4 +1,4 @@
-"""Fused tier-0 probe + gather + rank kernels (DESIGN.md §3.2, §4).
+"""Fused tier-0 probe + gather + rank kernels (DESIGN.md §3.2, §4, §8).
 
 Two generations of the device search's fetch stage live here:
 
@@ -9,23 +9,43 @@ block store on a miss (the DMA the cost model prices), and exact-rank
 all F*eps resident vertices against the query — one kernel, so hot hits
 never round-trip through HBM between probe and rank.
 
-``fused_round`` (ISSUE 4) — the whole per-round fetch pipeline of the
-*divergence-aware batched* search in one pass: derive the target blocks
-from the picked candidates, union the per-query requests of the tile
-into a sorted-unique block list (cross-query dedup — each distinct
-block's tile is gathered from HBM/the hot pack ONCE and broadcast to
-every requesting query), compute exact distances, and per-query
-top-``n_expand``-rank the masked selection key (the block-pruning order
-the search loop expands in). A tile whose queries are all converged
-(every ``u`` slot is -1 — what active-query compaction clusters) skips
-the gather+rank body entirely and writes masked sentinels.
+``fused_round`` (ISSUE 4, reworked batch-scope in ISSUE 8) — the whole
+per-round fetch pipeline of the *divergence-aware batched* search as a
+two-pass batch-scope pipeline:
+
+  * **pass 1** (plain jnp, traced into the surrounding jit): derive the
+    target blocks from the picked candidates and union them into the
+    whole-batch sorted-unique block list via the shared
+    ``kernels.dedup`` helper — one list for ALL Q x F requests, not one
+    per kernel query tile — plus the flat-slot -> unique-rank map every
+    query tile carries into pass 2 (an SMEM-sized i32 [BQ, F] block);
+  * **pass 2a** (``gather_unique``, grid over unique-block chunks):
+    copy each distinct block's cold payload (vectors / ids / neighbor
+    rows) out of the HBM block store exactly ONCE batch-wide — the
+    modeled DMAs. When ``pipeline_dma`` is on (and the kernel is
+    compiled, not interpreted) the copies run the classic Pallas
+    ``make_async_copy`` double buffer: block j+1's HBM->VMEM copy is
+    in flight while block j's tile is written, and across grid steps
+    the Pallas pipeline prefetches chunk i+1 during chunk i's compute
+    — the overlap ``CostModel`` prices as ``max(dma, compute)``.
+    Under ``interpret=True`` a straight-line fallback gathers the
+    chunk in one vector select — bit-identical payloads either way;
+  * **pass 2b** (``_rank_kernel``, grid over query tiles): probe the
+    tier-0 hot-slot map for the unique list, select each distinct
+    block's tile from the VMEM hot pack (hit — no DMA happened) or
+    the pass-2a cold copy, broadcast to requesting slots through the
+    rank map, compute exact distances, and per-query
+    top-``n_expand``-rank the masked selection key. A tile whose
+    queries are all converged (every ``u`` slot is -1 — what
+    active-query compaction clusters) skips the broadcast+rank body
+    entirely and writes masked sentinels.
 
 Distances use the same f32 sum-of-squared-differences (or negated IP)
 form as the pure-jnp fetch stage, keeping the fused and reference
 implementations bit-identical; the hot pack holds exact copies of the
-packed blocks, so tier-0 budget never changes (ids, dists) — only which
-source tier served the tile (the returned hit mask feeds the
-``IOStats.tier0_hits`` / DMA counters).
+packed blocks, so neither tier-0 budget nor dedup scope ever changes
+(ids, dists) — only which source tier served a tile and which counter
+(``io`` / ``tier0_hits`` / ``dedup_saved``) a touch lands in.
 """
 from __future__ import annotations
 
@@ -35,73 +55,151 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-BQ = 128
+from repro.kernels import dedup
+
+BQ = 128   # query-tile size of the rank pass
+RB = 128   # unique-block chunk size of the cold-gather pass
 
 
-def _probe_kernel(q_ref, b_ref, slot_ref, hot_ref, cold_ref,
-                  d_ref, hit_ref, *, metric: str):
-    q = q_ref[...].astype(jnp.float32)            # [BQ, D]
-    b = b_ref[...]                                # [BQ, F] i32
-    slot = slot_ref[...][b]                       # probe: [BQ, F]
-    hit = slot >= 0
-    hot_t = hot_ref[...][jnp.maximum(slot, 0)]    # [BQ, F, eps, D]
-    cold_t = cold_ref[...][b]                     # the modeled HBM DMA
-    t = jnp.where(hit[:, :, None, None], hot_t, cold_t)
-    bq, f, eps, d_dim = t.shape
-    t = t.reshape(bq, f * eps, d_dim).astype(jnp.float32)
-    if metric == "ip":
-        d = -jnp.einsum("qd,qed->qe", q, t)
-    else:
-        d = jnp.sum(jnp.square(t - q[:, None, :]), axis=-1)
-    d_ref[...] = d
-    hit_ref[...] = hit.astype(jnp.int32)
+# -------------------------------------------- pass 2a: unique cold gather
+
+def _gather_unique_kernel(uniq_ref, vecs_ref, vid_ref, nbrs_ref,
+                          tv_ref, ti_ref, tn_ref):
+    """Straight-line chunk gather (the ``interpret=True`` fallback and
+    the ``pipeline_dma=False`` path): copy the chunk's distinct blocks
+    out of the cold store in one vector gather."""
+    u = uniq_ref[...]                             # [RB] distinct blocks
+    tv_ref[...] = vecs_ref[...][u]
+    ti_ref[...] = vid_ref[...][u]
+    tn_ref[...] = nbrs_ref[...][u]
 
 
-def _round_kernel(q_ref, u_ref, bof_ref, slot_ref, hotv_ref, hotid_ref,
-                  hotn_ref, vecs_ref, vid_ref, nbrs_ref,
-                  d_ref, vout_ref, nout_ref, hit_ref, ord_ref,
-                  *, metric: str, n_expand: int):
+def _gather_unique_dma_kernel(uniq_ref, vecs_ref, vid_ref, nbrs_ref,
+                              tv_ref, ti_ref, tn_ref,
+                              vscr, iscr, nscr, sems):
+    """Double-buffered cold gather (the classic two-slot
+    ``make_async_copy`` schedule): while distinct block j's payload is
+    written to the output tile, the HBM copies of block j+1's vector /
+    id / neighbor rows are already in flight into the other scratch
+    slot — and across grid steps the Pallas pipeline prefetches chunk
+    i+1's operands during chunk i, so the fetch overlaps the rank
+    pass's distance+expansion compute. Payload-identical to the
+    straight-line kernel; only the schedule differs."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    rb = uniq_ref.shape[0]
+    u = uniq_ref[...]
+
+    def cold_dma(slot, j):
+        blk = u[j]
+        return (pltpu.make_async_copy(vecs_ref.at[pl.ds(blk, 1)],
+                                      vscr.at[slot], sems.at[slot, 0]),
+                pltpu.make_async_copy(vid_ref.at[pl.ds(blk, 1)],
+                                      iscr.at[slot], sems.at[slot, 1]),
+                pltpu.make_async_copy(nbrs_ref.at[pl.ds(blk, 1)],
+                                      nscr.at[slot], sems.at[slot, 2]))
+
+    for c in cold_dma(0, 0):                      # warm up slot 0
+        c.start()
+
+    def body(j, carry):
+        slot = jax.lax.rem(j, 2)
+
+        @pl.when(j + 1 < rb)
+        def _start_next():                        # overlap j's write
+            for c in cold_dma(1 - slot, j + 1):
+                c.start()
+
+        for c in cold_dma(slot, j):
+            c.wait()
+        tv_ref[pl.ds(j, 1)] = vscr[slot]
+        ti_ref[pl.ds(j, 1)] = iscr[slot]
+        tn_ref[pl.ds(j, 1)] = nscr[slot]
+        return carry
+
+    jax.lax.fori_loop(0, rb, body, 0)
+
+
+def gather_unique(uniq: jnp.ndarray, vecs: jnp.ndarray,
+                  vid: jnp.ndarray, nbrs: jnp.ndarray,
+                  interpret: bool = True, pipeline_dma: bool = False,
+                  rb: int = RB, _force_dma: bool = False):
+    """Pass 2a: copy every distinct block's cold payload exactly once.
+
+    uniq [R] i32 (the whole-batch sorted-unique union, 0-padded) ->
+    (tiles [R, eps, D], vid [R, eps] i32, nbrs [R, eps, Lam] i32).
+    The double-buffered DMA schedule runs when ``pipeline_dma`` is set
+    on a compiled (non-interpret) call; ``interpret=True`` takes the
+    straight-line fallback unless ``_force_dma`` exercises the DMA
+    path under the interpreter (the emulation tests)."""
+    r = uniq.shape[0]
+    rho, eps, d = vecs.shape
+    lam = nbrs.shape[2]
+    assert r % rb == 0, (r, rb)
+    grid = (r // rb,)
+    use_dma = _force_dma or (pipeline_dma and not interpret)
+    kernel = (_gather_unique_dma_kernel if use_dma
+              else _gather_unique_kernel)
+    scratch = []
+    if use_dma:
+        from jax.experimental.pallas import tpu as pltpu
+        scratch = [pltpu.VMEM((2, 1, eps, d), vecs.dtype),
+                   pltpu.VMEM((2, 1, eps), jnp.int32),
+                   pltpu.VMEM((2, 1, eps, lam), jnp.int32),
+                   pltpu.SemaphoreType.DMA((2, 3))]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((rb,), lambda i: (i,)),
+                  pl.BlockSpec((rho, eps, d), lambda i: (0, 0, 0)),
+                  pl.BlockSpec((rho, eps), lambda i: (0, 0)),
+                  pl.BlockSpec((rho, eps, lam), lambda i: (0, 0, 0))],
+        out_specs=[pl.BlockSpec((rb, eps, d), lambda i: (i, 0, 0)),
+                   pl.BlockSpec((rb, eps), lambda i: (i, 0)),
+                   pl.BlockSpec((rb, eps, lam), lambda i: (i, 0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((r, eps, d), vecs.dtype),
+                   jax.ShapeDtypeStruct((r, eps), jnp.int32),
+                   jax.ShapeDtypeStruct((r, eps, lam), jnp.int32)],
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(uniq, vecs, vid, nbrs)
+
+
+# ------------------------------------------- pass 2b: broadcast and rank
+
+def _rank_kernel(q_ref, u_ref, rank_ref, uniq_ref, slot_ref, hotv_ref,
+                 hotid_ref, hotn_ref, tv_ref, ti_ref, tn_ref,
+                 d_ref, vout_ref, nout_ref, hit_ref, ord_ref,
+                 *, metric: str, n_expand: int):
     u = u_ref[...]                                # [BQ, F] i32, -1 = idle
     bq, f = u.shape
-    eps, d_dim = vecs_ref.shape[1], vecs_ref.shape[2]
-    lam = nbrs_ref.shape[2]
+    eps, d_dim = tv_ref.shape[1], tv_ref.shape[2]
+    lam = tn_ref.shape[2]
 
     @pl.when((u >= 0).any())
     def _live_tile():
         q = q_ref[...].astype(jnp.float32)        # [BQ, D]
         valid = u >= 0
-        b = bof_ref[...][jnp.maximum(u, 0)]       # [BQ, F] target blocks
-        # --- cross-query dedup: sorted-unique union of the tile's block
-        # requests; every distinct block is gathered ONCE (ranks past
-        # the unique count gather a placeholder no slot maps to)
-        flat = b.reshape(-1)                      # [R]
-        r = flat.shape[0]
-        sort_idx = jnp.argsort(flat)              # stable
-        sb = flat[sort_idx]
-        first = jnp.concatenate(
-            [jnp.ones((1,), bool), sb[1:] != sb[:-1]])
-        rank = jnp.cumsum(first) - 1              # [R] slot -> unique rank
-        # duplicates write equal values, so the scatters are deterministic
-        blk_of_rank = jnp.zeros((r,), jnp.int32).at[rank].set(sb)
-        req_rank = jnp.zeros((r,), jnp.int32).at[sort_idx].set(
-            rank.astype(jnp.int32))               # flat slot -> unique rank
-        # --- tier-0 probe + the once-per-distinct-block gather
-        s = slot_ref[...][blk_of_rank]            # [R] hot slot (-1 = cold)
+        # --- tier-0 probe of the batch-unique list + hot/cold select:
+        # a hot block's tile comes from the VMEM pack (its pass-2a DMA
+        # never needed to happen), a cold one from the once-per-
+        # distinct-block copy pass 2a made
+        s = slot_ref[...][uniq_ref[...]]          # [R] hot slot (-1=cold)
         hot_u = s >= 0
-        s_safe = jnp.maximum(s, 0)
-        tiles_u = jnp.where(hot_u[:, None, None],
-                            hotv_ref[...][s_safe],
-                            vecs_ref[...][blk_of_rank])      # [R, eps, D]
-        vid_u = jnp.where(hot_u[:, None], hotid_ref[...][s_safe],
-                          vid_ref[...][blk_of_rank])         # [R, eps]
-        nbrs_u = jnp.where(hot_u[:, None, None],
-                           hotn_ref[...][s_safe],
-                           nbrs_ref[...][blk_of_rank])       # [R, eps, Lam]
+        ss = jnp.maximum(s, 0)
+        tiles_u = jnp.where(hot_u[:, None, None], hotv_ref[...][ss],
+                            tv_ref[...])          # [R, eps, D]
+        vid_u = jnp.where(hot_u[:, None], hotid_ref[...][ss],
+                          ti_ref[...])            # [R, eps]
+        nbrs_u = jnp.where(hot_u[:, None, None], hotn_ref[...][ss],
+                           tn_ref[...])           # [R, eps, Lam]
         # --- broadcast each distinct tile to its requesting slots
-        tiles = tiles_u[req_rank].reshape(bq, f * eps, d_dim)
-        vid = vid_u[req_rank].reshape(bq, f * eps)
-        nbrs = nbrs_u[req_rank].reshape(bq, f * eps, lam)
-        hit = hot_u[req_rank].reshape(bq, f)
+        # through the flat-slot -> unique-rank map pass 1 carried in
+        rk = rank_ref[...].reshape(-1)            # [BQ*F] unique ranks
+        tiles = tiles_u[rk].reshape(bq, f * eps, d_dim)
+        vid = vid_u[rk].reshape(bq, f * eps)
+        nbrs = nbrs_u[rk].reshape(bq, f * eps, lam)
+        hit = hot_u[rk].reshape(bq, f)
         # --- exact rank (same f32 form as the jnp reference)
         t32 = tiles.astype(jnp.float32)
         if metric == "ip":
@@ -126,8 +224,8 @@ def _round_kernel(q_ref, u_ref, bof_ref, slot_ref, hotv_ref, hotid_ref,
     @pl.when(~(u >= 0).any())
     def _idle_tile():
         # a fully-converged tile (what compaction clusters): skip the
-        # gather + rank entirely, emit masked sentinels the search loop
-        # never consumes (every downstream use is gated on u >= 0)
+        # broadcast + rank entirely, emit masked sentinels the search
+        # loop never consumes (every downstream use is gated on u >= 0)
         d_ref[...] = jnp.zeros((bq, f * eps), jnp.float32)
         vout_ref[...] = jnp.full((bq, f * eps), -1, jnp.int32)
         nout_ref[...] = jnp.full((bq, f * eps, lam), -1, jnp.int32)
@@ -141,36 +239,65 @@ def fused_round(queries: jnp.ndarray, u: jnp.ndarray,
                 hot_nbrs: jnp.ndarray, vecs: jnp.ndarray,
                 vid: jnp.ndarray, nbrs: jnp.ndarray, n_expand: int,
                 metric: str = "l2", interpret: bool = True,
-                bq: int = BQ):
-    """One search round's fetch pipeline, fused (see module docstring).
+                bq: int = BQ, pipeline_dma: bool = False,
+                _force_dma: bool = False):
+    """One search round's fetch pipeline, fused, batch-scope (see
+    module docstring).
 
     queries [Q, D]; u [Q, F] i32 picked candidate ids (-1 = converged /
     empty slot); block_of [N]; hot_slot_of [rho]; hot pack [H, eps, ...];
     cold store [rho, eps, ...] ->
     (dists [Q, F*eps] f32, vid [Q, F*eps] i32, nbrs [Q, F*eps, Lam] i32,
-    hit [Q, F] i32, order [Q, n_expand] i32)."""
+    hit [Q, F] i32, order [Q, n_expand] i32).
+
+    Dedup scope is the WHOLE batch: every distinct block across all
+    Q x F requests is gathered once and broadcast — a request in tile 3
+    rides a copy tile 0's requests triggered. ``pipeline_dma``
+    double-buffers the cold gather on compiled calls (interpret always
+    takes the straight-line fallback unless ``_force_dma``)."""
     qn, d = queries.shape
     _, f = u.shape
+    assert qn % bq == 0, (qn, bq)
+
+    # --- pass 1: whole-batch sorted-unique union + slot -> rank map.
+    # Idle slots (u = -1) fold onto block 0's rank — harmless, their
+    # outputs are masked/skipped downstream; ranks past the distinct
+    # count keep the 0 placeholder no slot maps to.
+    b = block_of[jnp.maximum(u, 0)]               # [Q, F] target blocks
+    uniq, req_rank = dedup.sorted_unique_ranks(b.reshape(-1))
+    rank2d = req_rank.reshape(qn, f)
+
+    # --- pass 2a: copy each distinct block's cold payload exactly once
+    r = uniq.shape[0]
+    rb = min(RB, r)
+    pad = (-r) % rb
+    uniq_p = uniq if pad == 0 else jnp.pad(uniq, (0, pad))
+    tv, ti, tn = gather_unique(
+        uniq_p, vecs, vid, nbrs, interpret=interpret,
+        pipeline_dma=pipeline_dma, rb=rb, _force_dma=_force_dma)
+    tv, ti, tn = tv[:r], ti[:r], tn[:r]
+
+    # --- pass 2b: probe + hot/cold select + broadcast + rank per tile
     n = block_of.shape[0]
     rho, eps, _ = vecs.shape
     h = hot_vecs.shape[0]
     lam = nbrs.shape[2]
-    assert qn % bq == 0, (qn, bq)
     grid = (qn // bq,)
     return pl.pallas_call(
-        functools.partial(_round_kernel, metric=metric,
+        functools.partial(_rank_kernel, metric=metric,
                           n_expand=n_expand),
         grid=grid,
         in_specs=[pl.BlockSpec((bq, d), lambda i: (i, 0)),
                   pl.BlockSpec((bq, f), lambda i: (i, 0)),
-                  pl.BlockSpec((n,), lambda i: (0,)),
+                  pl.BlockSpec((bq, f), lambda i: (i, 0)),
+                  pl.BlockSpec((r,), lambda i: (0,)),
                   pl.BlockSpec((rho,), lambda i: (0,)),
                   pl.BlockSpec((h, eps, d), lambda i: (0, 0, 0)),
                   pl.BlockSpec((h, eps), lambda i: (0, 0)),
                   pl.BlockSpec((h, eps, lam), lambda i: (0, 0, 0)),
-                  pl.BlockSpec((rho, eps, d), lambda i: (0, 0, 0)),
-                  pl.BlockSpec((rho, eps), lambda i: (0, 0)),
-                  pl.BlockSpec((rho, eps, lam), lambda i: (0, 0, 0))],
+                  pl.BlockSpec((r, eps, d), lambda i: (0, 0, 0)),
+                  pl.BlockSpec((r, eps), lambda i: (0, 0)),
+                  pl.BlockSpec((r, eps, lam), lambda i: (0, 0, 0))],
         out_specs=[pl.BlockSpec((bq, f * eps), lambda i: (i, 0)),
                    pl.BlockSpec((bq, f * eps), lambda i: (i, 0)),
                    pl.BlockSpec((bq, f * eps, lam), lambda i: (i, 0, 0)),
@@ -182,8 +309,8 @@ def fused_round(queries: jnp.ndarray, u: jnp.ndarray,
                    jax.ShapeDtypeStruct((qn, f), jnp.int32),
                    jax.ShapeDtypeStruct((qn, n_expand), jnp.int32)],
         interpret=interpret,
-    )(queries, u, block_of, hot_slot_of, hot_vecs, hot_vid, hot_nbrs,
-      vecs, vid, nbrs)
+    )(queries, u, rank2d, uniq, hot_slot_of, hot_vecs, hot_vid,
+      hot_nbrs, tv, ti, tn)
 
 
 def tier0_fetch_rank(queries: jnp.ndarray, blocks: jnp.ndarray,
@@ -213,3 +340,22 @@ def tier0_fetch_rank(queries: jnp.ndarray, blocks: jnp.ndarray,
                    jax.ShapeDtypeStruct((qn, f), jnp.int32)],
         interpret=interpret,
     )(queries, blocks, hot_slot_of, hot_vecs, cold_vecs)
+
+
+def _probe_kernel(q_ref, b_ref, slot_ref, hot_ref, cold_ref,
+                  d_ref, hit_ref, *, metric: str):
+    q = q_ref[...].astype(jnp.float32)            # [BQ, D]
+    b = b_ref[...]                                # [BQ, F] i32
+    slot = slot_ref[...][b]                       # probe: [BQ, F]
+    hit = slot >= 0
+    hot_t = hot_ref[...][jnp.maximum(slot, 0)]    # [BQ, F, eps, D]
+    cold_t = cold_ref[...][b]                     # the modeled HBM DMA
+    t = jnp.where(hit[:, :, None, None], hot_t, cold_t)
+    bq, f, eps, d_dim = t.shape
+    t = t.reshape(bq, f * eps, d_dim).astype(jnp.float32)
+    if metric == "ip":
+        d = -jnp.einsum("qd,qed->qe", q, t)
+    else:
+        d = jnp.sum(jnp.square(t - q[:, None, :]), axis=-1)
+    d_ref[...] = d
+    hit_ref[...] = hit.astype(jnp.int32)

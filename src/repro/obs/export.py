@@ -144,7 +144,8 @@ def timeline_from_round_log(records: Sequence, cost_model,
                + r.tier0 * cost_model.t_tier0_hit
                + r.joins * cost_model.t_dedup_hit)
         args = {"live": r.live, "cold": r.cold, "tier0": r.tier0,
-                "joins": r.joins, "compacted": r.compacted}
+                "joins": r.joins, "joins_x": r.joins_x,
+                "compacted": r.compacted}
         if batch:
             args["batch"] = batch
         tr.slice("device.round", ts_us=t, dur_us=max(dur, 0.0),

@@ -1,7 +1,7 @@
 """Per-round device search records (ROADMAP adaptive-plane v2, item 3).
 
 ``DeviceSearchParams.trace_rounds`` makes the batched while-loop in
-``repro.core.device_search`` carry a bounded ``[max_hops, 5] int32``
+``repro.core.device_search`` carry a bounded ``[max_hops, 6] int32``
 buffer; row ``t`` is written once per round, *before* compaction
 permutes the query rows, so every column is a batch-level sum or flag
 that is permutation-invariant by construction:
@@ -19,7 +19,8 @@ that is permutation-invariant by construction:
 The fold invariants (asserted in tests/test_trace_roundlog.py) tie the
 log exactly to the coarse ``IOStats`` totals the serving plane already
 accounts with: ``sum(live) == hops``, ``sum(cold) == io``,
-``sum(tier0) == tier0_hits``, ``sum(joins) == dedup_saved``, and
+``sum(tier0) == tier0_hits``, ``sum(joins) == dedup_saved``,
+``sum(joins_x) == dedup_cross``, and
 ``sum(live) / rounds == rounds_active_weight / batch_rounds`` — the
 round log is a lossless refinement of ``IOStats.from_device_batch``,
 not a second bookkeeping system that can drift from it.
@@ -31,7 +32,8 @@ from typing import Dict, List, Sequence
 
 import numpy as np
 
-ROUND_LOG_COLS = ("live", "cold", "tier0", "joins", "compacted")
+ROUND_LOG_COLS = ("live", "cold", "tier0", "joins", "joins_x",
+                  "compacted")
 N_ROUND_COLS = len(ROUND_LOG_COLS)
 
 
@@ -42,14 +44,15 @@ class RoundRecord:
     live: int        # queries active this round
     cold: int        # cold block DMAs issued (post-dedup)
     tier0: int       # tier-0 hot-tile hits
-    joins: int       # cross-query dedup joins
+    joins: int       # dedup joins (whole-batch scope)
+    joins_x: int     # cross-tile subset of ``joins``
     compacted: bool  # active-query compaction fired this round
 
 
 def fold_round_log(round_log, rounds: int) -> List[RoundRecord]:
     """Materialize the device buffer into exact per-round records.
 
-    ``round_log`` is the ``[max_hops, 5]`` array off the device (any
+    ``round_log`` is the ``[max_hops, 6]`` array off the device (any
     array-like); ``rounds`` is the loop's final trip count — rows at or
     beyond it are unwritten padding and are dropped."""
     log = np.asarray(round_log)
@@ -59,9 +62,11 @@ def fold_round_log(round_log, rounds: int) -> List[RoundRecord]:
     rounds = int(rounds)
     out = []
     for t in range(min(rounds, log.shape[0])):
-        live, cold, tier0, joins, compacted = (int(v) for v in log[t])
+        live, cold, tier0, joins, joins_x, compacted = (
+            int(v) for v in log[t])
         out.append(RoundRecord(round=t, live=live, cold=cold, tier0=tier0,
-                               joins=joins, compacted=bool(compacted)))
+                               joins=joins, joins_x=joins_x,
+                               compacted=bool(compacted)))
     return out
 
 
@@ -69,8 +74,8 @@ def round_log_totals(records: Sequence[RoundRecord]) -> Dict[str, float]:
     """Sum a folded log back down to the ``IOStats``-comparable totals.
 
     Matches ``IOStats.from_device_batch`` exactly: ``hops`` = total
-    query-rounds of liveness, ``io``/``tier0_hits``/``dedup_saved`` =
-    column sums, ``rounds`` = record count, ``rounds_active_weight`` =
+    query-rounds of liveness, ``io``/``tier0_hits``/``dedup_saved``/
+    ``dedup_cross`` = column sums, ``rounds`` = record count, ``rounds_active_weight`` =
     mean live fraction numerator (sum of live, to be divided by the
     batch width by the caller that knows it)."""
     return {
@@ -79,6 +84,7 @@ def round_log_totals(records: Sequence[RoundRecord]) -> Dict[str, float]:
         "io": sum(r.cold for r in records),
         "tier0_hits": sum(r.tier0 for r in records),
         "dedup_saved": sum(r.joins for r in records),
+        "dedup_cross": sum(r.joins_x for r in records),
         "compactions": sum(1 for r in records if r.compacted),
         "live_weight": sum(r.live for r in records),
     }

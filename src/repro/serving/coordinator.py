@@ -97,6 +97,7 @@ class SegmentServer:
         self.last_tier0_hits = np.asarray(r.tier0_hits)
         self.last_hops = np.asarray(r.hops)
         self.last_dedup_saved = np.asarray(r.dedup_saved)
+        self.last_dedup_cross = np.asarray(r.dedup_cross)
         self.last_rounds = int(r.rounds)
         # per-round trace buffer (params.trace_rounds; repro.obs) —
         # None when tracing is off
@@ -128,7 +129,10 @@ class SegmentServer:
         return {"io": self.last_io, "tier0_hits": self.last_tier0_hits,
                 "hops": self.last_hops,
                 "dedup_saved": self.last_dedup_saved,
-                "rounds": self.last_rounds}
+                "dedup_cross": self.last_dedup_cross,
+                "rounds": self.last_rounds,
+                "dma_pipelined": (self.params.pipeline_dma
+                                  and self.params.fetch_impl == "fused")}
 
     def repack_source(self):
         return self.host
@@ -311,7 +315,8 @@ class QueryCoordinator:
     # batches where the scheduler evaluated.
     STATS_SCHEMA = ("segments_searched", "total_block_reads",
                     "mean_block_reads_per_query", "total_tier0_hits",
-                    "total_dedup_saved", "deduped_block_reads",
+                    "total_dedup_saved", "total_dedup_cross",
+                    "deduped_block_reads",
                     "cache_hits", "cache_misses", "cache_hit_rate")
 
     def search(self, queries: np.ndarray, k: int = 10
@@ -332,7 +337,7 @@ class QueryCoordinator:
         targets = (self.prune_fn(queries) if self.prune_fn
                    else list(range(len(self.servers))))
         ids, dists, offs = [], [], []
-        total_io, total_t0, total_saved = 0, 0, 0
+        total_io, total_t0, total_saved, total_cross = 0, 0, 0, 0
         for si in targets:
             s = self.servers[si]
             if self.tracer is not None:
@@ -352,6 +357,7 @@ class QueryCoordinator:
             if bs:
                 total_t0 += int(np.asarray(bs["tier0_hits"]).sum())
                 total_saved += int(np.asarray(bs["dedup_saved"]).sum())
+                total_cross += int(np.asarray(bs["dedup_cross"]).sum())
             if self.metrics is not None:
                 # per-target attribution: which segment the reads hit
                 self.metrics.counter("serve.block_reads",
@@ -368,6 +374,9 @@ class QueryCoordinator:
                  # query's same-round gather — deduped_block_reads is
                  # what the device actually issued
                  "total_dedup_saved": total_saved,
+                 # the cross-tile subset of the joins — what batch-scope
+                 # dedup saved beyond the old per-tile kernel's scope
+                 "total_dedup_cross": total_cross,
                  "deduped_block_reads": total_io - total_saved}
         # repro.io: aggregate shared-cache counters from servers that
         # expose them, as deltas so every key in the dict is per-call
@@ -423,6 +432,8 @@ class QueryCoordinator:
             stats["total_tier0_hits"])
         m.counter("serve.total_dedup_saved").inc(
             stats["total_dedup_saved"])
+        m.counter("serve.total_dedup_cross").inc(
+            stats["total_dedup_cross"])
         m.counter("serve.cache_hits").inc(stats["cache_hits"])
         m.counter("serve.cache_misses").inc(stats["cache_misses"])
         m.gauge("serve.cache_hit_rate").set(stats["cache_hit_rate"])

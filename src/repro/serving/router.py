@@ -199,6 +199,7 @@ class MeshQueryRouter:
                     (r.hops * owni)[:, None] * col,
                     (r.tier0_hits * owni)[:, None] * col,
                     (r.dedup_saved * owni)[:, None] * col,
+                    (r.dedup_cross * owni)[:, None] * col,
                     r.rounds[None])
 
         def leaf_spec(a):
@@ -210,7 +211,8 @@ class MeshQueryRouter:
         from jax.sharding import PartitionSpec as P
         in_specs = (seg_specs, P(), P("model"))
         out_specs = (P(), P(), P(None, "model"), P(None, "model"),
-                     P(None, "model"), P(None, "model"), P("model"))
+                     P(None, "model"), P(None, "model"),
+                     P(None, "model"), P("model"))
         flag = ("check_vma" if "check_vma"
                 in inspect.signature(shard_map).parameters
                 else "check_rep")
@@ -292,20 +294,23 @@ class MeshQueryRouter:
         return ids, dists, stats
 
     def _account(self, out, meta) -> Tuple[np.ndarray, np.ndarray, Dict]:
-        ids, dists, io_c, hops_c, t0_c, sv_c, rounds = \
+        ids, dists, io_c, hops_c, t0_c, sv_c, cx_c, rounds = \
             [np.asarray(x) for x in out]
         w = self.world
         # THE shared mesh fold (DESIGN.md §7): per-rank IOStats from
         # the masked device columns; totals are defined ONLY as the
         # merge of the per-rank folds (rounds_active_weight is not
         # additive across ranks with different round counts)
+        pipelined = (self.search_params.pipeline_dma
+                     and self.search_params.fetch_impl == "fused")
         per_rank = IOStats.fold_rank_batches(
             {r: (io_c[:, r], t0_c[:, r], hops_c[:, r], sv_c[:, r],
-                 int(rounds[r])) for r in range(w)})
+                 int(rounds[r]), cx_c[:, r], pipelined)
+             for r in range(w)})
         total = IOStats.merge_ranks(per_rank)
         self.last_per_rank = per_rank
         self.last_stats = total
-        self._last_cols = (io_c, t0_c, hops_c, sv_c, rounds)
+        self._last_cols = (io_c, t0_c, hops_c, sv_c, cx_c, rounds)
         self.batches += 1
         self._since_eval += 1
 
@@ -354,6 +359,7 @@ class MeshQueryRouter:
             "total_block_reads": total.block_reads,
             "total_tier0_hits": total.tier0_hits,
             "total_dedup_saved": total.dedup_saved_fetches,
+            "total_dedup_cross": total.dedup_cross_tile,
             "rounds_max": total.batch_rounds,
             "per_rank_modeled_us": per_rank_us,
             # the mesh step is gated by its slowest rank — exactly the
@@ -432,11 +438,15 @@ class MeshQueryRouter:
         ``merge_ranks``)."""
         if self._last_cols is None:
             return {}
-        io_c, t0_c, hops_c, sv_c, rounds = self._last_cols
+        io_c, t0_c, hops_c, sv_c, cx_c, rounds = self._last_cols
         return {"io": io_c.sum(axis=1), "tier0_hits": t0_c.sum(axis=1),
                 "hops": hops_c.sum(axis=1),
                 "dedup_saved": sv_c.sum(axis=1),
-                "rounds": int(rounds.max())}
+                "dedup_cross": cx_c.sum(axis=1),
+                "rounds": int(rounds.max()),
+                "dma_pipelined": (self.search_params.pipeline_dma
+                                  and self.search_params.fetch_impl
+                                  == "fused")}
 
     _last_cols = None
 

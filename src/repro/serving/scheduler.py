@@ -161,7 +161,9 @@ class RepackScheduler:
             batch = IOStats.from_device_batch(
                 np.asarray(bs["io"]), np.asarray(bs["tier0_hits"]),
                 np.asarray(bs["hops"]), np.asarray(bs["dedup_saved"]),
-                int(bs["rounds"]))
+                int(bs["rounds"]),
+                np.asarray(bs["dedup_cross"]),
+                bool(bs.get("dma_pipelined", False)))
             self._server_stats.setdefault(id(s), IOStats()).merge(batch)
             self._step_us_sum += self.cost_model.latency_us(batch)
             self._step_batches += 1

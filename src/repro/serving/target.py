@@ -13,8 +13,9 @@ The protocol has a small REQUIRED core and optional capability hooks:
 
   required   ``offset``, ``num_vectors``, ``search(queries, k)``
   stats      ``batch_stats()`` — the last served batch's device
-             columns (``io``/``tier0_hits``/``hops``/``dedup_saved``
-             arrays + scalar ``rounds``), empty for targets without
+             columns (``io``/``tier0_hits``/``hops``/``dedup_saved``/
+             ``dedup_cross`` arrays + scalar ``rounds``), empty for
+             targets without
              device telemetry; ``lifetime_stats()`` — lifetime
              counters (cache tiers, router ranks)
   range      ``range_search(queries, radius, k_cap)``
@@ -42,7 +43,9 @@ import numpy as np
 
 # the batch_stats() keys a device-telemetry-bearing target must emit
 # together — the exact columns ``IOStats.from_device_batch`` folds
-BATCH_STAT_KEYS = ("io", "tier0_hits", "hops", "dedup_saved", "rounds")
+# (``dedup_cross`` is the cross-tile subset of ``dedup_saved``)
+BATCH_STAT_KEYS = ("io", "tier0_hits", "hops", "dedup_saved",
+                   "dedup_cross", "rounds")
 
 
 @runtime_checkable

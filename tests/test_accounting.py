@@ -150,6 +150,82 @@ def test_from_device_batch_fold():
     assert agg.hops == 14 and agg.dedup_saved_fetches == 2
 
 
+# ---------------------- split dedup counters + DMA pipelining (ISSUE 8)
+
+def test_dedup_split_counters_are_additive_and_bounded():
+    """ISSUE 8 satellite: dedup_saved_fetches is BATCH scope (the whole
+    union the kernel dedups across) and dedup_cross_tile is its
+    cross-tile subset — both additive under merge (a sum of queries'
+    splits is the batch's split), with the subset clamped to the
+    total."""
+    a = IOStats.from_device(10, 0, 5, 4, 8, dedup_cross=3)
+    b = IOStats.from_device(6, 0, 4, 2, 8, dedup_cross=1)
+    assert a.dedup_saved_fetches == 4 and a.dedup_cross_tile == 3
+    a.merge(b)
+    assert a.dedup_saved_fetches == 6          # additive
+    assert a.dedup_cross_tile == 4             # additive
+    # the subset can never exceed the total it refines
+    c = IOStats.from_device(5, 0, 3, 2, 8, dedup_cross=9)
+    assert c.dedup_cross_tile == c.dedup_saved_fetches == 2
+    # per-tile dedup's modeled DMAs are reconstructible from the split:
+    # io - (saved - cross) >= io - saved (batch scope saves more)
+    tile_dma = a.cache_misses - (a.dedup_saved_fetches
+                                 - a.dedup_cross_tile)
+    assert tile_dma == 14 > a.io_round_trips == 10
+
+
+def test_dma_pipelined_flag_merges_by_max():
+    """dma_pipelined is a flag (the batch ran double-buffered), not a
+    count: max-merged like batch_rounds, never summed."""
+    a = IOStats.from_device(4, 0, 2, 0, 4, pipelined=True)
+    b = IOStats.from_device(4, 0, 2, 0, 4, pipelined=True)
+    a.merge(b)
+    assert a.dma_pipelined == 1
+    off = IOStats.from_device(4, 0, 2, 0, 4)
+    assert off.dma_pipelined == 0
+
+
+def test_from_device_batch_folds_cross_column():
+    io, t0 = [10, 4, 0], [3, 1, 0]
+    hops, sv, cx = [6, 8, 0], [2, 1, 0], [1, 1, 0]
+    agg = IOStats.from_device_batch(io, t0, hops, sv, 8, cx, True)
+    assert agg.dedup_saved_fetches == 3
+    assert agg.dedup_cross_tile == 2
+    assert agg.dma_pipelined == 1
+    # pre-split callers (5-column folds) price the subset as zero
+    legacy = IOStats.from_device_batch(io, t0, hops, sv, 8)
+    assert legacy.dedup_cross_tile == 0
+    assert legacy.dedup_saved_fetches == 3
+    assert legacy.dma_pipelined == 0
+
+
+def test_pipelined_pricing_overlaps_stream_with_round_comp():
+    """DESIGN.md §8: with dma_pipelined set, the round-granular model
+    prices the streaming cold-DMA term against the occupancy-weighted
+    round compute as max(dma, compute) — strictly cheaper than the
+    serial sum whenever both are positive, never cheaper than the
+    bigger of the two, and a no-op on unflagged stats."""
+    cm = TPU_HBM_SEGMENT
+    cols = ([10, 4], [3, 1], [6, 8], [2, 0], 8)
+    serial = IOStats.from_device_batch(*cols)
+    piped = IOStats.from_device_batch(*cols, pipelined=True)
+    t_serial = cm.latency_us(serial)
+    t_piped = cm.latency_us(piped)
+    stream = cm._stream_dma(piped)
+    rcomp = cm.breakdown(piped)["t_round_comp_us"]
+    assert stream > 0 and rcomp > 0
+    assert t_piped == pytest.approx(t_serial - min(stream, rcomp))
+    assert t_piped < t_serial
+    # the outer §5.1 pipeline (max of whole t_io/t_comp) still wins —
+    # the per-round overlap never double-counts with it
+    assert cm.latency_us(piped, pipeline=True) == pytest.approx(
+        cm.latency_us(serial, pipeline=True))
+    # breakdown exposes the overlapped term
+    br = cm.breakdown(piped)
+    assert br["dma_pipelined"] is True
+    assert br["t_dma_stream_us"] == pytest.approx(stream)
+
+
 # ------------------------------------- round-granular cost model (d)
 
 def test_round_granular_pricing_monotone_in_occupancy():

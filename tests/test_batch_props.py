@@ -30,6 +30,9 @@ BATCH = 8
 P_BATCH = DeviceSearchParams(k=5, candidates=24, max_hops=48,
                              fetch_width=2, compact_frac=0.5)
 P_SINGLE = dataclasses.replace(P_BATCH, compact_frac=0.0)
+# force two 4-row round tiles so duplicate rows can straddle the tile
+# boundary: batch-scope dedup must still absorb them (ISSUE 8)
+P_TILED = dataclasses.replace(P_BATCH, round_tile_cap=4)
 
 
 @pytest.fixture(scope="module")
@@ -68,3 +71,41 @@ def test_batched_bit_identical_to_singletons(rows, packed_seg,
             assert saved[row] == io[row], (
                 f"duplicate row {row} must join every gather "
                 f"(saved {saved[row]} of {io[row]})")
+
+
+@pytest.mark.slow
+@given(rows=st.lists(st.integers(0, 23), min_size=BATCH,
+                     max_size=BATCH))
+@settings(max_examples=6, deadline=None)
+def test_tiled_batch_bit_identical_across_tile_boundary(rows, packed_seg,
+                                                        small_data):
+    """ISSUE 8 tentpole property: with the batch forced onto multiple
+    round tiles (``round_tile_cap=4`` -> two tiles of 4), dedup is
+    BATCH-scope — any permutation/duplication pattern, including twins
+    straddling the tile boundary, is bit-identical to the singleton
+    loop and a duplicate of an earlier row still has its whole cold
+    traffic absorbed. Cross-tile joins are a subset of the total."""
+    _, q = small_data
+    qb = q[np.asarray(rows)]
+    r = DS.device_anns(packed_seg, jnp.asarray(qb), P_TILED)
+    singles = {}
+    for row, qi in enumerate(rows):
+        if qi not in singles:
+            singles[qi] = DS.device_anns(
+                packed_seg, jnp.asarray(q[qi: qi + 1]), P_SINGLE)
+        r1 = singles[qi]
+        np.testing.assert_array_equal(np.asarray(r1.ids[0]),
+                                      np.asarray(r.ids[row]))
+        np.testing.assert_array_equal(np.asarray(r1.dists[0]),
+                                      np.asarray(r.dists[row]))
+    io = np.asarray(r.io)
+    saved = np.asarray(r.dedup_saved)
+    cross = np.asarray(r.dedup_cross)
+    assert (cross >= 0).all() and (cross <= saved).all()
+    assert (saved <= io).all()
+    for row in range(BATCH):
+        if rows[row] in rows[:row]:       # twin possibly in other tile
+            assert saved[row] == io[row], (
+                f"duplicate row {row} straddling a tile boundary must "
+                f"still join every gather (saved {saved[row]} of "
+                f"{io[row]})")

@@ -238,6 +238,63 @@ def test_dedup_counters_consistent(device_seg, small_data):
             > sv.mean()), "duplicate-heavy batch must dedup more"
 
 
+def test_cross_tile_dedup_on_duplicate_heavy_batch(device_seg,
+                                                   small_data):
+    """ISSUE 8 satellite (deterministic twin of the tiled hypothesis
+    property): with ``round_tile_cap=8`` a 16-row batch runs as two
+    round tiles, and rows 8..15 duplicating rows 0..7 sit in the
+    OTHER tile — their cold traffic joins batch-wide, and every one of
+    those joins is accounted in the cross-tile split."""
+    _, q = small_data
+    p = dataclasses.replace(P48, max_hops=64, fetch_width=2,
+                            compact_frac=0.0, round_tile_cap=8)
+    perm = list(range(8)) + list(range(8))    # tile 1 duplicates tile 0
+    r = DS.device_anns(device_seg, jnp.asarray(q[perm]), p)
+    io, sv, cx = (np.asarray(r.io), np.asarray(r.dedup_saved),
+                  np.asarray(r.dedup_cross))
+    assert (0 <= cx).all() and (cx <= sv).all() and (sv <= io).all()
+    # a duplicate row's every request was already issued by its twin in
+    # tile 0, so ALL its gathers join; the joins a tile-scope dedup
+    # could not have seen (earliest requester in the other tile) land
+    # in the cross-tile split — strictly positive for every dup row
+    assert io[8:].sum() > 0
+    np.testing.assert_array_equal(sv[8:], io[8:])
+    assert (cx[8:] > 0).all()
+    # tile-0 rows are the earliest requesters of every block they touch:
+    # any join they make is with another tile-0 row (intra-tile only)
+    assert (cx[:8] == 0).all()
+    # results are invariant to the tiling itself
+    r0 = DS.device_anns(device_seg, jnp.asarray(q[perm]),
+                        dataclasses.replace(p, round_tile_cap=0))
+    np.testing.assert_array_equal(np.asarray(r.ids), np.asarray(r0.ids))
+    np.testing.assert_array_equal(np.asarray(r.dists),
+                                  np.asarray(r0.dists))
+    np.testing.assert_array_equal(io, np.asarray(r0.io))
+    # single-tile run sees the same joins, just none of them cross-tile
+    np.testing.assert_array_equal(sv, np.asarray(r0.dedup_saved))
+    assert int(np.asarray(r0.dedup_cross).sum()) == 0
+
+
+def test_pipeline_dma_knob_is_payload_invariant(device_seg, small_data):
+    """ISSUE 8: ``pipeline_dma`` schedules the cold gather's DMAs — it
+    must never change results or any per-query counter (the kernel-
+    level payload identity of the double-buffered gather is pinned in
+    test_kernels; this guards the end-to-end wiring)."""
+    _, q = small_data
+    p = dataclasses.replace(P48, max_hops=64, fetch_width=2)
+    qb = jnp.asarray(q[:8])
+    r_on = DS.device_anns(device_seg, qb,
+                          dataclasses.replace(p, pipeline_dma=True))
+    r_off = DS.device_anns(device_seg, qb,
+                           dataclasses.replace(p, pipeline_dma=False))
+    for f in ("ids", "dists", "io", "tier0_hits", "hops",
+              "dedup_saved", "dedup_cross"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(r_on, f)), np.asarray(getattr(r_off, f)),
+            err_msg=f"pipeline_dma changed {f}")
+    assert int(r_on.rounds) == int(r_off.rounds)
+
+
 def test_tier0_repack_from_observed_frequencies(small_segment):
     """ISSUE 4 satellite (dynamic tier-0 admission): a drifted observed
     frequency profile re-ranks the pack — the observed-hot blocks enter

@@ -195,9 +195,9 @@ def test_validate_chrome_trace_catches_corruption():
 
 def test_timeline_from_round_log_modeled_durations():
     records = [RoundRecord(0, live=8, cold=10, tier0=2, joins=3,
-                           compacted=False),
+                           joins_x=1, compacted=False),
                RoundRecord(1, live=4, cold=6, tier0=1, joins=1,
-                           compacted=True)]
+                           joins_x=0, compacted=True)]
     cm = TPU_HBM_SEGMENT
     tr = timeline_from_round_log(records, cm)
     a, b = tr.by_name("device.round")
@@ -212,17 +212,18 @@ def test_timeline_from_round_log_modeled_durations():
 
 # ---------------------------------------------------------- round-log fold
 def test_fold_round_log_drops_padding_and_validates_shape():
-    log = np.zeros((6, 5), np.int32)
-    log[0] = [8, 10, 2, 3, 0]
-    log[1] = [4, 6, 1, 1, 1]
+    log = np.zeros((6, 6), np.int32)
+    log[0] = [8, 10, 2, 3, 1, 0]
+    log[1] = [4, 6, 1, 1, 0, 1]
     recs = fold_round_log(log, rounds=2)
     assert len(recs) == 2
-    assert recs[1] == RoundRecord(1, 4, 6, 1, 1, True)
+    assert recs[1] == RoundRecord(1, 4, 6, 1, 1, 0, True)
     tot = round_log_totals(recs)
     assert tot == {"rounds": 2, "hops": 12, "io": 16, "tier0_hits": 3,
-                   "dedup_saved": 4, "compactions": 1, "live_weight": 12}
+                   "dedup_saved": 4, "dedup_cross": 1, "compactions": 1,
+                   "live_weight": 12}
     with pytest.raises(ValueError):
-        fold_round_log(np.zeros((6, 4), np.int32), 2)
+        fold_round_log(np.zeros((6, 5), np.int32), 2)
 
 
 # ----------------------------------------------------------- perf artifact
