@@ -47,18 +47,21 @@ bench-device:
 	PYTHONPATH=src $(PY) -m benchmarks.run --only kernel_micro
 	PYTHONPATH=src $(PY) -m benchmarks.run --only roofline_tables
 
-# smoke lane for the divergence-aware batched path (ISSUE 4) and the
-# adaptive repack control loop (ISSUE 5): tiny sweeps with the
-# bit-identity / strict-DMA-cut assertions on (BENCH_SMOKE shrinks
-# them; both skip gracefully with no jax backend). The fresh
-# BENCH_device_batch_dedup.json is then gated against the committed
-# baseline (ISSUE 8): >10% regression of modeled DMA/query or modeled
-# latency fails the lane
+# smoke lane for the divergence-aware batched path (ISSUE 4), the
+# adaptive repack control loop (ISSUE 5) and the cross-round
+# speculative pipeline (ISSUE 9): tiny sweeps with the bit-identity /
+# strict-DMA-cut / strict-latency-win assertions on (BENCH_SMOKE
+# shrinks them; all skip gracefully with no jax backend). The fresh
+# BENCH_*.json artifacts are then gated against the committed
+# baselines (benchmarks/check_regression.py ARTIFACT_GATES,
+# direction-aware: >10% regression of any gated metric fails the lane)
 bench-batch:
 	BENCH_SMOKE=1 PYTHONPATH=src $(PY) -m benchmarks.run \
 		--only device_batch_dedup_sweep
 	BENCH_SMOKE=1 PYTHONPATH=src $(PY) -m benchmarks.run \
 		--only device_drift_repack_sweep
+	BENCH_SMOKE=1 PYTHONPATH=src $(PY) -m benchmarks.run \
+		--only device_speculate_sweep
 	PYTHONPATH=src $(PY) -m benchmarks.check_regression
 
 # the observability plane (repro.obs): trace/metrics/export/roundlog/
@@ -86,11 +89,14 @@ test-mesh:
 		PYTHONPATH=src $(PY) -m pytest -x -q tests/test_router.py
 
 # modeled-vs-served per-rank step time on the same forced mesh
-# (results/BENCH_mesh_router.json, uploaded by the CI mesh lane)
+# (results/BENCH_mesh_router.json, uploaded by the CI mesh lane), then
+# the slowest-rank step-time gate against the committed baseline
 bench-mesh:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 		BENCH_SMOKE=1 PYTHONPATH=src $(PY) -m benchmarks.run \
 		--only mesh_router_bench
+	PYTHONPATH=src $(PY) -m benchmarks.check_regression \
+		--artifact mesh_router
 
 dev-deps:
 	$(PY) -m pip install -r requirements-dev.txt

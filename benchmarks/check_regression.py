@@ -1,31 +1,33 @@
-"""Perf-regression gate over the BENCH_*.json artifacts (ISSUE 8).
+"""Perf-regression gate over the BENCH_*.json artifacts (ISSUE 8/9).
 
-Compares a freshly emitted ``results/BENCH_<name>.json`` (written by
-the bench smoke that just ran, e.g. ``make bench-batch``) against the
-committed baseline of the same artifact (``git show
-<ref>:results/BENCH_<name>.json``) and FAILS (exit 1) when any gated
-lower-is-better metric regressed by more than ``--threshold``
-(default 10%).
+Compares freshly emitted ``results/BENCH_<name>.json`` files (written
+by the bench smokes that just ran, e.g. ``make bench-batch`` /
+``make bench-mesh``) against the committed baselines of the same
+artifacts (``git show <ref>:results/BENCH_<name>.json``) and FAILS
+(exit 1) when any gated metric regressed by more than ``--threshold``
+(default 10%). Gates are direction-aware: a ``lower``-is-better
+metric fails when it RISES past the threshold, a ``higher``-is-better
+one (e.g. the drift-repack modeled-DMA cut) when it FALLS past it.
 
-Gated metrics for the batched-dedup artifact: ``modeled_dma_per_query``
-and ``modeled_latency_us_tpu`` — the two numbers the whole-batch dedup
-+ DMA pipelining work moves. Everything else shared between the two
-artifacts is printed as an informational delta. Metrics present only
-on one side (a PR adding or retiring a metric) are reported, never
-failed on, so the gate does not block schema evolution.
+``ARTIFACT_GATES`` names every gated artifact, its gated metrics with
+their directions, and its comparability keys. Everything else shared
+between the two payloads is printed as an informational delta. Metrics
+present only on one side (a PR adding or retiring a metric) are
+reported, never failed on, so the gate does not block schema
+evolution.
 
-The gate compares like with like or not at all: if the comparability
-keys of the configs differ (``batch``, ``smoke``, ``n``, ``dim``) the
+The gate compares like with like or not at all: if the artifact's
+comparability keys differ between the fresh and baseline configs, the
 numbers come from different sweeps and the gate SKIPS (exit 0 with a
 notice) instead of failing on an apples-to-oranges diff. Likewise when
 the baseline does not exist at the ref (first PR emitting the
 artifact) or the fresh file was never written (the sweep skipped for
 lack of a jax backend).
 
-Usage (what ``make bench-batch`` and the CI device lane run):
+Usage (what ``make bench-batch``/``bench-mesh`` and CI run):
 
-    python -m benchmarks.check_regression
-    python -m benchmarks.check_regression --artifact device_batch_dedup \
+    python -m benchmarks.check_regression                  # all gates
+    python -m benchmarks.check_regression --artifact mesh_router \
         --threshold 0.10 --ref HEAD
 """
 from __future__ import annotations
@@ -36,10 +38,36 @@ import os
 import subprocess
 import sys
 
-# lower-is-better metrics that fail the gate when they rise >threshold
-GATED_METRICS = ("modeled_dma_per_query", "modeled_latency_us_tpu")
-# config keys that must match for two artifacts to be comparable
-COMPARABILITY_KEYS = ("batch", "smoke", "n", "dim")
+# every gated artifact: metric -> direction ("lower" fails on a rise
+# past threshold, "higher" on a fall past it), plus the config keys
+# that must match for fresh and baseline to be comparable at all
+ARTIFACT_GATES = {
+    "device_batch_dedup": {
+        "metrics": {"modeled_dma_per_query": "lower",
+                    "modeled_latency_us_tpu": "lower"},
+        "compare_keys": ("batch", "smoke", "n", "dim"),
+    },
+    "mesh_router": {
+        # the mesh step is paced by its slowest rank — the one number
+        # the router, the scheduler and mesh_qps_estimate all optimize
+        "metrics": {"modeled_step_us_slowest_rank": "lower"},
+        "compare_keys": ("ranks", "segments", "n_per_seg", "n_query",
+                         "smoke", "dim"),
+    },
+    "device_drift_repack": {
+        # higher is better: the fraction of modeled DMAs the scheduled
+        # repack removed on the drifted stream
+        "metrics": {"modeled_dma_cut": "higher"},
+        "compare_keys": ("n", "dim", "tier0_frac", "hysteresis",
+                         "smoke"),
+    },
+    "device_speculate": {
+        "metrics": {"modeled_latency_us_speculative": "lower",
+                    "spec_hit_rate": "higher"},
+        "compare_keys": ("n", "dim", "tier0_frac", "fetch_width",
+                         "smoke"),
+    },
+}
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -74,6 +102,9 @@ def load_baseline(artifact: str, ref: str):
 
 
 def check(artifact: str, threshold: float, ref: str) -> int:
+    gate = ARTIFACT_GATES.get(artifact, {})
+    gated_metrics = gate.get("metrics", {})
+    compare_keys = gate.get("compare_keys", ())
     fresh, path = load_fresh(artifact)
     if fresh is None:
         print(f"[check_regression] SKIP: no fresh {path} (bench "
@@ -85,11 +116,12 @@ def check(artifact: str, threshold: float, ref: str) -> int:
               f"BENCH_{artifact}.json at {ref} — first emission passes")
         return 0
     fcfg, bcfg = fresh.get("config", {}), base.get("config", {})
-    mismatched = [k for k in COMPARABILITY_KEYS
+    mismatched = [k for k in compare_keys
                   if fcfg.get(k) != bcfg.get(k)]
     if mismatched:
-        print(f"[check_regression] SKIP: configs differ on "
-              f"{mismatched} (fresh {[fcfg.get(k) for k in mismatched]} "
+        print(f"[check_regression] SKIP BENCH_{artifact}.json: configs "
+              f"differ on {mismatched} "
+              f"(fresh {[fcfg.get(k) for k in mismatched]} "
               f"vs baseline {[bcfg.get(k) for k in mismatched]}) — "
               f"not comparable")
         return 0
@@ -107,34 +139,46 @@ def check(artifact: str, threshold: float, ref: str) -> int:
         f_v, b_v = fm[name], bm[name]
         rel = (f_v - b_v) / abs(b_v) if b_v else (0.0 if f_v == b_v
                                                   else float("inf"))
-        gated = name in GATED_METRICS
-        tag = "GATED" if gated else "info "
+        direction = gated_metrics.get(name)
+        tag = "GATED" if direction else "info "
         print(f"[check_regression] {tag} {name}: {b_v:.4g} -> "
               f"{f_v:.4g} ({rel:+.1%})")
-        if gated and rel > threshold:
+        # direction-aware: "lower" metrics regress by rising, "higher"
+        # metrics by falling
+        regressed = (direction == "lower" and rel > threshold) or \
+            (direction == "higher" and rel < -threshold)
+        if regressed:
+            verb = "rose" if direction == "lower" else "fell"
             failures.append(
-                f"{name} regressed {rel:+.1%} "
-                f"({b_v:.4g} -> {f_v:.4g}, threshold +{threshold:.0%})")
+                f"{name} {verb} {rel:+.1%} "
+                f"({b_v:.4g} -> {f_v:.4g}, threshold {threshold:.0%})")
     if failures:
         print(f"[check_regression] FAIL BENCH_{artifact}.json vs {ref}:")
         for f_msg in failures:
             print(f"  - {f_msg}")
         return 1
     print(f"[check_regression] OK: BENCH_{artifact}.json within "
-          f"+{threshold:.0%} of the {ref} baseline")
+          f"{threshold:.0%} of the {ref} baseline")
     return 0
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--artifact", default="device_batch_dedup",
-                    help="BENCH_<artifact>.json to gate")
+    ap.add_argument("--artifact", default="all",
+                    help="BENCH_<artifact>.json to gate, or 'all' for "
+                         "every ARTIFACT_GATES entry")
     ap.add_argument("--threshold", type=float, default=0.10,
-                    help="max allowed relative rise of a gated metric")
+                    help="max allowed relative regression of a gated "
+                         "metric (direction-aware)")
     ap.add_argument("--ref", default="HEAD",
                     help="git ref holding the committed baseline")
     args = ap.parse_args(argv)
-    return check(args.artifact, args.threshold, args.ref)
+    artifacts = (sorted(ARTIFACT_GATES) if args.artifact == "all"
+                 else [args.artifact])
+    rc = 0
+    for artifact in artifacts:
+        rc |= check(artifact, args.threshold, args.ref)
+    return rc
 
 
 if __name__ == "__main__":

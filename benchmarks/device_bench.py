@@ -391,6 +391,115 @@ def device_drift_repack_sweep():
         measured=False)
 
 
+def device_speculate_sweep():
+    """ISSUE 9 acceptance: the cross-round speculative pipeline.
+
+    At dup rate 0 (no duplicate queries — the worst case for dedup and
+    the point PR 8's ``pipeline_dma`` baseline is committed at), runs
+    the bench batch with speculation off (the pipelined baseline) and
+    on, across the fetch-width axis (wider frontiers give the
+    predictor more of round i+1's union to pre-issue):
+
+      * ``(ids, dists)`` and every non-speculative counter must be
+        bit-identical between the two runs — speculation is never
+        wrong, only late (asserted in-sweep, every width);
+      * the speculative modeled latency/query must sit STRICTLY below
+        the pipelined baseline at the preset width — the spec-hit
+        share of the DMA stream left the critical path and the
+        mis-speculation surcharge did not eat the win;
+      * the artifact records spec hit rate vs modeled latency at the
+        bench's fixed-recall operating point, so the predictor's
+        coverage is diffable across PRs.
+
+    ``BENCH_SMOKE=1`` shrinks the width axis. Skips gracefully when no
+    jax backend is available."""
+    try:
+        jax.devices()
+    except RuntimeError as e:           # no backend: record the skip
+        C.record("device_speculate_sweep", skipped=str(e))
+        return
+    smoke = bool(os.environ.get("BENCH_SMOKE"))
+    seg = C.bench_segment(shuffle="bnf")
+    ds = DS.from_segment(seg, tier0_frac=0.05)
+    q = C.queries()
+    truth = C.ground_truth()
+
+    def spec_lat(r, pipelined, speculative):
+        io = np.asarray(r.io)
+        rounds = int(r.rounds)
+        return float(np.mean([
+            TPU_HBM_SEGMENT.latency_us(IOStats.from_device(
+                i, t, h, sv, rounds, cx, pipelined, sh, sw, speculative))
+            for i, t, h, sv, cx, sh, sw in zip(
+                io, np.asarray(r.tier0_hits), np.asarray(r.hops),
+                np.asarray(r.dedup_saved), np.asarray(r.dedup_cross),
+                np.asarray(r.spec_hits), np.asarray(r.spec_wasted))]))
+
+    widths = (2,) if smoke else (1, 2, 3)
+    preset_fw = DEVICE_SEARCH_BATCH.fetch_width
+    art = {}
+    for fw in sorted(set(widths) | {preset_fw}):
+        p0 = dataclasses.replace(DEVICE_SEARCH_BATCH, fetch_width=fw)
+        p1 = dataclasses.replace(p0, speculate=True)
+        r0 = DS.device_anns(ds, jnp.asarray(q), p0)
+        r1 = DS.device_anns(ds, jnp.asarray(q), p1)
+        # speculation is never wrong, only late: results and every
+        # non-speculative counter are bit-identical
+        for f in ("ids", "dists", "io", "tier0_hits", "hops",
+                  "dedup_saved", "dedup_cross"):
+            assert np.array_equal(np.asarray(getattr(r0, f)),
+                                  np.asarray(getattr(r1, f))), \
+                f"speculation changed {f}"
+        assert int(r0.rounds) == int(r1.rounds)
+        assert int(np.asarray(r0.spec_hits).sum()) == 0
+        io_a = np.asarray(r1.io)
+        sv_a = np.asarray(r1.dedup_saved)
+        sh_a = np.asarray(r1.spec_hits)
+        sw_a = np.asarray(r1.spec_wasted)
+        hit_rate = float(sh_a.sum() / max((io_a - sv_a).sum(), 1))
+        lat_pipe = spec_lat(r0, pipelined=True, speculative=False)
+        lat_spec = spec_lat(r1, pipelined=True, speculative=True)
+        if fw == preset_fw:
+            # the acceptance gate: strictly below the PR-8 pipelined
+            # baseline at dup rate 0, waste surcharge included
+            assert lat_spec < lat_pipe, (
+                f"speculative pipeline must price strictly below the "
+                f"pipelined baseline ({lat_spec:.3f} !< {lat_pipe:.3f} "
+                f"us at fw={fw})")
+            art = {"recall": recall_at_k(np.asarray(r1.ids), truth),
+                   "hit_rate": hit_rate, "lat_pipe": lat_pipe,
+                   "lat_spec": lat_spec,
+                   "wasted": float(sw_a.mean()), "fw": fw}
+        C.record("device_speculate_sweep", fetch_width=fw,
+                 recall=recall_at_k(np.asarray(r1.ids), truth),
+                 spec_hit_rate=hit_rate,
+                 spec_hits_per_query=float(sh_a.mean()),
+                 spec_wasted_per_query=float(sw_a.mean()),
+                 modeled_dma_per_query=float((io_a - sv_a).mean()),
+                 modeled_latency_us_pipeline=lat_pipe,
+                 modeled_latency_us_speculative=lat_spec,
+                 modeled_latency_cut=1.0 - lat_spec / max(lat_pipe,
+                                                          1e-9))
+    C.perf_artifact(
+        "device_speculate", [
+            {"name": "spec_hit_rate", "value": art["hit_rate"],
+             "units": "ratio"},
+            {"name": "modeled_latency_us_pipeline",
+             "value": art["lat_pipe"], "units": "us"},
+            {"name": "modeled_latency_us_speculative",
+             "value": art["lat_spec"], "units": "us"},
+            {"name": "modeled_latency_cut",
+             "value": 1.0 - art["lat_spec"] / max(art["lat_pipe"], 1e-9),
+             "units": "ratio"},
+            {"name": "spec_wasted_per_query", "value": art["wasted"],
+             "units": "blocks"},
+            {"name": "recall_at_10", "value": art["recall"],
+             "units": "ratio"}],
+        config={"n": C.N_BASE, "dim": C.DIM, "tier0_frac": 0.05,
+                "fetch_width": art["fw"], "smoke": smoke},
+        measured=False)
+
+
 def batched_beam_throughput():
     """Device QPS scaling with batch size (TPU analogue of the paper's
     thread sweep, Fig. 12): one batched while_loop serves B queries."""

@@ -298,19 +298,27 @@ def mesh_qps_estimate():
     xs = [clustered_vectors(1500, C.DIM, num_clusters=16, seed=20 + s)
           for s in range(model_ranks)]
     q = query_set(np.concatenate(xs), batch, seed=9)
+    p = DEVICE_SEARCH_BATCH
+    pipelined = p.pipeline_dma and p.fetch_impl == "fused"
     rank_cols = {}
     for s, x in enumerate(xs):
         seg = build_segment(x, C.SEGMENT_BENCH)
         ds = DS.from_segment(seg, tier0_frac=0.1)
-        r = DS.device_anns(ds, jnp.asarray(q), DEVICE_SEARCH_BATCH)
+        r = DS.device_anns(ds, jnp.asarray(q), p)
+        # the FULL fold tuple — dedup_cross, the DMA-overlap flag and
+        # the speculation columns travel with the classic five, so this
+        # estimate prices exactly what the router fold prices (zeros
+        # when the preset does not speculate)
         rank_cols[s] = (np.asarray(r.io), np.asarray(r.tier0_hits),
                         np.asarray(r.hops), np.asarray(r.dedup_saved),
-                        int(r.rounds))
+                        int(r.rounds), np.asarray(r.dedup_cross),
+                        pipelined, np.asarray(r.spec_hits),
+                        np.asarray(r.spec_wasted), p.speculate)
     per_rank = IOStats.fold_rank_batches(rank_cols)
     step_us = []
     for s in range(model_ranks):
         agg = per_rank[s]
-        io, t0, hops, sv, rounds = rank_cols[s]
+        io, t0, hops, sv, rounds = rank_cols[s][:5]
         t_rank = cm.latency_us(agg)
         # acceptance invariant: the round-granular step time is strictly
         # monotone in the occupancy (rounds_active_weight) — a batch

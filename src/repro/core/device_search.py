@@ -23,6 +23,16 @@ module is the batched, jit'd production path:
     stably repacked to the front so converged queries cluster into
     whole kernel tiles the round kernel skips (the permutation is
     carried and inverted on exit — results are order-identical);
+  * ``speculate`` (DESIGN.md §9) pipelines rounds: while round i's
+    expansion/top-M maintenance still runs, the loop predicts round
+    i+1's cold-block union from the candidates round i just PQ-routed
+    and stages it in carried speculation state — the modeled
+    speculative DMAs overlap round i's compute. The next round's
+    authoritative fetch re-gathers anything mis-predicted (speculation
+    is never wrong, only late), so (ids, dists) are bit-identical to
+    speculation-off; consumed predictions land in ``spec_hits`` (DMAs
+    off the critical path), dead ones in ``spec_wasted`` (bandwidth
+    surcharge the cost model prices);
   * entry points come from an in-memory navigation-graph beam search;
   * per-query DMA / tier-0-hit / dedup-join / round-trip counters are
     carried exactly (the paper's "mean I/Os" splits across the
@@ -62,8 +72,11 @@ Tree = dict
 # core never depends on the obs plane; equality is pinned by a test).
 # ``joins`` is ALL dedup joins in the round (batch scope, the kernel's
 # union pass); ``joins_x`` is the cross-tile subset of them.
+# ``spec_hits``/``spec_wasted`` are the round's consumed speculation
+# outcomes (DESIGN.md §9) — always present, zero when ``p.speculate``
+# is off, so the fold schema never varies with the knob.
 _ROUND_LOG_COLS = ("live", "cold", "tier0", "joins", "joins_x",
-                   "compacted")
+                   "compacted", "spec_hits", "spec_wasted")
 
 
 @jax.tree_util.register_dataclass
@@ -112,14 +125,27 @@ class DeviceSearchResult(NamedTuple):
     #                            rework (DESIGN.md §8) wins over
     #                            per-tile dedup (whose modeled DMAs =
     #                            io - (dedup_saved - dedup_cross))
+    spec_hits: jnp.ndarray     # [Q] paying cold gathers (io -
+    #                            dedup_saved) whose block the previous
+    #                            round's speculative prediction already
+    #                            put in flight (p.speculate, DESIGN.md
+    #                            §9) — the DMA left the critical path;
+    #                            zero when speculation is off
+    spec_wasted: jnp.ndarray   # [Q] speculative gathers no request of
+    #                            the next round consumed — extra DMA
+    #                            bandwidth the cost model surcharges,
+    #                            never a correctness event (the
+    #                            authoritative round fetch re-gathers
+    #                            misses: "never wrong, only late")
     rounds: jnp.ndarray        # scalar: loop rounds the batch ran
     #                            (hops / rounds = a query's occupancy)
     round_log: Optional[jnp.ndarray] = None
-    #                            [max_hops, 6] i32 per-round trace buffer
+    #                            [max_hops, 8] i32 per-round trace buffer
     #                            (p.trace_rounds; repro.obs.roundlog —
     #                            cols live/cold/tier0/joins/joins_x/
-    #                            compacted; rows >= ``rounds`` are
-    #                            unwritten). None when tracing is off.
+    #                            compacted/spec_hits/spec_wasted; rows
+    #                            >= ``rounds`` are unwritten). None when
+    #                            tracing is off.
 
 
 class DeviceRangeResult(NamedTuple):
@@ -132,6 +158,10 @@ class DeviceRangeResult(NamedTuple):
     dedup_saved: jnp.ndarray   # [Q] same-round dedup joins (batch
     #                            scope), all rounds
     dedup_cross: jnp.ndarray   # [Q] cross-tile subset of dedup_saved
+    spec_hits: jnp.ndarray     # [Q] speculative pre-gathers consumed,
+    #                            all RS rounds (the speculation state
+    #                            drains at each RS re-entry)
+    spec_wasted: jnp.ndarray   # [Q] speculative gathers never consumed
     rounds: jnp.ndarray        # scalar: total loop rounds, all RS rounds
 
 
@@ -399,7 +429,7 @@ def nav_entry_points(ds: DeviceSegment, queries: jnp.ndarray,
 
 def _round_stage(ds: DeviceSegment, queries: jnp.ndarray, u: jnp.ndarray,
                  metric: str, impl: str, n_expand: int, tile: int,
-                 pipeline_dma: bool):
+                 pipeline_dma: bool, fuse_union: bool = False):
     """The fused per-round fetch pipeline (DR): tier-0 probe,
     batch-scope-deduped block gather, exact rank, and the per-query
     top-``n_expand`` expansion order — one pass.
@@ -408,7 +438,8 @@ def _round_stage(ds: DeviceSegment, queries: jnp.ndarray, u: jnp.ndarray,
     (vid [Q, F*eps], nbrs [Q, F*eps, Lam], dists [Q, F*eps],
     hit [Q, F] i32, order [Q, n_expand]). ``impl='fused'`` runs the
     ``fused_round`` Pallas kernel (whole-batch deduped gather —
-    double-buffered cold DMAs when ``pipeline_dma`` and compiled —
+    double-buffered cold DMAs when ``pipeline_dma`` and compiled,
+    in-kernel SMEM slot-map union when ``fuse_union`` —
     idle-tile skip at the ``tile`` granularity); ``'jnp'`` is the
     pure-jnp reference with straight per-request gathers —
     bit-identical payloads (dedup only changes which gather produced a
@@ -421,7 +452,7 @@ def _round_stage(ds: DeviceSegment, queries: jnp.ndarray, u: jnp.ndarray,
             queries, u, ds.block_of, ds.hot_slot_of, ds.hot_vecs,
             ds.hot_vid, ds.hot_nbrs, ds.vecs, ds.vid, ds.nbrs,
             n_expand, metric=metric, bq=tile,
-            pipeline_dma=pipeline_dma)
+            pipeline_dma=pipeline_dma, fuse_union=fuse_union)
     else:
         from repro.kernels import ref
         dd, vid, nbrs, hit, order = ref.fused_round_ref(
@@ -483,7 +514,9 @@ def _block_search_loop(ds: DeviceSegment, queries: jnp.ndarray, lut,
                        fetch_width: int, fetch_impl: str,
                        compact_frac: float = 0.0, trace: bool = False,
                        pipeline_dma: bool = False,
-                       round_tile_cap: int = 0):
+                       round_tile_cap: int = 0,
+                       speculate: bool = False,
+                       fuse_union: bool = False):
     """The batched best-first block search from a given carried state.
 
     ``state`` = (cand_id, cand_key, open_key, visited, res_id, res_key,
@@ -506,16 +539,40 @@ def _block_search_loop(ds: DeviceSegment, queries: jnp.ndarray, lut,
     before returning, so callers see original query order either
     way.
 
-    ``trace`` (jit-static) carries a ``[max_hops, 6] i32`` per-round
+    ``trace`` (jit-static) carries a ``[max_hops, 8] i32`` per-round
     buffer (``repro.obs.roundlog`` columns: live, cold, tier0, joins,
-    joins_x, compacted) written once per round from the same masks the counters
+    joins_x, compacted, spec_hits, spec_wasted) written once per round
+    from the same masks the counters
     sum — a lossless refinement, so the log's column sums equal the
     counter totals by construction. The buffer's round axis is never
     permuted by compaction (its rows are batch-level sums, which are
     permutation-invariant). Returns ``(state, round_log)``; the log is
     ``None`` when tracing is off, and the counters/results are
     bit-identical either way (the trace writes are pure additions to
-    the dataflow)."""
+    the dataflow).
+
+    ``speculate`` (jit-static, DESIGN.md §9) carries two-slot
+    speculation state in the loop — per-query hit/wasted counters plus
+    the ``[Q, F]`` block prediction staged by the previous round. Each
+    round first *consumes* the staged prediction against its
+    authoritative requests (a paying cold gather whose block was
+    predicted is a ``spec_hit``: its DMA was already in flight during
+    the previous round's expansion/top-M maintenance; a predicted
+    block no cold request of the query consumes is ``spec_wasted``),
+    then *stages* the next round's prediction from the neighbors it
+    just PQ-routed — before the merged candidate pool resolves, which
+    is exactly why the prediction is fallible and why it overlaps the
+    maintenance stage. Every speculation branch is pure accounting
+    over the same masks the counters already sum: the authoritative
+    fetch is untouched, so (ids, dists) and every other counter are
+    bit-identical to ``speculate=False``, and the loop jaxpr without
+    the knob is unchanged. The final round's staged prediction is
+    dropped unconsumed (modeled as issued at the consume boundary —
+    a search that ends never issues it, so it is not wasted DMA).
+
+    ``fuse_union`` (jit-static) selects the in-kernel SMEM slot-map
+    union of the round kernel (``kernels.tier0_fetch.gather_union``)
+    over the two-pass pass-1 union — bit-identical either way."""
     qn = queries.shape[0]
     eps = ds.vid.shape[1]
     fw = max(fetch_width, 1)
@@ -532,9 +589,12 @@ def _block_search_loop(ds: DeviceSegment, queries: jnp.ndarray, lut,
         (cand_id, cand_key, open_key, visited, res_id, res_key,
          io, t0, hops, saved, saved_x) = st[:11]
         pos = 11
-        if compact:
-            perm, q_r, lut_r = st[11:14]
+        if speculate:
+            spec_h, spec_w, spec_blk = st[11:14]
             pos = 14
+        if compact:
+            perm, q_r, lut_r = st[pos:pos + 3]
+            pos += 3
         if trace:
             rlog = st[pos]
             pos += 1
@@ -554,9 +614,13 @@ def _block_search_loop(ds: DeviceSegment, queries: jnp.ndarray, lut,
             unpacked = (jnp.any(jnp.logical_not(live[:-1]) & live[1:])
                         if qn > 1 else jnp.asarray(False))
             fired = (frac < compact_frac) & unpacked
+            # every carried array is per-query along axis 0 — the
+            # speculation trio (when on) rides the same permutation,
+            # so a staged prediction follows its query through a repack
             carried = (cand_id, cand_key, open_key, visited, res_id,
-                       res_key, io, t0, hops, saved, saved_x, perm,
-                       q_r, lut_r)
+                       res_key, io, t0, hops, saved, saved_x) \
+                + ((spec_h, spec_w, spec_blk) if speculate else ()) \
+                + (perm, q_r, lut_r)
 
             def _repack(arrs):
                 # stable: live first, original order within each group;
@@ -568,7 +632,10 @@ def _block_search_loop(ds: DeviceSegment, queries: jnp.ndarray, lut,
             carried = jax.lax.cond(fired, _repack,
                                    lambda arrs: arrs, carried)
             (cand_id, cand_key, open_key, visited, res_id, res_key,
-             io, t0, hops, saved, saved_x, perm, q_r, lut_r) = carried
+             io, t0, hops, saved, saved_x) = carried[:11]
+            if speculate:
+                spec_h, spec_w, spec_blk = carried[11:14]
+            perm, q_r, lut_r = carried[-3:]
         else:
             q_r, lut_r = queries, lut
 
@@ -585,7 +652,7 @@ def _block_search_loop(ds: DeviceSegment, queries: jnp.ndarray, lut,
         # block union, rank, and order expansions — one fused pass
         vid, nbrs, dd, hit, order = _round_stage(
             ds, q_r, u, metric, fetch_impl, n_expand, tile,
-            pipeline_dma)
+            pipeline_dma, fuse_union)
         hot = hit.astype(bool) & f_active
         cold = f_active & ~hot
         joined, joined_x = _dedup_joins(b, cold, tile)       # [Q, F]
@@ -595,19 +662,47 @@ def _block_search_loop(ds: DeviceSegment, queries: jnp.ndarray, lut,
         saved_x = saved_x + joined_x.sum(axis=1).astype(jnp.int32)
         hops = hops + active.astype(jnp.int32)               # round trips
 
+        if speculate:
+            # --- consume the prediction the previous round staged,
+            # against this round's authoritative requests. A PAYING
+            # cold gather (cold & ~joined — the DMAs the cost model
+            # prices) whose block was predicted is a hit: its copy was
+            # already in flight while the previous round's expansion /
+            # top-M maintenance ran, so the DMA left the critical
+            # path. A predicted block that matches NO cold request of
+            # its query is wasted bandwidth (a matched-but-joined
+            # request is neither: its gather was already someone
+            # else's). Charged at consume time, so the trace row below
+            # sums to exactly these per-query increments.
+            pred_match = (b[:, :, None]
+                          == spec_blk[:, None, :]).any(-1)   # [Q, F]
+            hit_spec = cold & ~joined & pred_match
+            used = ((spec_blk[:, :, None]
+                     == jnp.where(cold, b, -1)[:, None, :]).any(-1)
+                    & (spec_blk >= 0))                       # [Q, F]
+            sh_r = hit_spec.sum(axis=1).astype(jnp.int32)
+            sw_r = ((spec_blk >= 0) & ~used).sum(
+                axis=1).astype(jnp.int32)
+            spec_h = spec_h + sh_r
+            spec_w = spec_w + sw_r
+
         if trace:
             # the round's row is the batch-level sum of exactly the
             # masks the per-query counters just accumulated, so the
             # log's column sums equal the counter totals identically
             # (the fold invariant tests/test_trace_roundlog.py pins);
             # sums are permutation-invariant, so compaction is moot
+            spec_cols = ((sh_r.sum().astype(jnp.int32),
+                          sw_r.sum().astype(jnp.int32)) if speculate
+                         else (jnp.zeros((), jnp.int32),
+                               jnp.zeros((), jnp.int32)))
             rlog = rlog.at[t].set(jnp.stack([
                 active.sum().astype(jnp.int32),
                 cold.sum().astype(jnp.int32),
                 hot.sum().astype(jnp.int32),
                 joined.sum().astype(jnp.int32),
                 joined_x.sum().astype(jnp.int32),
-                fired.astype(jnp.int32)]))
+                fired.astype(jnp.int32), *spec_cols]))
 
         # --- DC: fold the exact-ranked residents into results
         f_valid = jnp.repeat(f_active, eps, axis=1)
@@ -641,36 +736,72 @@ def _block_search_loop(ds: DeviceSegment, queries: jnp.ndarray, lut,
         f_codes = ds.pq_codes[f_safe]                        # [Q, F, M]
         f_key = jnp.where(f_valid, _adc(lut_r, f_codes), jnp.inf)
         f_id = jnp.where(f_valid, flat, -1)
+        if speculate:
+            # --- stage the NEXT round's prediction from the neighbors
+            # this round just PQ-routed — before they merge into the
+            # candidate pool, which is why the speculative gather can
+            # overlap the top-M maintenance below (and why it can
+            # miss: the merged pool may still prefer an older
+            # candidate). Hot-pack blocks never issue a speculative
+            # DMA (a tier-0 hit needs none), and duplicate slot
+            # predictions collapse so one block never double-counts.
+            neg_p, p_pick = jax.lax.top_k(-f_key, fw)        # [Q, F]
+            p_id = jnp.take_along_axis(f_id, p_pick, axis=1)
+            p_ok = (jnp.isfinite(-neg_p) & (p_id >= 0)
+                    & active[:, None])
+            p_blk = jnp.where(p_ok,
+                              ds.block_of[jnp.maximum(p_id, 0)], -1)
+            p_hot = ds.hot_slot_of[jnp.maximum(p_blk, 0)] >= 0
+            p_blk = jnp.where(p_hot & (p_blk >= 0), -1, p_blk)
+            dup = ((p_blk[:, :, None] == p_blk[:, None, :])
+                   & (jnp.arange(fw)[None, :, None]
+                      > jnp.arange(fw)[None, None, :])).any(-1)
+            spec_blk = jnp.where(dup & (p_blk >= 0), -1,
+                                 p_blk).astype(jnp.int32)
+
         cand_key, cand_id = _merge_top(cand_key, cand_id, f_key, f_id,
                                        candidates)
         open_key = _open_keys(cand_id, cand_key, visited)
         out = (cand_id, cand_key, open_key, visited, res_id, res_key,
                io, t0, hops, saved, saved_x)
+        if speculate:
+            out = out + (spec_h, spec_w, spec_blk)
         if compact:
             out = out + (perm, q_r, lut_r)
         if trace:
             out = out + (rlog,)
         return out + (t + 1,)
 
-    # extended state: core11 + (perm, queries, lut | compact)
+    # extended state: core11 + (spec_h, spec_w, spec_blk | speculate)
+    #                        + (perm, queries, lut | compact)
     #                        + (round log | trace) + (t,)
     st = state[:-1]
+    if speculate:
+        st = st + (jnp.zeros((qn,), jnp.int32),
+                   jnp.zeros((qn,), jnp.int32),
+                   jnp.full((qn, fw), -1, jnp.int32))
     if compact:
         st = st + (jnp.arange(qn, dtype=jnp.int32), queries, lut)
     if trace:
         st = st + (jnp.zeros((max_hops, len(_ROUND_LOG_COLS)),
                              jnp.int32),)
     out = jax.lax.while_loop(cond, body, st + (state[-1],))
-    arrs = out[:11]
-    pos = 11
+    nper = 14 if speculate else 11           # per-query carried arrays
+    arrs = out[:nper]
+    pos = nper
     if compact:
-        perm = out[11]
-        pos = 14
+        perm = out[nper]
+        pos = nper + 3
         inv = jnp.argsort(perm)              # undo the compaction order
         arrs = tuple(jnp.take(a, inv, axis=0) for a in arrs)
     rlog = None
     if trace:
         rlog = out[pos]                      # round axis: never permuted
+    if speculate:
+        # drop the final round's staged-but-unconsumed prediction (its
+        # DMA is modeled as issued at the consume boundary, which a
+        # finished search never reaches); keep the hit/wasted counters
+        arrs = arrs[:13]
     return arrs + (out[-1],), rlog
 
 
@@ -733,11 +864,19 @@ def device_anns(ds: DeviceSegment, queries: jnp.ndarray,
         metric=metric, fetch_width=fw, fetch_impl=p.fetch_impl,
         compact_frac=p.compact_frac, trace=p.trace_rounds,
         pipeline_dma=p.pipeline_dma,
-        round_tile_cap=p.round_tile_cap)
-    (_, _, _, _, res_id, res_key, io, t0, hops, saved, saved_x,
-     t) = state
+        round_tile_cap=p.round_tile_cap,
+        speculate=p.speculate, fuse_union=p.fuse_union)
+    if p.speculate:
+        (_, _, _, _, res_id, res_key, io, t0, hops, saved, saved_x,
+         spec_h, spec_w, t) = state
+    else:
+        (_, _, _, _, res_id, res_key, io, t0, hops, saved, saved_x,
+         t) = state
+        spec_h = jnp.zeros((qn,), jnp.int32)
+        spec_w = jnp.zeros((qn,), jnp.int32)
     return DeviceSearchResult(res_id[:, : p.k], res_key[:, : p.k], io,
-                              hops, t0, saved, saved_x, t, rlog)
+                              hops, t0, saved, saved_x, spec_h, spec_w,
+                              t, rlog)
 
 
 # --------------------------------------------- production mesh search step
@@ -807,8 +946,9 @@ def make_search_step(mesh, rules, *,
     when omitted): Γ, σ, fetch width, nav beam, compaction — and the
     tier-0 budget, which sizes the per-rank hot-tile pack in the
     argument specs. The step returns (gid, dists, io, hops,
-    tier0_hits, dedup_saved, dedup_cross); the per-rank
-    io/hops/tier-0/dedup columns land in the ``(data, model)``-sharded
+    tier0_hits, dedup_saved, dedup_cross, spec_hits, spec_wasted); the
+    per-rank io/hops/tier-0/dedup/speculation columns land in the
+    ``(data, model)``-sharded
     outputs — the mesh-level QPS fold in ``benchmarks/paper_tables.py``
     consumes exactly these."""
     from jax.sharding import NamedSharding, PartitionSpec as P
@@ -858,6 +998,7 @@ def make_search_step(mesh, rules, *,
         hot_nbrs=P("model"), hot_slot_of=P("model")), P(data_axes))
     out_specs = (P(data_axes), P(data_axes), P(data_axes, "model"),
                  P(data_axes, "model"), P(data_axes, "model"),
+                 P(data_axes, "model"), P(data_axes, "model"),
                  P(data_axes, "model"), P(data_axes, "model"))
 
     def local_search(seg: DeviceSegment, queries):
@@ -883,7 +1024,9 @@ def make_search_step(mesh, rules, *,
         return (gid, out_d, r.io[:, None] * col, r.hops[:, None] * col,
                 r.tier0_hits[:, None] * col,
                 r.dedup_saved[:, None] * col,
-                r.dedup_cross[:, None] * col)
+                r.dedup_cross[:, None] * col,
+                r.spec_hits[:, None] * col,
+                r.spec_wasted[:, None] * col)
 
     import inspect
     flag = ("check_vma" if "check_vma"
@@ -914,6 +1057,12 @@ def device_range_search(ds: DeviceSegment, queries: jnp.ndarray,
     re-seeds its candidate set from the previous round's results but
     never re-expands — so never re-fetches, and never re-counts in
     ``io`` — a block whose vertex an earlier round already expanded.
+
+    ``p.speculate`` carries through each inner ANNS loop; the staged
+    prediction drains at every RS re-entry (the pipeline has a hard
+    barrier at the doubling boundary — the next round's candidate set
+    is re-seeded host-side), while the hit/wasted counters accumulate
+    across rounds.
     """
     qn = queries.shape[0]
     n = ds.block_of.shape[0]
@@ -937,6 +1086,8 @@ def device_range_search(ds: DeviceSegment, queries: jnp.ndarray,
     hops = jnp.zeros((qn,), jnp.int32)
     saved = jnp.zeros((qn,), jnp.int32)
     saved_x = jnp.zeros((qn,), jnp.int32)
+    spec_h = jnp.zeros((qn,), jnp.int32)
+    spec_w = jnp.zeros((qn,), jnp.int32)
     total_rounds = jnp.zeros((), jnp.int32)
     seed_id, seed_key = entry, e_key
 
@@ -966,9 +1117,16 @@ def device_range_search(ds: DeviceSegment, queries: jnp.ndarray,
             fetch_width=fw, fetch_impl=p.fetch_impl,
             compact_frac=p.compact_frac, trace=False,
             pipeline_dma=p.pipeline_dma,
-            round_tile_cap=p.round_tile_cap)
-        (_, _, _, visited, res_id, res_key, io, t0, hops, saved,
-         saved_x, t) = state
+            round_tile_cap=p.round_tile_cap,
+            speculate=p.speculate, fuse_union=p.fuse_union)
+        if p.speculate:
+            (_, _, _, visited, res_id, res_key, io, t0, hops, saved,
+             saved_x, sh_r, sw_r, t) = state
+            spec_h = spec_h + sh_r
+            spec_w = spec_w + sw_r
+        else:
+            (_, _, _, visited, res_id, res_key, io, t0, hops, saved,
+             saved_x, t) = state
         total_rounds = total_rounds + t
         if c * 2 > k_cap:
             break
@@ -985,4 +1143,5 @@ def device_range_search(ds: DeviceSegment, queries: jnp.ndarray,
         dists = jnp.pad(dists, ((0, 0), (0, pad)),
                         constant_values=jnp.inf)
     return DeviceRangeResult(ids, dists, dists <= radius, io, t0,
-                             saved, saved_x, total_rounds)
+                             saved, saved_x, spec_h, spec_w,
+                             total_rounds)

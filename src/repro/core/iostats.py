@@ -45,6 +45,12 @@ Pricing summary (repro.io):
     cold gather) overlap the round-granular streaming-DMA term with the
     occupancy-weighted round compute — ``max(dma, compute)`` per round
     instead of their sum; unflagged stats price exactly as before;
+  * stats flagged ``dma_speculative`` (the cross-round speculative
+    pipeline, DESIGN.md §9) additionally move the ``spec_hits`` share
+    of the streaming DMAs one round earlier — off the critical path —
+    so the pipelined chain pays ``max(dma x (1 - hit_frac), compute)``
+    per round, while every ``spec_wasted`` block (speculated but never
+    consumed) is surcharged serially at the bandwidth rate;
   * stats that carry the batched loop's round count (``batch_rounds`` >
     0, set by ``from_device(rounds=...)``) switch a cost model with
     ``t_round`` > 0 into the *round-granular* regime (DESIGN.md §5):
@@ -106,6 +112,24 @@ class IOStats:
     #                             with round compute — max(dma, compute)
     #                             per round. A flag, not a count: merged
     #                             by max (a batch is pipelined or not).
+    spec_hits: int = 0          # cold DMAs this query paid for that the
+    #                             cross-round speculative pipeline
+    #                             (params.speculate, DESIGN.md §9) had
+    #                             already issued one round early — their
+    #                             latency hides behind round i's compute.
+    #                             Subset of the paying requests
+    #                             (cold & ~joined), so spec_hits <= the
+    #                             full-read count. Additive under merge.
+    spec_wasted: int = 0        # speculated blocks the next round never
+    #                             requested cold — DMAs issued for
+    #                             nothing (the mis-speculation price the
+    #                             CostModel surcharges). Additive.
+    dma_speculative: int = 0    # 1 when the batch ran the speculative
+    #                             cross-round pipeline: the CostModel
+    #                             then discounts the streaming-DMA term
+    #                             by the spec hit fraction and charges
+    #                             spec_wasted DMAs serially. A flag,
+    #                             merged by max like dma_pipelined.
     rounds_active_weight: float = 0.0  # Σ hops / batch rounds: the share
     #                               of the batched loop's rounds this query
     #                               was live for (divergence occupancy)
@@ -123,9 +147,9 @@ class IOStats:
     pq_comps: int = 0           # ADC distance computations
 
     # merged with max(), not +: peaks, hop marks, the (batch-shared)
-    # round count and the pipelined flag are not additive
+    # round count and the pipelined/speculative flags are not additive
     _MAX_FIELDS = ("hops_to_best", "inflight_peak", "batch_rounds",
-                   "dma_pipelined")
+                   "dma_pipelined", "dma_speculative")
 
     def merge(self, other: "IOStats") -> None:
         new_trips = self.io_round_trips + other.io_round_trips
@@ -148,7 +172,8 @@ class IOStats:
     @classmethod
     def from_device(cls, io, tier0_hits=0, hops=0, dedup_saved=0,
                     rounds=0, dedup_cross=0,
-                    pipelined=False) -> "IOStats":
+                    pipelined=False, spec_hits=0, spec_wasted=0,
+                    speculative=False) -> "IOStats":
         """Counters of one query's device search (``device_anns``):
         ``io`` cold block touches, ``tier0_hits`` touches served by the
         VMEM hot-tile pack, ``hops`` DMA round trips, ``dedup_saved``
@@ -157,17 +182,24 @@ class IOStats:
         issued), ``dedup_cross`` its cross-tile subset, ``rounds``
         total loop rounds of the batch this query rode in,
         ``pipelined`` whether the kernel double-buffered its cold
-        gather. Cold DMAs price as misses (one trip each —
-        batched-width amortization is already in the hop count), hot
-        touches at ``t_tier0_hit``, deduped touches at
+        gather. ``spec_hits``/``spec_wasted``/``speculative`` carry the
+        cross-round speculative pipeline's accounting (DESIGN.md §9):
+        hits are paying DMAs that were pre-issued one round early
+        (clamped to the paying count ``io - dedup_saved``), wasted are
+        speculated blocks never consumed. Cold DMAs price as misses
+        (one trip each — batched-width amortization is already in the
+        hop count), hot touches at ``t_tier0_hit``, deduped touches at
         ``t_dedup_hit``."""
         io, t0, h = int(io), int(tier0_hits), int(hops)
         saved = min(int(dedup_saved), io)
         cross = min(int(dedup_cross), saved)
+        sh = min(int(spec_hits), io - saved)
         return cls(block_reads=io + t0, io_round_trips=io - saved,
                    cache_misses=io, tier0_hits=t0, hops=h,
                    dedup_saved_fetches=saved, dedup_cross_tile=cross,
                    dma_pipelined=int(bool(pipelined)),
+                   spec_hits=sh, spec_wasted=int(spec_wasted),
+                   dma_speculative=int(bool(speculative)),
                    batch_rounds=int(rounds),
                    rounds_active_weight=(h / int(rounds)
                                          if int(rounds) > 0 else 0.0))
@@ -175,36 +207,46 @@ class IOStats:
     @classmethod
     def from_device_batch(cls, io, tier0_hits, hops, dedup_saved,
                           rounds, dedup_cross=None,
-                          pipelined=False) -> "IOStats":
+                          pipelined=False, spec_hits=None,
+                          spec_wasted=None,
+                          speculative=False) -> "IOStats":
         """Fold one batch's per-query device columns (the arrays a
         ``DeviceSearchResult`` / ``make_search_step`` rank emits) into
         one merged ``IOStats``: counters sum, ``batch_rounds`` is the
         shared round count, ``rounds_active_weight`` becomes the mean
         number of live queries per round. ``dedup_cross`` (the
-        cross-tile column) defaults to zeros for pre-split callers.
-        This is THE fold both the serving ``RepackScheduler``
+        cross-tile column) and the speculative columns
+        (``spec_hits``/``spec_wasted``) default to zeros for pre-split
+        callers. This is THE fold both the serving ``RepackScheduler``
         objective and the benchmark QPS model
         (``paper_tables.mesh_qps_estimate``) price — one modeled step
         time, two consumers."""
         if dedup_cross is None:
             dedup_cross = [0] * len(io)
+        if spec_hits is None:
+            spec_hits = [0] * len(io)
+        if spec_wasted is None:
+            spec_wasted = [0] * len(io)
         agg = cls()
-        for i, t0, h, sv, cx in zip(io, tier0_hits, hops, dedup_saved,
-                                    dedup_cross):
+        for i, t0, h, sv, cx, sh, sw in zip(io, tier0_hits, hops,
+                                            dedup_saved, dedup_cross,
+                                            spec_hits, spec_wasted):
             agg.merge(cls.from_device(i, t0, h, sv, rounds, cx,
-                                      pipelined))
+                                      pipelined, sh, sw, speculative))
         return agg
 
     @classmethod
     def fold_rank_batches(cls, columns) -> "dict[int, IOStats]":
         """Rank-keyed fold of a mesh-served step: ``columns[rank] =
-        (io, tier0_hits, hops, dedup_saved, rounds[, dedup_cross])`` —
+        (io, tier0_hits, hops, dedup_saved, rounds[, dedup_cross
+        [, pipelined[, spec_hits, spec_wasted[, speculative]]]])`` —
         each rank's per-query device columns, folded per rank with
         ``from_device_batch`` (5-tuples price the cross-tile column as
-        zero). This is THE shared mesh fold: the router's windowed
-        per-rank stats, the scheduler objective and
-        ``mesh_qps_estimate`` all price these same per-rank IOStats,
-        and ``merge_ranks`` defines the one correct total."""
+        zero; short tuples zero the speculative columns too). This is
+        THE shared mesh fold: the router's windowed per-rank stats, the
+        scheduler objective and ``mesh_qps_estimate`` all price these
+        same per-rank IOStats, and ``merge_ranks`` defines the one
+        correct total."""
         return {int(r): cls.from_device_batch(*cols)
                 for r, cols in columns.items()}
 
@@ -347,6 +389,35 @@ class CostModel:
                         - s.dedup_saved_fetches, 0)
         return full_reads * t_batch
 
+    def _spec_hit_frac(self, s: IOStats) -> float:
+        """Fraction of the streaming cold DMAs the cross-round
+        speculative pipeline pre-issued one round early (0 outside the
+        round-granular speculative regime). spec_hits is clamped to the
+        paying-request count at fold time, so the fraction is in
+        [0, 1] by construction; the clamp here guards hand-built
+        stats."""
+        if not s.dma_speculative or self.t_round <= 0.0 \
+                or s.batch_rounds <= 0:
+            return 0.0
+        t_batch = self.t_batch_block if self.t_batch_block else \
+            self.t_block_io
+        stream = self._stream_dma(s)
+        if stream <= 0.0:
+            return 0.0
+        return min(s.spec_hits * t_batch / stream, 1.0)
+
+    def _spec_waste(self, s: IOStats) -> float:
+        """The mis-speculation surcharge: every speculated block the
+        next round never consumed still streamed its DMA — charged
+        serially at the bandwidth rate, so wasted speculation is
+        visible in the modeled total (0 outside the regime)."""
+        if not s.dma_speculative or self.t_round <= 0.0 \
+                or s.batch_rounds <= 0:
+            return 0.0
+        t_batch = self.t_batch_block if self.t_batch_block else \
+            self.t_block_io
+        return s.spec_wasted * t_batch
+
     def latency_us(self, s: IOStats, pipeline: bool = False) -> float:
         t_io = self._io_time(s)
         t_comp = (s.dist_comps * self.t_dist + s.pq_comps * self.t_pq
@@ -356,7 +427,8 @@ class CostModel:
             # §5.1: DR and DC run concurrently; serial residue is the max
             # plus the non-overlappable other time.
             return max(t_io, t_comp) + t_other
-        if s.dma_pipelined and self.t_round > 0.0 and s.batch_rounds > 0:
+        round_granular = self.t_round > 0.0 and s.batch_rounds > 0
+        if s.dma_pipelined and round_granular:
             # DESIGN.md §8: the double-buffered cold gather overlaps the
             # streaming DMA term with the occupancy-weighted round
             # compute — per round the kernel pays max(dma, compute),
@@ -364,10 +436,31 @@ class CostModel:
             # every non-round term stay serial. Stats without the flag
             # (pipeline_dma off, per-tile kernels, host paths) price
             # exactly as before.
+            #
+            # DESIGN.md §9: the speculative cross-round pipeline moves
+            # the spec-hit share of the stream one round earlier, where
+            # it hides behind round i's compute regardless of the
+            # within-round balance — only the UN-speculated residue
+            # still races this round's compute, so the chain prices
+            # max(stream x (1 - h), compute) + the wasted-DMA
+            # surcharge. h = 0 (speculation off) reduces exactly to
+            # the PR-8 pipelined form.
             stream = self._stream_dma(s)
             rcomp = self._round_comp(s)
+            h = self._spec_hit_frac(s)
             return ((t_io - stream) + (t_comp - rcomp)
-                    + max(stream, rcomp) + t_other)
+                    + max(stream * (1.0 - h), rcomp) + t_other
+                    + self._spec_waste(s))
+        if s.dma_speculative and round_granular:
+            # speculative without the double-buffered gather: the
+            # pre-issued share of the stream overlaps the previous
+            # round's compute (it left the critical path entirely);
+            # the rest of the pricing is the serial round-granular
+            # form plus the wasted-DMA surcharge.
+            stream = self._stream_dma(s)
+            h = self._spec_hit_frac(s)
+            return (t_io - stream * h) + t_comp + t_other \
+                + self._spec_waste(s)
         return t_io + t_comp + t_other
 
     def breakdown(self, s: IOStats, pipeline: bool = False) -> dict:
@@ -386,6 +479,12 @@ class CostModel:
                 "t_round_comp_us": self._round_comp(s),
                 "t_dma_stream_us": self._stream_dma(s),
                 "dma_pipelined": bool(s.dma_pipelined),
+                # speculative cross-round pipeline terms (0/False
+                # outside that regime): the pre-issued share of the
+                # stream and the serial mis-speculation surcharge
+                "dma_speculative": bool(s.dma_speculative),
+                "spec_hit_frac": self._spec_hit_frac(s),
+                "t_spec_waste_us": self._spec_waste(s),
                 "io_frac": t_io / max(t_io + t_comp + t_other, 1e-9),
                 # per-tier demand-read service counts (tier 0 = device
                 # VMEM hot tiles, 1 = host full blocks, 2 = compressed

@@ -322,6 +322,28 @@ class DeviceSearchParams:
     #                               cross-tile accounting boundary —
     #                               tests/benches shrink it to exercise
     #                               multi-tile batches cheaply.
+    speculate: bool = False       # cross-round speculative pipeline
+    #                               (DESIGN.md §9): predict round i+1's
+    #                               cold-block union from round i's
+    #                               ranked expansion candidates and
+    #                               issue its gather while round i's
+    #                               top-M maintenance runs. Never wrong,
+    #                               only late — a mis-speculated block
+    #                               is re-gathered by the authoritative
+    #                               round fetch, so (ids, dists) and
+    #                               every existing counter are
+    #                               bit-identical on or off; only the
+    #                               spec_hits/spec_wasted accounting
+    #                               (and the CostModel's speculative
+    #                               overlap pricing) move.
+    fuse_union: bool = True       # fuse the pass-1 sorted-unique block
+    #                               union into the round kernel's pass 2
+    #                               (SMEM-staged slot map) instead of
+    #                               running it as jnp ops between the
+    #                               pallas_calls. Payload-bit-identical
+    #                               either way — the union math is the
+    #                               shared kernels.dedup formulation in
+    #                               both placements.
 
     def __post_init__(self):
         if self.k < 1 or self.candidates < self.k:

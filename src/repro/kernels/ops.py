@@ -99,7 +99,8 @@ def round_tile(qn: int, cap: int = 0) -> int:
 
 @functools.partial(jax.jit,
                    static_argnames=("n_expand", "metric", "interpret",
-                                    "bq", "pipeline_dma", "_force_dma"))
+                                    "bq", "pipeline_dma", "fuse_union",
+                                    "_force_dma"))
 def fused_round(queries: jnp.ndarray, u: jnp.ndarray,
                 block_of: jnp.ndarray, hot_slot_of: jnp.ndarray,
                 hot_vecs: jnp.ndarray, hot_vid: jnp.ndarray,
@@ -107,14 +108,16 @@ def fused_round(queries: jnp.ndarray, u: jnp.ndarray,
                 vid: jnp.ndarray, nbrs: jnp.ndarray, n_expand: int,
                 metric: str = "l2", interpret: bool = None,
                 bq: int = None, pipeline_dma: bool = False,
-                _force_dma: bool = False):
+                fuse_union: bool = False, _force_dma: bool = False):
     """Fused per-round fetch pipeline of the batched device search:
-    whole-batch sorted-unique dedup (pass 1), once-per-distinct-block
-    gather — double-buffered when ``pipeline_dma`` is on and the
-    kernels compile (pass 2a) — then per-tile broadcast + exact
-    distances + per-query top-``n_expand`` expansion order (pass 2b).
-    Padded query rows carry ``u = -1`` (converged), so all-pad tiles
-    take the rank kernel's skip path; their outputs are sliced off."""
+    whole-batch sorted-unique dedup (pass 1, fused into the gather
+    kernel's SMEM slot map when ``fuse_union`` is set),
+    once-per-distinct-block gather — double-buffered when
+    ``pipeline_dma`` is on and the kernels compile (pass 2a) — then
+    per-tile broadcast + exact distances + per-query top-``n_expand``
+    expansion order (pass 2b). Padded query rows carry ``u = -1``
+    (converged), so all-pad tiles take the rank kernel's skip path;
+    their outputs are sliced off."""
     interpret = _INTERPRET if interpret is None else interpret
     bq = bq or round_tile(queries.shape[0])
     qp = _pad_rows(queries, bq)
@@ -126,6 +129,7 @@ def fused_round(queries: jnp.ndarray, u: jnp.ndarray,
                            n_expand, metric=metric,
                            interpret=interpret, bq=bq,
                            pipeline_dma=pipeline_dma,
+                           fuse_union=fuse_union,
                            _force_dma=_force_dma)
     return tuple(o[: queries.shape[0]] for o in outs)
 

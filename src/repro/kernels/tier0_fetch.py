@@ -40,6 +40,14 @@ two-pass batch-scope pipeline:
     active-query compaction clusters) skips the broadcast+rank body
     entirely and writes masked sentinels.
 
+ISSUE 9 fuses pass 1 into pass 2a: ``gather_union`` computes the same
+whole-batch union INSIDE the gather kernel via the sort-free
+``dedup.union_slot_map`` twin, stages the flat-slot -> unique-rank map
+through SMEM scratch, and emits the identical five pass-2b inputs — so
+the first cold DMA (double-buffered or speculative) can issue without a
+host-visible pass-1 boundary. ``fused_round(fuse_union=True)`` selects
+it; the two-pass path stays as the bit-identity oracle twin.
+
 Distances use the same f32 sum-of-squared-differences (or negated IP)
 form as the pure-jnp fetch stage, keeping the fused and reference
 implementations bit-identical; the hot pack holds exact copies of the
@@ -74,21 +82,18 @@ def _gather_unique_kernel(uniq_ref, vecs_ref, vid_ref, nbrs_ref,
     tn_ref[...] = nbrs_ref[...][u]
 
 
-def _gather_unique_dma_kernel(uniq_ref, vecs_ref, vid_ref, nbrs_ref,
-                              tv_ref, ti_ref, tn_ref,
-                              vscr, iscr, nscr, sems):
-    """Double-buffered cold gather (the classic two-slot
-    ``make_async_copy`` schedule): while distinct block j's payload is
-    written to the output tile, the HBM copies of block j+1's vector /
-    id / neighbor rows are already in flight into the other scratch
-    slot — and across grid steps the Pallas pipeline prefetches chunk
-    i+1's operands during chunk i, so the fetch overlaps the rank
-    pass's distance+expansion compute. Payload-identical to the
-    straight-line kernel; only the schedule differs."""
+def _double_buffered_gather(u, vecs_ref, vid_ref, nbrs_ref,
+                            tv_ref, ti_ref, tn_ref,
+                            vscr, iscr, nscr, sems):
+    """The classic two-slot ``make_async_copy`` schedule, shared by the
+    chunked and fused-union DMA kernels: while distinct block j's
+    payload is written to the output tile, the HBM copies of block
+    j+1's vector / id / neighbor rows are already in flight into the
+    other scratch slot. Payload-identical to a straight-line gather;
+    only the schedule differs."""
     from jax.experimental.pallas import tpu as pltpu
 
-    rb = uniq_ref.shape[0]
-    u = uniq_ref[...]
+    rb = u.shape[0]
 
     def cold_dma(slot, j):
         blk = u[j]
@@ -118,6 +123,18 @@ def _gather_unique_dma_kernel(uniq_ref, vecs_ref, vid_ref, nbrs_ref,
         return carry
 
     jax.lax.fori_loop(0, rb, body, 0)
+
+
+def _gather_unique_dma_kernel(uniq_ref, vecs_ref, vid_ref, nbrs_ref,
+                              tv_ref, ti_ref, tn_ref,
+                              vscr, iscr, nscr, sems):
+    """Double-buffered cold gather over a precomputed unique chunk:
+    across grid steps the Pallas pipeline additionally prefetches chunk
+    i+1's operands during chunk i, so the fetch overlaps the rank
+    pass's distance+expansion compute."""
+    _double_buffered_gather(uniq_ref[...], vecs_ref, vid_ref, nbrs_ref,
+                            tv_ref, ti_ref, tn_ref,
+                            vscr, iscr, nscr, sems)
 
 
 def gather_unique(uniq: jnp.ndarray, vecs: jnp.ndarray,
@@ -163,6 +180,90 @@ def gather_unique(uniq: jnp.ndarray, vecs: jnp.ndarray,
         scratch_shapes=scratch,
         interpret=interpret,
     )(uniq, vecs, vid, nbrs)
+
+
+# ----------------------------- fused pass 1+2a: in-kernel union + gather
+
+def _union_into_smem(b_ref, uniq_ref, rank_ref, slot_scr):
+    """Compute the whole-batch sorted-unique union INSIDE the kernel
+    (the sort-free ``dedup.union_slot_map`` twin of pass 1) and stage
+    the flat-slot -> unique-rank map through SMEM scratch — scalar
+    memory, where per-slot ranks that drive control/addressing belong —
+    before emitting both union outputs for pass 2b. Returns the in-
+    register ``uniq`` vector the gather below consumes."""
+    flat = b_ref[...].reshape(-1)                 # [R] target blocks
+    uniq, rank = dedup.union_slot_map(flat)
+    slot_scr[...] = rank                          # SMEM-shared slot map
+    uniq_ref[...] = uniq
+    rank_ref[...] = slot_scr[...].reshape(b_ref.shape)
+    return uniq
+
+
+def _gather_union_kernel(b_ref, vecs_ref, vid_ref, nbrs_ref,
+                         uniq_ref, rank_ref, tv_ref, ti_ref, tn_ref,
+                         slot_scr):
+    """Fused union + straight-line cold gather (the ``interpret=True``
+    fallback and the ``pipeline_dma=False`` path)."""
+    uniq = _union_into_smem(b_ref, uniq_ref, rank_ref, slot_scr)
+    tv_ref[...] = vecs_ref[...][uniq]
+    ti_ref[...] = vid_ref[...][uniq]
+    tn_ref[...] = nbrs_ref[...][uniq]
+
+
+def _gather_union_dma_kernel(b_ref, vecs_ref, vid_ref, nbrs_ref,
+                             uniq_ref, rank_ref, tv_ref, ti_ref, tn_ref,
+                             slot_scr, vscr, iscr, nscr, sems):
+    """Fused union + double-buffered cold gather: the first speculative
+    / pipelined DMA can start as soon as the in-kernel union resolves —
+    no host-visible pass-1 boundary between union and gather."""
+    uniq = _union_into_smem(b_ref, uniq_ref, rank_ref, slot_scr)
+    _double_buffered_gather(uniq, vecs_ref, vid_ref, nbrs_ref,
+                            tv_ref, ti_ref, tn_ref,
+                            vscr, iscr, nscr, sems)
+
+
+def gather_union(b: jnp.ndarray, vecs: jnp.ndarray,
+                 vid: jnp.ndarray, nbrs: jnp.ndarray,
+                 interpret: bool = True, pipeline_dma: bool = False,
+                 _force_dma: bool = False):
+    """Fused pass 1+2a: in-kernel whole-batch union, then copy every
+    distinct block's cold payload exactly once.
+
+    b [Q, F] i32 target blocks (idle slots already folded onto block
+    0) -> (uniq [R], rank2d [Q, F] i32, tiles [R, eps, D],
+    vid [R, eps] i32, nbrs [R, eps, Lam] i32) with R = Q*F — the same
+    five values the two-pass path hands pass 2b, bit-identical.
+
+    The union needs the whole-batch view, so this runs as a single
+    kernel invocation (no RB chunking); the O(R^2) union masks stay
+    comfortably in VMEM at search-round sizes (R is a few hundred).
+    The slot map is staged through an SMEM scratch buffer; DMA
+    schedule selection matches ``gather_unique``."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    qn, f = b.shape
+    r = qn * f
+    rho, eps, d = vecs.shape
+    lam = nbrs.shape[2]
+    use_dma = _force_dma or (pipeline_dma and not interpret)
+    kernel = (_gather_union_dma_kernel if use_dma
+              else _gather_union_kernel)
+    scratch = [pltpu.SMEM((r,), jnp.int32)]
+    if use_dma:
+        scratch += [pltpu.VMEM((2, 1, eps, d), vecs.dtype),
+                    pltpu.VMEM((2, 1, eps), jnp.int32),
+                    pltpu.VMEM((2, 1, eps, lam), jnp.int32),
+                    pltpu.SemaphoreType.DMA((2, 3))]
+    return pl.pallas_call(
+        kernel,
+        out_shape=[jax.ShapeDtypeStruct((r,), b.dtype),
+                   jax.ShapeDtypeStruct((qn, f), jnp.int32),
+                   jax.ShapeDtypeStruct((r, eps, d), vecs.dtype),
+                   jax.ShapeDtypeStruct((r, eps), jnp.int32),
+                   jax.ShapeDtypeStruct((r, eps, lam), jnp.int32)],
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(b, vecs, vid, nbrs)
 
 
 # ------------------------------------------- pass 2b: broadcast and rank
@@ -240,7 +341,7 @@ def fused_round(queries: jnp.ndarray, u: jnp.ndarray,
                 vid: jnp.ndarray, nbrs: jnp.ndarray, n_expand: int,
                 metric: str = "l2", interpret: bool = True,
                 bq: int = BQ, pipeline_dma: bool = False,
-                _force_dma: bool = False):
+                fuse_union: bool = False, _force_dma: bool = False):
     """One search round's fetch pipeline, fused, batch-scope (see
     module docstring).
 
@@ -254,7 +355,11 @@ def fused_round(queries: jnp.ndarray, u: jnp.ndarray,
     Q x F requests is gathered once and broadcast — a request in tile 3
     rides a copy tile 0's requests triggered. ``pipeline_dma``
     double-buffers the cold gather on compiled calls (interpret always
-    takes the straight-line fallback unless ``_force_dma``)."""
+    takes the straight-line fallback unless ``_force_dma``).
+    ``fuse_union`` moves the pass-1 union into the gather kernel
+    (``gather_union``: SMEM-staged slot map, no host-visible pass-1
+    intermediates) — bit-identical to the two-pass path, which stays
+    available as the conformance oracle twin."""
     qn, d = queries.shape
     _, f = u.shape
     assert qn % bq == 0, (qn, bq)
@@ -264,18 +369,28 @@ def fused_round(queries: jnp.ndarray, u: jnp.ndarray,
     # outputs are masked/skipped downstream; ranks past the distinct
     # count keep the 0 placeholder no slot maps to.
     b = block_of[jnp.maximum(u, 0)]               # [Q, F] target blocks
-    uniq, req_rank = dedup.sorted_unique_ranks(b.reshape(-1))
-    rank2d = req_rank.reshape(qn, f)
 
-    # --- pass 2a: copy each distinct block's cold payload exactly once
-    r = uniq.shape[0]
-    rb = min(RB, r)
-    pad = (-r) % rb
-    uniq_p = uniq if pad == 0 else jnp.pad(uniq, (0, pad))
-    tv, ti, tn = gather_unique(
-        uniq_p, vecs, vid, nbrs, interpret=interpret,
-        pipeline_dma=pipeline_dma, rb=rb, _force_dma=_force_dma)
-    tv, ti, tn = tv[:r], ti[:r], tn[:r]
+    if fuse_union:
+        # fused pass 1+2a: the union resolves inside the gather kernel
+        # (sort-free twin, SMEM slot map) and the first cold DMA starts
+        # without a host-visible pass-1 boundary
+        uniq, rank2d, tv, ti, tn = gather_union(
+            b, vecs, vid, nbrs, interpret=interpret,
+            pipeline_dma=pipeline_dma, _force_dma=_force_dma)
+        r = uniq.shape[0]
+    else:
+        uniq, req_rank = dedup.sorted_unique_ranks(b.reshape(-1))
+        rank2d = req_rank.reshape(qn, f)
+
+        # --- pass 2a: copy each distinct block's cold payload once
+        r = uniq.shape[0]
+        rb = min(RB, r)
+        pad = (-r) % rb
+        uniq_p = uniq if pad == 0 else jnp.pad(uniq, (0, pad))
+        tv, ti, tn = gather_unique(
+            uniq_p, vecs, vid, nbrs, interpret=interpret,
+            pipeline_dma=pipeline_dma, rb=rb, _force_dma=_force_dma)
+        tv, ti, tn = tv[:r], ti[:r], tn[:r]
 
     # --- pass 2b: probe + hot/cold select + broadcast + rank per tile
     n = block_of.shape[0]

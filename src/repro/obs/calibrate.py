@@ -10,7 +10,12 @@ model *predicts* the measurement.
 The trick that keeps this dependency-free: within one pricing regime
 (host hops-granular vs device round-granular — the switch is
 ``t_round > 0 and batch_rounds > 0``), ``CostModel.latency_us`` is
-*affine* in the constants. So each sample row's coefficient vector is
+*affine* in the constants. This includes the speculative regimes
+(``IOStats.dma_speculative``, DESIGN.md §9): the ``max(dma, compute)``
+overlap chain and the wasted-DMA surcharge are priced from the same
+``t_batch_block``/``t_round_comp`` constants scaled by per-batch
+counters, so speculation introduces NO new calibration constants —
+a preset fit without speculation prices speculative runs too. So each sample row's coefficient vector is
 recovered exactly by finite differences at the base model (bump one
 constant by 1.0, re-price, subtract), and the fit is one least-squares
 solve. Constants whose coefficient column is all-zero on the given

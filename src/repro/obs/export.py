@@ -120,7 +120,8 @@ def validate_chrome_trace(obj) -> List[str]:
 def timeline_from_round_log(records: Sequence, cost_model,
                             tracer: Optional[Tracer] = None,
                             track: str = "device", t0_us: float = 0.0,
-                            batch: int = 0) -> Tracer:
+                            batch: int = 0,
+                            dma_track: bool = False) -> Tracer:
     """Render folded ``RoundRecord``s as modeled back-to-back
     ``device.round`` slices.
 
@@ -130,14 +131,30 @@ def timeline_from_round_log(records: Sequence, cost_model,
     ``t_batch_block`` (falling back to ``t_block_io`` when the model
     has no streaming rate — matching ``CostModel._io_time``). Durations
     are *modeled*, so the slices go in with explicit timing
-    (``Tracer.slice``), not the tracer's clock."""
+    (``Tracer.slice``), not the tracer's clock.
+
+    ``dma_track=True`` additionally renders the gather stream on its
+    own ``<track>.dma`` row so the ``max(dma, compute)`` overlap the
+    cost model prices is visible in Perfetto instead of serialized
+    into the round slice: each round's demand stream
+    (``cold - joins - spec_hits`` blocks) starts WITH the round slice
+    (overlapping its compute), and a round's speculatively consumed +
+    wasted blocks (``spec_hits + spec_wasted``) render as a
+    ``device.dma.spec`` slice back in the PREVIOUS round — where their
+    copies were actually in flight, overlapping that round's
+    expansion/top-M compute (DESIGN.md §9). Round boundaries (and the
+    round slices themselves) are unchanged either way, so the default
+    rendering stays bit-compatible."""
     from repro.obs.trace import manual_tracer
 
     tr = tracer if tracer is not None else manual_tracer(auto_tick_us=0.0)
     t_stream = (cost_model.t_batch_block if cost_model.t_batch_block
                 else cost_model.t_block_io)
     t = float(t0_us)
+    prev_t = float(t0_us)
     for r in records:
+        spec_h = getattr(r, "spec_hits", 0)
+        spec_w = getattr(r, "spec_wasted", 0)
         dur = (cost_model.t_round
                + r.live * cost_model.t_round_comp
                + (r.cold - r.joins) * t_stream
@@ -145,10 +162,27 @@ def timeline_from_round_log(records: Sequence, cost_model,
                + r.joins * cost_model.t_dedup_hit)
         args = {"live": r.live, "cold": r.cold, "tier0": r.tier0,
                 "joins": r.joins, "joins_x": r.joins_x,
-                "compacted": r.compacted}
+                "compacted": r.compacted, "spec_hits": spec_h,
+                "spec_wasted": spec_w}
         if batch:
             args["batch"] = batch
         tr.slice("device.round", ts_us=t, dur_us=max(dur, 0.0),
                  cat="device", track=track, **args)
+        if dma_track:
+            demand = max(r.cold - r.joins - spec_h, 0)
+            if demand > 0:
+                tr.slice("device.dma", ts_us=t,
+                         dur_us=demand * t_stream, cat="device",
+                         track=f"{track}.dma", blocks=demand,
+                         round=r.round)
+            spec_blocks = spec_h + spec_w
+            if spec_blocks > 0:
+                # issued while the PREVIOUS round's expansion/top-M
+                # maintenance ran — render it there, overlapping
+                tr.slice("device.dma.spec", ts_us=prev_t,
+                         dur_us=spec_blocks * t_stream, cat="device",
+                         track=f"{track}.dma", spec_hits=spec_h,
+                         spec_wasted=spec_w, round=r.round)
+        prev_t = t
         t += max(dur, 0.0)
     return tr

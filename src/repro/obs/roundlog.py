@@ -1,7 +1,7 @@
 """Per-round device search records (ROADMAP adaptive-plane v2, item 3).
 
 ``DeviceSearchParams.trace_rounds`` makes the batched while-loop in
-``repro.core.device_search`` carry a bounded ``[max_hops, 6] int32``
+``repro.core.device_search`` carry a bounded ``[max_hops, 8] int32``
 buffer; row ``t`` is written once per round, *before* compaction
 permutes the query rows, so every column is a batch-level sum or flag
 that is permutation-invariant by construction:
@@ -10,17 +10,26 @@ that is permutation-invariant by construction:
   col name                    per-round meaning
   == ======================= ==========================================
   0  ``live``                 queries still active this round
-  1  ``cold``                 cold block DMAs issued (post-dedup)
+  1  ``cold``                 cold block touches this round (pre-dedup)
   2  ``tier0``                tier-0 VMEM hot-tile hits
   3  ``joins``                cross-query dedup joins (gathers saved)
-  4  ``compacted``            1 if active-query compaction fired
+  4  ``joins_x``              cross-tile subset of ``joins``
+  5  ``compacted``            1 if active-query compaction fired
+  6  ``spec_hits``            paying gathers whose block the previous
+                              round speculatively pre-fetched
+                              (DESIGN.md §9; 0 when off)
+  7  ``spec_wasted``          speculative gathers this round consumed
+                              nothing of (0 when off)
   == ======================= ==========================================
 
 The fold invariants (asserted in tests/test_trace_roundlog.py) tie the
 log exactly to the coarse ``IOStats`` totals the serving plane already
 accounts with: ``sum(live) == hops``, ``sum(cold) == io``,
 ``sum(tier0) == tier0_hits``, ``sum(joins) == dedup_saved``,
-``sum(joins_x) == dedup_cross``, and
+``sum(joins_x) == dedup_cross``, ``sum(spec_hits) == spec_hits``,
+``sum(spec_wasted) == spec_wasted`` (both charged at consume time, so
+the round a hit/waste lands in is the round its authoritative fetch
+ran), and
 ``sum(live) / rounds == rounds_active_weight / batch_rounds`` — the
 round log is a lossless refinement of ``IOStats.from_device_batch``,
 not a second bookkeeping system that can drift from it.
@@ -33,7 +42,7 @@ from typing import Dict, List, Sequence
 import numpy as np
 
 ROUND_LOG_COLS = ("live", "cold", "tier0", "joins", "joins_x",
-                  "compacted")
+                  "compacted", "spec_hits", "spec_wasted")
 N_ROUND_COLS = len(ROUND_LOG_COLS)
 
 
@@ -42,17 +51,20 @@ class RoundRecord:
     """One lockstep round of a batched device search."""
     round: int
     live: int        # queries active this round
-    cold: int        # cold block DMAs issued (post-dedup)
+    cold: int        # cold block touches this round (pre-dedup)
     tier0: int       # tier-0 hot-tile hits
     joins: int       # dedup joins (whole-batch scope)
     joins_x: int     # cross-tile subset of ``joins``
     compacted: bool  # active-query compaction fired this round
+    spec_hits: int = 0    # paying gathers the previous round's
+    #                       speculation pre-fetched (consume-time)
+    spec_wasted: int = 0  # speculative gathers nothing consumed
 
 
 def fold_round_log(round_log, rounds: int) -> List[RoundRecord]:
     """Materialize the device buffer into exact per-round records.
 
-    ``round_log`` is the ``[max_hops, 6]`` array off the device (any
+    ``round_log`` is the ``[max_hops, 8]`` array off the device (any
     array-like); ``rounds`` is the loop's final trip count — rows at or
     beyond it are unwritten padding and are dropped."""
     log = np.asarray(round_log)
@@ -62,11 +74,12 @@ def fold_round_log(round_log, rounds: int) -> List[RoundRecord]:
     rounds = int(rounds)
     out = []
     for t in range(min(rounds, log.shape[0])):
-        live, cold, tier0, joins, joins_x, compacted = (
-            int(v) for v in log[t])
+        (live, cold, tier0, joins, joins_x, compacted, spec_h,
+         spec_w) = (int(v) for v in log[t])
         out.append(RoundRecord(round=t, live=live, cold=cold, tier0=tier0,
                                joins=joins, joins_x=joins_x,
-                               compacted=bool(compacted)))
+                               compacted=bool(compacted),
+                               spec_hits=spec_h, spec_wasted=spec_w))
     return out
 
 
@@ -86,5 +99,7 @@ def round_log_totals(records: Sequence[RoundRecord]) -> Dict[str, float]:
         "dedup_saved": sum(r.joins for r in records),
         "dedup_cross": sum(r.joins_x for r in records),
         "compactions": sum(1 for r in records if r.compacted),
+        "spec_hits": sum(r.spec_hits for r in records),
+        "spec_wasted": sum(r.spec_wasted for r in records),
         "live_weight": sum(r.live for r in records),
     }

@@ -98,6 +98,8 @@ class SegmentServer:
         self.last_hops = np.asarray(r.hops)
         self.last_dedup_saved = np.asarray(r.dedup_saved)
         self.last_dedup_cross = np.asarray(r.dedup_cross)
+        self.last_spec_hits = np.asarray(r.spec_hits)
+        self.last_spec_wasted = np.asarray(r.spec_wasted)
         self.last_rounds = int(r.rounds)
         # per-round trace buffer (params.trace_rounds; repro.obs) —
         # None when tracing is off
@@ -130,9 +132,12 @@ class SegmentServer:
                 "hops": self.last_hops,
                 "dedup_saved": self.last_dedup_saved,
                 "dedup_cross": self.last_dedup_cross,
+                "spec_hits": self.last_spec_hits,
+                "spec_wasted": self.last_spec_wasted,
                 "rounds": self.last_rounds,
                 "dma_pipelined": (self.params.pipeline_dma
-                                  and self.params.fetch_impl == "fused")}
+                                  and self.params.fetch_impl == "fused"),
+                "dma_speculative": self.params.speculate}
 
     def repack_source(self):
         return self.host
@@ -316,6 +321,7 @@ class QueryCoordinator:
     STATS_SCHEMA = ("segments_searched", "total_block_reads",
                     "mean_block_reads_per_query", "total_tier0_hits",
                     "total_dedup_saved", "total_dedup_cross",
+                    "total_spec_hits", "total_spec_wasted",
                     "deduped_block_reads",
                     "cache_hits", "cache_misses", "cache_hit_rate")
 
@@ -338,6 +344,7 @@ class QueryCoordinator:
                    else list(range(len(self.servers))))
         ids, dists, offs = [], [], []
         total_io, total_t0, total_saved, total_cross = 0, 0, 0, 0
+        total_spec_h, total_spec_w = 0, 0
         for si in targets:
             s = self.servers[si]
             if self.tracer is not None:
@@ -358,6 +365,8 @@ class QueryCoordinator:
                 total_t0 += int(np.asarray(bs["tier0_hits"]).sum())
                 total_saved += int(np.asarray(bs["dedup_saved"]).sum())
                 total_cross += int(np.asarray(bs["dedup_cross"]).sum())
+                total_spec_h += int(np.asarray(bs["spec_hits"]).sum())
+                total_spec_w += int(np.asarray(bs["spec_wasted"]).sum())
             if self.metrics is not None:
                 # per-target attribution: which segment the reads hit
                 self.metrics.counter("serve.block_reads",
@@ -377,6 +386,12 @@ class QueryCoordinator:
                  # the cross-tile subset of the joins — what batch-scope
                  # dedup saved beyond the old per-tile kernel's scope
                  "total_dedup_cross": total_cross,
+                 # cross-round speculation (DESIGN.md §9): paying
+                 # gathers the previous round pre-fetched, and
+                 # speculative gathers nothing consumed — zeros
+                 # whenever no target speculates
+                 "total_spec_hits": total_spec_h,
+                 "total_spec_wasted": total_spec_w,
                  "deduped_block_reads": total_io - total_saved}
         # repro.io: aggregate shared-cache counters from servers that
         # expose them, as deltas so every key in the dict is per-call
@@ -434,6 +449,10 @@ class QueryCoordinator:
             stats["total_dedup_saved"])
         m.counter("serve.total_dedup_cross").inc(
             stats["total_dedup_cross"])
+        m.counter("serve.total_spec_hits").inc(
+            stats["total_spec_hits"])
+        m.counter("serve.total_spec_wasted").inc(
+            stats["total_spec_wasted"])
         m.counter("serve.cache_hits").inc(stats["cache_hits"])
         m.counter("serve.cache_misses").inc(stats["cache_misses"])
         m.gauge("serve.cache_hit_rate").set(stats["cache_hit_rate"])

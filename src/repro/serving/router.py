@@ -200,6 +200,8 @@ class MeshQueryRouter:
                     (r.tier0_hits * owni)[:, None] * col,
                     (r.dedup_saved * owni)[:, None] * col,
                     (r.dedup_cross * owni)[:, None] * col,
+                    (r.spec_hits * owni)[:, None] * col,
+                    (r.spec_wasted * owni)[:, None] * col,
                     r.rounds[None])
 
         def leaf_spec(a):
@@ -211,6 +213,7 @@ class MeshQueryRouter:
         from jax.sharding import PartitionSpec as P
         in_specs = (seg_specs, P(), P("model"))
         out_specs = (P(), P(), P(None, "model"), P(None, "model"),
+                     P(None, "model"), P(None, "model"),
                      P(None, "model"), P(None, "model"),
                      P(None, "model"), P("model"))
         flag = ("check_vma" if "check_vma"
@@ -294,8 +297,8 @@ class MeshQueryRouter:
         return ids, dists, stats
 
     def _account(self, out, meta) -> Tuple[np.ndarray, np.ndarray, Dict]:
-        ids, dists, io_c, hops_c, t0_c, sv_c, cx_c, rounds = \
-            [np.asarray(x) for x in out]
+        (ids, dists, io_c, hops_c, t0_c, sv_c, cx_c, sh_c, sw_c,
+         rounds) = [np.asarray(x) for x in out]
         w = self.world
         # THE shared mesh fold (DESIGN.md §7): per-rank IOStats from
         # the masked device columns; totals are defined ONLY as the
@@ -303,14 +306,17 @@ class MeshQueryRouter:
         # additive across ranks with different round counts)
         pipelined = (self.search_params.pipeline_dma
                      and self.search_params.fetch_impl == "fused")
+        speculative = self.search_params.speculate
         per_rank = IOStats.fold_rank_batches(
             {r: (io_c[:, r], t0_c[:, r], hops_c[:, r], sv_c[:, r],
-                 int(rounds[r]), cx_c[:, r], pipelined)
+                 int(rounds[r]), cx_c[:, r], pipelined,
+                 sh_c[:, r], sw_c[:, r], speculative)
              for r in range(w)})
         total = IOStats.merge_ranks(per_rank)
         self.last_per_rank = per_rank
         self.last_stats = total
-        self._last_cols = (io_c, t0_c, hops_c, sv_c, cx_c, rounds)
+        self._last_cols = (io_c, t0_c, hops_c, sv_c, cx_c, sh_c, sw_c,
+                           rounds)
         self.batches += 1
         self._since_eval += 1
 
@@ -360,6 +366,8 @@ class MeshQueryRouter:
             "total_tier0_hits": total.tier0_hits,
             "total_dedup_saved": total.dedup_saved_fetches,
             "total_dedup_cross": total.dedup_cross_tile,
+            "total_spec_hits": total.spec_hits,
+            "total_spec_wasted": total.spec_wasted,
             "rounds_max": total.batch_rounds,
             "per_rank_modeled_us": per_rank_us,
             # the mesh step is gated by its slowest rank — exactly the
@@ -438,15 +446,19 @@ class MeshQueryRouter:
         ``merge_ranks``)."""
         if self._last_cols is None:
             return {}
-        io_c, t0_c, hops_c, sv_c, cx_c, rounds = self._last_cols
+        (io_c, t0_c, hops_c, sv_c, cx_c, sh_c, sw_c,
+         rounds) = self._last_cols
         return {"io": io_c.sum(axis=1), "tier0_hits": t0_c.sum(axis=1),
                 "hops": hops_c.sum(axis=1),
                 "dedup_saved": sv_c.sum(axis=1),
                 "dedup_cross": cx_c.sum(axis=1),
+                "spec_hits": sh_c.sum(axis=1),
+                "spec_wasted": sw_c.sum(axis=1),
                 "rounds": int(rounds.max()),
                 "dma_pipelined": (self.search_params.pipeline_dma
                                   and self.search_params.fetch_impl
-                                  == "fused")}
+                                  == "fused"),
+                "dma_speculative": self.search_params.speculate}
 
     _last_cols = None
 

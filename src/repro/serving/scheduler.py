@@ -163,7 +163,10 @@ class RepackScheduler:
                 np.asarray(bs["hops"]), np.asarray(bs["dedup_saved"]),
                 int(bs["rounds"]),
                 np.asarray(bs["dedup_cross"]),
-                bool(bs.get("dma_pipelined", False)))
+                bool(bs.get("dma_pipelined", False)),
+                np.asarray(bs["spec_hits"]),
+                np.asarray(bs["spec_wasted"]),
+                bool(bs.get("dma_speculative", False)))
             self._server_stats.setdefault(id(s), IOStats()).merge(batch)
             self._step_us_sum += self.cost_model.latency_us(batch)
             self._step_batches += 1

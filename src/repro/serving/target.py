@@ -14,8 +14,10 @@ The protocol has a small REQUIRED core and optional capability hooks:
   required   ``offset``, ``num_vectors``, ``search(queries, k)``
   stats      ``batch_stats()`` — the last served batch's device
              columns (``io``/``tier0_hits``/``hops``/``dedup_saved``/
-             ``dedup_cross`` arrays + scalar ``rounds``), empty for
-             targets without
+             ``dedup_cross``/``spec_hits``/``spec_wasted`` arrays +
+             scalar ``rounds``; the speculation columns are
+             zero-filled by the adapter for targets that do not emit
+             them), empty for targets without
              device telemetry; ``lifetime_stats()`` — lifetime
              counters (cache tiers, router ranks)
   range      ``range_search(queries, radius, k_cap)``
@@ -43,9 +45,16 @@ import numpy as np
 
 # the batch_stats() keys a device-telemetry-bearing target must emit
 # together — the exact columns ``IOStats.from_device_batch`` folds
-# (``dedup_cross`` is the cross-tile subset of ``dedup_saved``)
+# (``dedup_cross`` is the cross-tile subset of ``dedup_saved``;
+# ``spec_hits``/``spec_wasted`` are the speculation outcome columns,
+# zero whenever the target does not speculate)
 BATCH_STAT_KEYS = ("io", "tier0_hits", "hops", "dedup_saved",
-                   "dedup_cross", "rounds")
+                   "dedup_cross", "rounds", "spec_hits", "spec_wasted")
+
+# keys the adapter zero-fills for a target that predates (or opts out
+# of) speculation — a legacy 6-key emitter keeps working; the schema a
+# CONSUMER sees is always the full BATCH_STAT_KEYS
+_ZERO_DEFAULT_KEYS = ("spec_hits", "spec_wasted")
 
 
 @runtime_checkable
@@ -87,6 +96,14 @@ def batch_stats(target) -> Dict[str, object]:
     target fails loudly at the seam, not deep in a fold)."""
     fn = getattr(target, "batch_stats", None)
     stats = fn() if callable(fn) else {}
+    if stats and any(k not in stats for k in _ZERO_DEFAULT_KEYS):
+        # speculation columns default to zero arrays shaped like the
+        # batch's io column: every consumer fold then sees the full
+        # schema without caring whether the target speculates
+        io = np.asarray(stats["io"]) if "io" in stats else np.zeros(0)
+        stats = dict(stats)
+        for k in _ZERO_DEFAULT_KEYS:
+            stats.setdefault(k, np.zeros_like(io))
     if stats and any(k not in stats for k in BATCH_STAT_KEYS):
         missing = [k for k in BATCH_STAT_KEYS if k not in stats]
         raise ValueError(

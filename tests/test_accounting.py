@@ -252,6 +252,159 @@ def test_round_granular_pricing_monotone_in_occupancy():
         + agg.tier0_hits * cm.t_tier0_hit)
 
 
+# ------------- cross-round speculative pipeline (ISSUE 9, DESIGN.md §9)
+
+def test_from_device_clamps_spec_hits_to_paying_gathers():
+    """spec_hits counts paying gathers the speculative pipeline
+    pre-issued, so it can never exceed ``io - dedup_saved``; the
+    builder clamps rather than trusting the caller, and the flag
+    travels only when speculation actually ran."""
+    s = IOStats.from_device(10, 0, 5, 4, 8, spec_hits=9, spec_wasted=3,
+                            speculative=True)
+    assert s.spec_hits == 6                    # clamped to io - saved
+    assert s.spec_wasted == 3
+    assert s.dma_speculative == 1
+    off = IOStats.from_device(10, 0, 5, 4, 8)
+    assert off.spec_hits == 0 and off.spec_wasted == 0
+    assert off.dma_speculative == 0
+
+
+def test_spec_counters_merge_additive_flag_by_max():
+    """Hits and waste are per-query work counts (additive across a
+    fold); dma_speculative is a batch-level regime flag (max-merge,
+    like dma_pipelined)."""
+    a = IOStats.from_device(10, 0, 5, 2, 8, spec_hits=3, spec_wasted=1,
+                            speculative=True)
+    b = IOStats.from_device(6, 0, 4, 1, 8, spec_hits=2, spec_wasted=4,
+                            speculative=True)
+    a.merge(b)
+    assert a.spec_hits == 5 and a.spec_wasted == 5
+    assert a.dma_speculative == 1
+
+
+def test_from_device_batch_folds_spec_columns():
+    io, t0 = [10, 4, 0], [3, 1, 0]
+    hops, sv, cx = [6, 8, 0], [2, 1, 0], [1, 1, 0]
+    sh, sw = [3, 1, 0], [2, 0, 0]
+    agg = IOStats.from_device_batch(io, t0, hops, sv, 8, cx, False,
+                                    sh, sw, True)
+    assert agg.spec_hits == 4 and agg.spec_wasted == 2
+    assert agg.dma_speculative == 1
+    # pre-speculation callers (short folds) zero the columns
+    legacy = IOStats.from_device_batch(io, t0, hops, sv, 8, cx)
+    assert legacy.spec_hits == 0 and legacy.spec_wasted == 0
+    assert legacy.dma_speculative == 0
+
+
+def test_speculative_pipelined_pricing_max_chain():
+    """DESIGN.md §9 pricing: with both flags set the round chain pays
+    ``max(stream x (1 - h), compute)`` — the spec-hit share of the
+    stream left this round's critical path — plus the serial
+    mis-speculation surcharge. h = 0 reduces exactly to the PR-8
+    pipelined form; waste is a pure additive penalty."""
+    cm = TPU_HBM_SEGMENT
+    cols = ([10, 4], [3, 1], [6, 8], [2, 0], 8)
+    piped = IOStats.from_device_batch(*cols, pipelined=True)
+    spec = IOStats.from_device_batch(*cols, pipelined=True,
+                                     spec_hits=[4, 2], spec_wasted=[0, 0],
+                                     speculative=True)
+    t_piped, t_spec = cm.latency_us(piped), cm.latency_us(spec)
+    br = cm.breakdown(spec)
+    stream, rcomp = br["t_dma_stream_us"], br["t_round_comp_us"]
+    h, waste = br["spec_hit_frac"], br["t_spec_waste_us"]
+    assert 0 < h <= 1 and waste == 0
+    # reconstruct the §9 form from the serial components
+    serial = IOStats.from_device_batch(*cols)
+    t_serial = cm.latency_us(serial)
+    assert t_spec == pytest.approx(
+        t_serial - stream - rcomp + max(stream * (1 - h), rcomp))
+    # pre-issuing paying gathers never makes the batch slower
+    assert t_spec <= t_piped
+    # h = 0 (flag set, nothing speculated) is exactly the PR-8 price
+    h0 = IOStats.from_device_batch(*cols, pipelined=True,
+                                   spec_hits=[0, 0], spec_wasted=[0, 0],
+                                   speculative=True)
+    assert cm.latency_us(h0) == pytest.approx(t_piped)
+    # waste surcharges serially at the bandwidth rate
+    wasted = IOStats.from_device_batch(*cols, pipelined=True,
+                                       spec_hits=[4, 2],
+                                       spec_wasted=[3, 2],
+                                       speculative=True)
+    assert cm.latency_us(wasted) == pytest.approx(
+        t_spec + 5 * cm.t_batch_block)
+    # the outer §5.1 pipeline is untouched by the flags
+    assert cm.latency_us(spec, pipeline=True) == pytest.approx(
+        cm.latency_us(serial, pipeline=True))
+
+
+def test_speculative_only_pricing_discounts_stream_share():
+    """Speculation without the double-buffered gather: the pre-issued
+    share of the stream overlapped the PREVIOUS round's compute, so it
+    simply leaves the serial io term."""
+    cm = TPU_HBM_SEGMENT
+    cols = ([10, 4], [3, 1], [6, 8], [2, 0], 8)
+    serial = IOStats.from_device_batch(*cols)
+    spec = IOStats.from_device_batch(*cols, spec_hits=[4, 2],
+                                     spec_wasted=[1, 0],
+                                     speculative=True)
+    br = cm.breakdown(spec)
+    stream, h = br["t_dma_stream_us"], br["spec_hit_frac"]
+    assert cm.latency_us(spec) == pytest.approx(
+        cm.latency_us(serial) - stream * h + br["t_spec_waste_us"])
+    # flags are regime-gated: a round-less speculative stat prices
+    # exactly like its plain twin (hops-granular seed pricing)
+    flat = IOStats.from_device(6, 2, 6, 0, 0, spec_hits=3,
+                               speculative=True)
+    assert cm.latency_us(flat) == pytest.approx(
+        cm.latency_us(IOStats.from_device(6, 2, 6, 0, 0)))
+
+
+# ------------------- batch-stats schema (ISSUE 9 satellite: spec cols)
+
+def test_batch_stat_keys_carry_spec_columns():
+    """The wire schema between targets and consumers includes the
+    speculation outcome columns, and the adapter zero-fills them for a
+    legacy 6-key emitter — consumers always fold the full schema."""
+    from repro.serving import target as T
+
+    assert "spec_hits" in T.BATCH_STAT_KEYS
+    assert "spec_wasted" in T.BATCH_STAT_KEYS
+
+    class Legacy:
+        offset, num_vectors = 0, 8
+
+        def search(self, q, k=None):           # pragma: no cover
+            raise NotImplementedError
+
+        def batch_stats(self):
+            io = np.array([3, 1, 0, 2])
+            return {"io": io, "tier0_hits": io * 0, "hops": io,
+                    "dedup_saved": io * 0, "dedup_cross": io * 0,
+                    "rounds": 5}
+
+    bs = T.batch_stats(Legacy())
+    assert set(T.BATCH_STAT_KEYS) <= set(bs)
+    np.testing.assert_array_equal(bs["spec_hits"], np.zeros(4))
+    np.testing.assert_array_equal(bs["spec_wasted"], np.zeros(4))
+
+    class Broken(Legacy):
+        def batch_stats(self):
+            return {"io": np.array([1.0]), "spec_hits": np.zeros(1),
+                    "spec_wasted": np.zeros(1)}
+
+    with pytest.raises(ValueError, match="travel together"):
+        T.batch_stats(Broken())
+
+
+def test_coordinator_stats_schema_has_spec_totals():
+    """QueryCoordinator.search always emits the speculation totals
+    (zero when nothing speculates) — dashboards key on a fixed
+    schema."""
+    from repro.serving.coordinator import QueryCoordinator
+    assert "total_spec_hits" in QueryCoordinator.STATS_SCHEMA
+    assert "total_spec_wasted" in QueryCoordinator.STATS_SCHEMA
+
+
 def test_round_granular_is_opt_in():
     """Stats without a round count (host paths) and models without
     t_round (the NVMe segment) price exactly as before."""

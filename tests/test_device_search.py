@@ -295,6 +295,110 @@ def test_pipeline_dma_knob_is_payload_invariant(device_seg, small_data):
     assert int(r_on.rounds) == int(r_off.rounds)
 
 
+@pytest.mark.slow
+def test_speculation_is_result_and_counter_invariant(device_seg,
+                                                     small_data):
+    """ISSUE 9 acceptance (deterministic twin of the hypothesis
+    property): the cross-round speculative pipeline never changes
+    results or any non-speculative counter — a mis-speculated block is
+    re-gathered by the authoritative path, never trusted — across
+    batch sizes, round tilings and fetch widths. Its own counters obey
+    hits <= paying gathers, are zero with the knob off, and are
+    invariant to the round tiling (prediction runs on whole-batch
+    state, unlike the dedup intra/cross split)."""
+    _, q = small_data
+    base_p = dataclasses.replace(P48, max_hops=64)
+    last_spec = None
+    for b, cap, fw in ((4, 0, 1), (8, 0, 2), (16, 0, 2), (16, 8, 2)):
+        p = dataclasses.replace(base_p, round_tile_cap=cap,
+                                fetch_width=fw)
+        qb = jnp.asarray(q[:b])
+        r0 = DS.device_anns(device_seg, qb, p)
+        r1 = DS.device_anns(device_seg, qb,
+                            dataclasses.replace(p, speculate=True))
+        for f in ("ids", "dists", "io", "tier0_hits", "hops",
+                  "dedup_saved", "dedup_cross"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(r0, f)),
+                np.asarray(getattr(r1, f)),
+                err_msg=f"speculate changed {f} (b={b}, cap={cap}, "
+                        f"fw={fw})")
+        assert int(r0.rounds) == int(r1.rounds)
+        assert (np.asarray(r0.spec_hits) == 0).all()
+        assert (np.asarray(r0.spec_wasted) == 0).all()
+        io, sv = np.asarray(r1.io), np.asarray(r1.dedup_saved)
+        sh, sw = np.asarray(r1.spec_hits), np.asarray(r1.spec_wasted)
+        assert (sh >= 0).all() and (sw >= 0).all()
+        # a hit is a paying gather pre-issued early — never more of
+        # them than the batch actually paid for
+        assert (sh <= io - sv).all()
+        if (b, fw) == (16, 2):
+            # tiling must not move the speculation counters (cap 0 and
+            # cap 8 run in consecutive iterations here)
+            if last_spec is not None:
+                np.testing.assert_array_equal(last_spec[0], sh)
+                np.testing.assert_array_equal(last_spec[1], sw)
+            last_spec = (sh, sw)
+    assert sh.sum() > 0, "this workload should speculate successfully"
+
+
+@pytest.mark.slow
+def test_fuse_union_is_payload_invariant(device_seg, small_data):
+    """ISSUE 9: the in-kernel union fusion (``fuse_union``) removes the
+    host-visible pass-1 launch but must keep every result and counter
+    bit-identical to the two-pass path (the kernel-level identity is
+    pinned in test_kernels; this guards the end-to-end wiring)."""
+    _, q = small_data
+    p = dataclasses.replace(P48, max_hops=64, fetch_width=2)
+    qb = jnp.asarray(q[:8])
+    r_on = DS.device_anns(device_seg, qb,
+                          dataclasses.replace(p, fuse_union=True))
+    r_off = DS.device_anns(device_seg, qb,
+                           dataclasses.replace(p, fuse_union=False))
+    for f in ("ids", "dists", "io", "tier0_hits", "hops",
+              "dedup_saved", "dedup_cross"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(r_on, f)), np.asarray(getattr(r_off, f)),
+            err_msg=f"fuse_union changed {f}")
+    assert int(r_on.rounds) == int(r_off.rounds)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                       # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @pytest.mark.slow
+    @given(rows=st.lists(st.integers(0, 23), min_size=8, max_size=8),
+           cap=st.sampled_from([0, 4]),
+           fw=st.sampled_from([1, 2]))
+    @settings(max_examples=6, deadline=None)
+    def test_speculation_invariance_property(rows, cap, fw, device_seg,
+                                             small_data):
+        """ANY batch composition x tiling x fetch width: speculation
+        on/off ``(ids, dists)`` and every shared counter (including
+        the zeroed spec columns of the off run) are bit-identical."""
+        _, q = small_data
+        p = dataclasses.replace(P48, max_hops=64, round_tile_cap=cap,
+                                fetch_width=fw)
+        qb = jnp.asarray(q[np.asarray(rows)])
+        r0 = DS.device_anns(device_seg, qb, p)
+        r1 = DS.device_anns(device_seg, qb,
+                            dataclasses.replace(p, speculate=True))
+        for f in ("ids", "dists", "io", "tier0_hits", "hops",
+                  "dedup_saved", "dedup_cross"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(r0, f)), np.asarray(getattr(r1, f)))
+        assert int(r0.rounds) == int(r1.rounds)
+        assert not np.asarray(r0.spec_hits).any()
+        assert not np.asarray(r0.spec_wasted).any()
+        sh = np.asarray(r1.spec_hits)
+        assert (sh <= np.asarray(r1.io)
+                - np.asarray(r1.dedup_saved)).all()
+
+
 def test_tier0_repack_from_observed_frequencies(small_segment):
     """ISSUE 4 satellite (dynamic tier-0 admission): a drifted observed
     frequency profile re-ranks the pack — the observed-hot blocks enter

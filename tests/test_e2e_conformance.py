@@ -102,11 +102,18 @@ def test_device_family_bit_identity(small_segment, small_data,
     rf = DS.device_anns(device_seg, jnp.asarray(q), P_CONF)
     rj = DS.device_anns(device_seg, jnp.asarray(q),
                         dataclasses.replace(P_CONF, fetch_impl="jnp"))
+    r2p = DS.device_anns(device_seg, jnp.asarray(q),
+                         dataclasses.replace(P_CONF, fuse_union=False))
+    rsp = DS.device_anns(device_seg, jnp.asarray(q),
+                         dataclasses.replace(P_CONF, speculate=True))
     srv = SegmentServer(segment=device_seg, offset=0,
                         num_vectors=x.shape[0], params=P_CONF)
     si, sd, _ = srv.search(q, 10)
     for name, (ids, dd) in {
             "jnp": (np.asarray(rj.ids), np.asarray(rj.dists)),
+            "two-pass-union": (np.asarray(r2p.ids),
+                               np.asarray(r2p.dists)),
+            "speculate": (np.asarray(rsp.ids), np.asarray(rsp.dists)),
             "served": (si, sd)}.items():
         np.testing.assert_array_equal(np.asarray(rf.ids), ids,
                                       err_msg=f"ids: fused vs {name}")

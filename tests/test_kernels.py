@@ -185,6 +185,81 @@ def test_fused_round_idle_tile_emits_masked_sentinels():
                                   np.asarray(want[0][:8]))
 
 
+@pytest.mark.parametrize("r,hi,seed", [(8, 4, 0), (64, 12, 1),
+                                       (96, 96, 2), (128, 3, 3),
+                                       (16, 1, 4)])
+def test_union_slot_map_matches_sorted_unique_oracle(r, hi, seed):
+    """DESIGN.md §9: the sort-free O(R^2) in-kernel union twin is
+    bit-identical to the argsort+scatter pass-1 implementation — same
+    ascending uniq with 0 placeholders past the distinct count, same
+    flat-slot -> unique-rank map — across duplicate densities from
+    all-distinct to all-equal."""
+    from repro.kernels.dedup import sorted_unique_ranks, union_slot_map
+    rng = np.random.default_rng(seed)
+    flat = jnp.asarray(rng.integers(0, hi, (r,)), jnp.int32)
+    uniq_s, rank_s = sorted_unique_ranks(flat)
+    uniq_m, rank_m = union_slot_map(flat)
+    np.testing.assert_array_equal(np.asarray(uniq_s),
+                                  np.asarray(uniq_m))
+    np.testing.assert_array_equal(np.asarray(rank_s),
+                                  np.asarray(rank_m))
+    # the defining identity both must satisfy
+    np.testing.assert_array_equal(np.asarray(uniq_m)[np.asarray(rank_m)],
+                                  np.asarray(flat))
+
+
+@pytest.mark.parametrize("force_dma", [False, True])
+def test_gather_union_matches_two_pass(force_dma):
+    """The fused pass 1+2a kernel (in-kernel union + cold gather,
+    straight-line and double-buffered-DMA schedules) hands pass 2b the
+    same five values as host-side pass 1 + ``gather_unique``,
+    bit-identically — including the 0-placeholder tail rows past the
+    distinct count, which both paths gather harmlessly."""
+    from repro.kernels.dedup import sorted_unique_ranks as sur
+    from repro.kernels.tier0_fetch import gather_union
+    rng = np.random.default_rng(7)
+    qn, f, rho, eps, d, lam = 16, 3, 24, 4, 16, 5
+    b = jnp.asarray(rng.integers(0, rho, (qn, f)), jnp.int32)
+    vecs = jnp.asarray(rng.standard_normal((rho, eps, d)), jnp.float32)
+    vid = jnp.asarray(rng.permutation(rho * eps).reshape(rho, eps),
+                      jnp.int32)
+    nbrs = jnp.asarray(rng.integers(-1, rho * eps, (rho, eps, lam)),
+                       jnp.int32)
+    uniq, rank2d, tv, ti, tn = gather_union(b, vecs, vid, nbrs,
+                                            _force_dma=force_dma)
+    uniq_w, rank_w = sur(b.reshape(-1))
+    np.testing.assert_array_equal(np.asarray(uniq), np.asarray(uniq_w))
+    np.testing.assert_array_equal(np.asarray(rank2d),
+                                  np.asarray(rank_w).reshape(qn, f))
+    np.testing.assert_array_equal(np.asarray(tv),
+                                  np.asarray(vecs)[np.asarray(uniq_w)])
+    np.testing.assert_array_equal(np.asarray(ti),
+                                  np.asarray(vid)[np.asarray(uniq_w)])
+    np.testing.assert_array_equal(np.asarray(tn),
+                                  np.asarray(nbrs)[np.asarray(uniq_w)])
+
+
+@pytest.mark.parametrize("q,rho,eps,d,f,hot_n",
+                         [(16, 32, 4, 16, 1, 8), (37, 64, 8, 32, 2, 0),
+                          (8, 16, 6, 24, 3, 16)])
+@pytest.mark.parametrize("force_dma", [False, True])
+def test_fused_round_union_fusion_is_bit_identical(q, rho, eps, d, f,
+                                                   hot_n, force_dma):
+    """ISSUE 9 acceptance: fused-union vs two-pass ``fused_round`` is
+    bit-identical on every output — the two-pass path stays available
+    as the conformance oracle twin, under both gather schedules."""
+    args = _fused_round_case(q, rho, eps, d, f, hot_n)
+    n_expand = f * 2
+    base = fused_round(*args, n_expand, _force_dma=force_dma)
+    fused = fused_round(*args, n_expand, fuse_union=True,
+                        _force_dma=force_dma)
+    for name, a, b in zip(("dists", "vid", "nbrs", "hit", "order"),
+                          base, fused):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"fuse_union changed {name}")
+
+
 def test_block_rank_matches_search_semantics():
     """The kernel's top-m selection equals the block-pruning selection of
     the host search (ascending distance, ties by slot order)."""

@@ -210,20 +210,57 @@ def test_timeline_from_round_log_modeled_durations():
     assert validate_chrome_trace(chrome_trace(tr)) == []
 
 
+def test_timeline_dma_track_renders_speculative_overlap():
+    """``dma_track=True`` puts the gather stream on its own row: a
+    round's demand DMAs overlap its own round slice, while its
+    speculatively pre-issued blocks render back in the PREVIOUS round
+    (where the copies were actually in flight). The round slices stay
+    bit-compatible with the default rendering."""
+    records = [RoundRecord(0, live=8, cold=10, tier0=2, joins=3,
+                           joins_x=1, compacted=False),
+               RoundRecord(1, live=4, cold=6, tier0=1, joins=1,
+                           joins_x=0, compacted=True, spec_hits=2,
+                           spec_wasted=1)]
+    cm = TPU_HBM_SEGMENT
+    base = timeline_from_round_log(records, cm)
+    tr = timeline_from_round_log(records, cm, dma_track=True)
+    for a, b in zip(base.by_name("device.round"),
+                    tr.by_name("device.round")):
+        assert a.ts_us == b.ts_us and a.dur_us == b.dur_us
+        assert a.args["spec_hits"] == b.args["spec_hits"]
+    t_stream = cm.t_batch_block if cm.t_batch_block else cm.t_block_io
+    r0, r1 = tr.by_name("device.round")
+    d0, d1 = tr.by_name("device.dma")
+    # demand streams start WITH their round (overlapping its compute)
+    assert d0.ts_us == r0.ts_us and d0.args["blocks"] == 10 - 3
+    assert d1.ts_us == pytest.approx(r1.ts_us)
+    assert d1.args["blocks"] == 6 - 1 - 2      # spec hits left the demand
+    assert d1.dur_us == pytest.approx(3 * t_stream)
+    # round 1's speculative copies render back in round 0
+    spec, = tr.by_name("device.dma.spec")
+    assert spec.ts_us == r0.ts_us
+    assert spec.dur_us == pytest.approx((2 + 1) * t_stream)
+    assert spec.args["spec_hits"] == 2 and spec.args["spec_wasted"] == 1
+    assert {d0.track, d1.track, spec.track} == {"device.dma"}
+    assert validate_chrome_trace(chrome_trace(tr)) == []
+
+
 # ---------------------------------------------------------- round-log fold
 def test_fold_round_log_drops_padding_and_validates_shape():
-    log = np.zeros((6, 6), np.int32)
-    log[0] = [8, 10, 2, 3, 1, 0]
-    log[1] = [4, 6, 1, 1, 0, 1]
+    log = np.zeros((6, 8), np.int32)
+    log[0] = [8, 10, 2, 3, 1, 0, 2, 1]
+    log[1] = [4, 6, 1, 1, 0, 1, 0, 3]
     recs = fold_round_log(log, rounds=2)
     assert len(recs) == 2
-    assert recs[1] == RoundRecord(1, 4, 6, 1, 1, 0, True)
+    assert recs[1] == RoundRecord(1, 4, 6, 1, 1, 0, True,
+                                  spec_hits=0, spec_wasted=3)
     tot = round_log_totals(recs)
     assert tot == {"rounds": 2, "hops": 12, "io": 16, "tier0_hits": 3,
                    "dedup_saved": 4, "dedup_cross": 1, "compactions": 1,
+                   "spec_hits": 2, "spec_wasted": 4,
                    "live_weight": 12}
     with pytest.raises(ValueError):
-        fold_round_log(np.zeros((6, 5), np.int32), 2)
+        fold_round_log(np.zeros((6, 6), np.int32), 2)
 
 
 # ----------------------------------------------------------- perf artifact

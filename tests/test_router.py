@@ -123,6 +123,44 @@ def test_replica_slices_partition_batch(router):
 
 
 @needs_mesh
+def test_routed_speculation_is_bit_identical(router, mesh_servers):
+    """ISSUE 9 mesh acceptance: the cross-round speculative pipeline
+    under shard_map fan-out changes nothing the user sees — routed
+    (ids, dists) and every shared counter are bit-identical — while
+    the spec counters flow through the per-rank fold, the batch_stats
+    schema and the dma_speculative flag."""
+    servers, q = mesh_servers
+    spec_servers = [dataclasses.replace(
+        s, params=dataclasses.replace(s.params, speculate=True))
+        for s in servers]
+    spec_router = MeshQueryRouter(spec_servers, params=router.params)
+    ri, rd, stats = router.route(q, k=10)
+    si, sd, sstats = spec_router.route(q, k=10)
+    np.testing.assert_array_equal(ri, si)
+    np.testing.assert_array_equal(rd, sd)
+    for field in ("cache_misses", "tier0_hits", "hops",
+                  "dedup_saved_fetches", "dedup_cross_tile"):
+        assert getattr(stats["total"], field) \
+            == getattr(sstats["total"], field), field
+    assert stats["rounds_max"] == sstats["rounds_max"]
+    # off-run counters are zero; on-run counters fold rank-additively
+    assert stats["total_spec_hits"] == 0
+    assert stats["total_spec_wasted"] == 0
+    assert stats["total"].dma_speculative == 0
+    assert sstats["total"].dma_speculative == 1
+    assert sstats["total_spec_hits"] == sum(
+        r.spec_hits for r in sstats["per_rank"].values())
+    assert sstats["total_spec_hits"] > 0, \
+        "this workload should speculate successfully"
+    # the schema rides batch_stats: spec columns sum to the totals
+    bs = spec_router.batch_stats()
+    assert int(np.sum(bs["spec_hits"])) == sstats["total_spec_hits"]
+    assert int(np.sum(bs["spec_wasted"])) == sstats["total_spec_wasted"]
+    assert bs["dma_speculative"] is True
+    assert spec_router.batch_stats() is not None
+
+
+@needs_mesh
 def test_router_is_segment_target(router, mesh_servers):
     """The router IS a SegmentTarget: protocol surface + batch_stats
     schema + per-query io that sums each (query, segment) once."""

@@ -99,6 +99,38 @@ def test_round_log_folds_exactly_to_iostats(packed_seg, small_data,
         assert tot["compactions"] == 0
 
 
+@pytest.mark.slow
+def test_round_log_spec_columns_tie_exactly(packed_seg, small_data):
+    """ISSUE 9: the speculation columns are charged at consume time, so
+    the folded rows tie bit-exactly to the ``DeviceSearchResult``
+    counters — and a non-speculating run logs all-zero spec columns
+    while every other column (and the results) stay bit-identical."""
+    _, q = small_data
+    p = dataclasses.replace(P, trace_rounds=True, speculate=True)
+    r = DS.device_anns(packed_seg, jnp.asarray(q[:8]), p)
+    records = fold_round_log(r.round_log, int(r.rounds))
+    tot = round_log_totals(records)
+    assert tot["spec_hits"] == int(np.asarray(r.spec_hits).sum())
+    assert tot["spec_wasted"] == int(np.asarray(r.spec_wasted).sum())
+    assert tot["spec_hits"] > 0, \
+        "this workload should speculate successfully"
+    # a round's hits are a subset of its paying gathers by construction
+    for rec in records:
+        assert rec.spec_hits <= rec.cold - rec.joins
+    r0 = DS.device_anns(packed_seg, jnp.asarray(q[:8]),
+                        dataclasses.replace(p, speculate=False))
+    log0 = np.asarray(r0.round_log)
+    assert not log0[:, 6:8].any()
+    for f in ("ids", "dists", "io", "tier0_hits", "hops",
+              "dedup_saved"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(r0, f)), np.asarray(getattr(r, f)),
+            err_msg=f"speculation changed {f}")
+    # the non-spec columns of the two logs agree row for row
+    np.testing.assert_array_equal(log0[:, :6],
+                                  np.asarray(r.round_log)[:, :6])
+
+
 # ----------------------------------------------------------- property form
 try:
     from hypothesis import given, settings, strategies as st
