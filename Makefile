@@ -2,8 +2,9 @@
 
 PY ?= python
 
-.PHONY: test test-fast test-device test-e2e test-obs test-mesh bench \
-	bench-io bench-device bench-batch bench-obs bench-mesh dev-deps
+.PHONY: test test-fast test-device test-e2e test-obs test-mesh \
+	test-hybrid bench bench-io bench-device bench-batch bench-obs \
+	bench-mesh bench-hybrid dev-deps
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -27,6 +28,25 @@ test-device:
 # build-heavy slow cases — its own CI lane
 test-e2e:
 	PYTHONPATH=src $(PY) -m pytest -x -q tests/test_e2e_conformance.py
+
+# the hybrid hot/cold tier (ISSUE 10): the hotset-bugfix regressions,
+# hot-tier/delta-segment units, seed-override bit-identity and the
+# scheduler layout-swap invalidation, plus the hybrid slice of the e2e
+# conformance suite (recall + strict cold-I/O cut, tombstone masking,
+# compaction bit-identity)
+test-hybrid:
+	PYTHONPATH=src $(PY) -m pytest -x -q tests/test_hybrid.py \
+		tests/test_e2e_conformance.py -k "hybrid or delta"
+
+# the hybrid budget sweep: memory-vs-disk modeled latency split at
+# fixed recall, with the strict cold-I/O-cut acceptance asserted
+# in-sweep; the fresh BENCH_hybrid_hot_tier.json is gated against the
+# committed baseline
+bench-hybrid:
+	BENCH_SMOKE=1 PYTHONPATH=src $(PY) -m benchmarks.run \
+		--only hybrid_hot_tier_sweep
+	PYTHONPATH=src $(PY) -m benchmarks.check_regression \
+		--artifact hybrid_hot_tier
 
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run

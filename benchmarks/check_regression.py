@@ -67,6 +67,13 @@ ARTIFACT_GATES = {
         "compare_keys": ("n", "dim", "tier0_frac", "fetch_width",
                          "smoke"),
     },
+    "hybrid_hot_tier": {
+        # the hybrid contract: cold I/O cut holds (higher is better)
+        # and the memory-priced hybrid latency does not creep back up
+        "metrics": {"cold_io_cut": "higher",
+                    "modeled_latency_us_nvme": "lower"},
+        "compare_keys": ("n", "dim", "budget_frac", "smoke"),
+    },
 }
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

@@ -44,6 +44,7 @@ BENCHES = [
     device_bench.device_batch_dedup_sweep,
     device_bench.device_drift_repack_sweep,
     device_bench.device_speculate_sweep,
+    device_bench.hybrid_hot_tier_sweep,
     device_bench.starling_fetch_width,
     device_bench.device_range_search_rounds,
     device_bench.batched_beam_throughput,

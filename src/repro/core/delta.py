@@ -1,0 +1,222 @@
+"""repro.core.delta — the mutable delta segment (DESIGN.md §10).
+
+A ``DeltaSegment`` wraps an immutable disk ``Segment`` with the two
+mutable structures the hybrid tier provides:
+
+  * the **hot tier** (``repro.io.hottier``): an in-memory answering
+    graph over the hot set whose append region absorbs inserts, and
+  * a **tombstone bitmap** over the base id space; deletes mark it and
+    are masked out of both tiers at query time.
+
+Queries run hot-first: the hot graph converges at memory cost, the
+block search is seeded from its exit frontier (the ``seeds`` override
+of ``core.search.anns``), and the two result sets merge by
+``(dist, id)`` with dedup — identical ordering to the serving-plane
+merges. The memory work lands in ``IOStats.hot_tier_hits``.
+
+``compact()`` folds everything back to disk: gather the live vectors
+(base minus tombstones, plus live appends), rebuild through the full
+``core.segment.build_segment`` pipeline (graph, ``core/layout``
+reordering, nav graph, PQ) and return a fresh ``Segment``. A compaction
+of a delta whose live set equals some vector set X is bit-identical to
+``build_segment(X, params)`` directly — there is no incremental
+layout patching to drift from the offline build.
+
+``swap_into_host_server`` / ``swap_into_device_server`` install the
+compacted segment under a serving target and notify the
+``RepackScheduler`` (``note_layout_swap``) so demand windows drop
+entries for blocks that no longer exist.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.iostats import IOStats
+from repro.core.params import HotTierParams, SearchParams
+from repro.core.search import _entry_points, anns
+from repro.core.segment import Segment, build_segment
+from repro.io.hottier import HotTier, build_hot_tier, merge_hot_cold
+
+
+@dataclasses.dataclass
+class DeltaSegment:
+    """An immutable base ``Segment`` + the hot tier's mutable delta.
+
+    Global ids: ``[0, base_n)`` are the base segment's vertices;
+    appended vectors take ids from ``base_n`` upward and exist only in
+    the hot tier until a compaction."""
+    base: Segment
+    hot: HotTier
+    tomb: np.ndarray              # [base_n] bool — deleted base ids
+    appended: List[Tuple[int, np.ndarray]]  # (gid, vec) in insert order
+    next_gid: int
+
+    @classmethod
+    def wrap(cls, seg: Segment, p: HotTierParams = HotTierParams(),
+             metric: Optional[str] = None) -> "DeltaSegment":
+        hot = build_hot_tier(seg, p, metric=metric)
+        n = seg.num_vectors
+        return cls(base=seg, hot=hot, tomb=np.zeros(n, bool),
+                   appended=[], next_gid=n)
+
+    # ----------------------------------------------------------- census
+
+    @property
+    def base_n(self) -> int:
+        return int(self.tomb.shape[0])
+
+    @property
+    def num_deleted(self) -> int:
+        return int(self.tomb.sum()) + sum(
+            1 for gid, _ in self.appended if self._append_dead(gid))
+
+    @property
+    def live_count(self) -> int:
+        return self.base_n + len(self.appended) - self.num_deleted
+
+    def _append_dead(self, gid: int) -> bool:
+        li = self.hot._local_of.get(int(gid))
+        return li is None or bool(self.hot.dead[li])
+
+    # ------------------------------------------------------- mutability
+
+    def insert(self, vecs: np.ndarray) -> np.ndarray:
+        """Append vectors; returns their new global ids. They are
+        immediately searchable through the hot route (the cold tier
+        does not know them until ``compact``)."""
+        vecs = np.atleast_2d(np.asarray(vecs, np.float32))
+        gids = np.arange(self.next_gid, self.next_gid + vecs.shape[0],
+                         dtype=np.int64)
+        self.hot.insert(vecs, gids)
+        self.appended.extend(
+            (int(g), np.array(v, np.float32)) for g, v in zip(gids, vecs))
+        self.next_gid += vecs.shape[0]
+        return gids
+
+    def delete(self, gid: int) -> bool:
+        """Tombstone a global id in both tiers. Returns False if the
+        id does not exist (never assigned, or already deleted)."""
+        gid = int(gid)
+        if gid < 0 or gid >= self.next_gid:
+            return False
+        if gid < self.base_n:
+            if self.tomb[gid]:
+                return False
+            self.tomb[gid] = True
+            self.hot.delete(gid)   # may or may not be hot-resident
+            return True
+        # appended: lives only in the hot tier
+        if self._append_dead(gid):
+            return False
+        return self.hot.delete(gid)
+
+    # ------------------------------------------------------ compaction
+
+    def live_vectors(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(x_live [M, D], gids_live [M]) — surviving base vectors in
+        global-id order, then live appends in insert order. The base
+        vectors are reconstructed from the block store (the store is
+        the durable copy; there is no flat x to leak from build time)."""
+        store = self.base.view.store
+        vid = np.asarray(store.vid).reshape(-1)
+        vecs = np.asarray(store.vecs)
+        dim = vecs.shape[2]
+        x = np.zeros((self.base_n, dim), np.float32)
+        flat = vecs.reshape(-1, dim)
+        valid = vid >= 0
+        x[vid[valid]] = flat[valid]
+        keep = np.flatnonzero(~self.tomb)
+        xs = [x[keep]]
+        gids = [keep.astype(np.int64)]
+        for gid, vec in self.appended:
+            if not self._append_dead(gid):
+                xs.append(vec[None, :])
+                gids.append(np.asarray([gid], np.int64))
+        return (np.ascontiguousarray(np.concatenate(xs, axis=0),
+                                     np.float32),
+                np.concatenate(gids))
+
+    def compact(self) -> Tuple[Segment, np.ndarray]:
+        """Fold the delta back to disk: rebuild the full segment
+        pipeline (graph, block shuffle via ``core/layout``, nav, PQ)
+        over the live vectors. Returns ``(segment, gids)`` where
+        ``gids[i]`` is the pre-compaction global id of the new
+        segment's vertex ``i`` — bit-identical to
+        ``build_segment(x_live, base.params)``."""
+        x_live, gids = self.live_vectors()
+        return build_segment(x_live, self.base.params), gids
+
+    # ----------------------------------------------------------- search
+
+    def search(self, queries: np.ndarray, k: int, p: SearchParams
+               ) -> Tuple[np.ndarray, np.ndarray, List[IOStats]]:
+        """Hybrid hot-first ANNS over the host block path.
+
+        The hot route answers from memory; the block search is seeded
+        from its exit frontier UNIONED with the nav entry points (the
+        exits start the beam where memory converged, the nav entries
+        keep the basin diversity a biased hot set would lose) and runs
+        a ``cold_gamma_frac``-narrowed candidate beam — the hot tier
+        already did the early exploration, so equal recall costs
+        strictly fewer block reads. Results merge by ``(dist, id)``
+        with tombstones masked from both sides; per-query stats carry
+        the memory work in ``hot_tier_hits`` on top of the block
+        search's I/O columns."""
+        queries = np.ascontiguousarray(queries, np.float32)
+        route = self.hot.route(queries, k)
+        nav_seeds = np.stack([_entry_points(self.base.view, q, p)
+                              for q in queries]).astype(np.int64)
+        seeds = np.concatenate(
+            [route.exits.astype(np.int64), nav_seeds], axis=1)
+        # over-fetch so the cold top-k survives the tombstone mask
+        k_cold = k + min(self.num_deleted, k)
+        gamma = max(k_cold, int(round(
+            p.candidate_size * self.hot.params.cold_gamma_frac)))
+        p_cold = dataclasses.replace(p, candidate_size=gamma)
+        ids_c, dists_c, stats = anns(self.base.view, queries, k_cold,
+                                     p_cold, seeds=seeds)
+        qn = queries.shape[0]
+        out_i = np.full((qn, k), -1, np.int64)
+        out_d = np.full((qn, k), np.inf, np.float32)
+        for qi in range(qn):
+            ci = ids_c[qi].astype(np.int64)
+            cd = dists_c[qi].astype(np.float32)
+            dead = (ci >= 0) & self.tomb[np.clip(ci, 0, self.base_n - 1)]
+            ci = np.where(dead, -1, ci)
+            cd = np.where(dead, np.inf, cd)
+            out_i[qi], out_d[qi] = merge_hot_cold(
+                k, route.ids[qi], route.dists[qi], ci, cd)
+            stats[qi].hot_tier_hits += int(route.hot_hits[qi])
+        return out_i, out_d, stats
+
+
+# ------------------------------------------------- serving swap helpers
+
+def swap_into_host_server(server, new_seg: Segment,
+                          scheduler=None) -> None:
+    """Install a compacted segment under a ``HostSegmentServer`` and
+    drop scheduler state keyed to the old layout (demand-window
+    entries for blocks past the new layout's end, the per-target
+    ranking, batch-stat watermarks)."""
+    server.view = new_seg.view
+    server.params = new_seg.params.search
+    server.num_vectors = new_seg.num_vectors
+    if scheduler is not None:
+        scheduler.note_layout_swap(server)
+
+
+def swap_into_device_server(server, new_seg: Segment, scheduler=None,
+                            **from_segment_kwargs) -> None:
+    """Install a compacted segment under a device ``SegmentServer``:
+    re-pack the device arrays from the new segment (same tier-0
+    budget semantics as the original ``from_segment`` call via
+    ``from_segment_kwargs``) and invalidate scheduler windows."""
+    from repro.core import device_search as DS
+    server.segment = DS.from_segment(new_seg, **from_segment_kwargs)
+    server.host = new_seg
+    server.num_vectors = new_seg.num_vectors
+    if scheduler is not None:
+        scheduler.note_layout_swap(server)

@@ -811,13 +811,23 @@ DEFAULT_DEVICE_SEARCH = DeviceSearchParams()
 @functools.partial(jax.jit, static_argnames=("p", "metric"))
 def device_anns(ds: DeviceSegment, queries: jnp.ndarray,
                 p: DeviceSearchParams = DEFAULT_DEVICE_SEARCH,
-                metric: str = "l2") -> DeviceSearchResult:
+                metric: str = "l2",
+                seeds: Optional[jnp.ndarray] = None
+                ) -> DeviceSearchResult:
     """Batched Starling ANNS on one segment shard.
 
     ``p.fetch_width`` > 1 fetches the F best unvisited candidates'
     blocks per round-trip (beyond-paper: the paper's Central Assumption
     notes a few random reads per SSD/DMA round-trip cost about the same
     as one — this trades block-bandwidth for round-trip latency).
+
+    ``seeds`` [Q, S] int32 (−1-padded) is the seed-override path
+    (hot/cold hybrid routing, DESIGN.md §10): when given, the
+    navigation-graph entry pick is skipped entirely and the search
+    seeds from these vertex ids instead — the hot tier hands its exit
+    frontier here, so the cold search resumes where the memory tier
+    converged. Rows that are all −1 fall back to nowhere (the caller
+    guarantees at least one live seed per query).
 
     Returns ``DeviceSearchResult(ids [Q, k], dists [Q, k], io [Q] cold
     block touches, hops [Q] round trips, tier0_hits [Q], dedup_saved
@@ -836,9 +846,12 @@ def device_anns(ds: DeviceSegment, queries: jnp.ndarray,
     queries = queries.astype(jnp.float32)
 
     lut = _adc_lut(queries, ds.pq_cent, metric)              # [Q, M, K]
-    entry = nav_entry_points(ds, queries, beam=p.nav_beam,
-                             hops=p.nav_hops, num=p.entry_points,
-                             metric=metric)
+    if seeds is not None:
+        entry = seeds.astype(jnp.int32)
+    else:
+        entry = nav_entry_points(ds, queries, beam=p.nav_beam,
+                                 hops=p.nav_hops, num=p.entry_points,
+                                 metric=metric)
     e_codes = ds.pq_codes[jnp.maximum(entry, 0)]
     e_key = jnp.where(entry >= 0, _adc(lut, e_codes), jnp.inf)
 

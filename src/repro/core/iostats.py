@@ -145,6 +145,14 @@ class IOStats:
     #                             found (the paper's path length)
     dist_comps: int = 0         # full-precision distance computations
     pq_comps: int = 0           # ADC distance computations
+    hot_tier_hits: int = 0      # vertex visits answered by the in-memory
+    #                             hot tier (DESIGN.md §10) — the memory-
+    #                             latency half of hybrid routing. Vertex-
+    #                             granular (one exact distance + queue op
+    #                             each), NOT block reads: the hot tier
+    #                             sits *above* the block hierarchy, so
+    #                             these never enter block_reads or the
+    #                             cache_hit_rate denominator. Additive.
 
     # merged with max(), not +: peaks, hop marks, the (batch-shared)
     # round count and the pipelined/speculative flags are not additive
@@ -173,7 +181,7 @@ class IOStats:
     def from_device(cls, io, tier0_hits=0, hops=0, dedup_saved=0,
                     rounds=0, dedup_cross=0,
                     pipelined=False, spec_hits=0, spec_wasted=0,
-                    speculative=False) -> "IOStats":
+                    speculative=False, hot_tier=0) -> "IOStats":
         """Counters of one query's device search (``device_anns``):
         ``io`` cold block touches, ``tier0_hits`` touches served by the
         VMEM hot-tile pack, ``hops`` DMA round trips, ``dedup_saved``
@@ -189,13 +197,17 @@ class IOStats:
         speculated blocks never consumed. Cold DMAs price as misses
         (one trip each — batched-width amortization is already in the
         hop count), hot touches at ``t_tier0_hit``, deduped touches at
-        ``t_dedup_hit``."""
+        ``t_dedup_hit``. ``hot_tier`` counts the query's vertex visits
+        in the in-memory hot tier before the cold search began (hybrid
+        routing, DESIGN.md §10) — priced at ``t_hot_tier_hit``, kept
+        out of the block-touch totals."""
         io, t0, h = int(io), int(tier0_hits), int(hops)
         saved = min(int(dedup_saved), io)
         cross = min(int(dedup_cross), saved)
         sh = min(int(spec_hits), io - saved)
         return cls(block_reads=io + t0, io_round_trips=io - saved,
                    cache_misses=io, tier0_hits=t0, hops=h,
+                   hot_tier_hits=int(hot_tier),
                    dedup_saved_fetches=saved, dedup_cross_tile=cross,
                    dma_pipelined=int(bool(pipelined)),
                    spec_hits=sh, spec_wasted=int(spec_wasted),
@@ -209,7 +221,8 @@ class IOStats:
                           rounds, dedup_cross=None,
                           pipelined=False, spec_hits=None,
                           spec_wasted=None,
-                          speculative=False) -> "IOStats":
+                          speculative=False,
+                          hot_tier=None) -> "IOStats":
         """Fold one batch's per-query device columns (the arrays a
         ``DeviceSearchResult`` / ``make_search_step`` rank emits) into
         one merged ``IOStats``: counters sum, ``batch_rounds`` is the
@@ -227,12 +240,16 @@ class IOStats:
             spec_hits = [0] * len(io)
         if spec_wasted is None:
             spec_wasted = [0] * len(io)
+        if hot_tier is None:
+            hot_tier = [0] * len(io)
         agg = cls()
-        for i, t0, h, sv, cx, sh, sw in zip(io, tier0_hits, hops,
-                                            dedup_saved, dedup_cross,
-                                            spec_hits, spec_wasted):
+        for i, t0, h, sv, cx, sh, sw, ht in zip(io, tier0_hits, hops,
+                                                dedup_saved, dedup_cross,
+                                                spec_hits, spec_wasted,
+                                                hot_tier):
             agg.merge(cls.from_device(i, t0, h, sv, rounds, cx,
-                                      pipelined, sh, sw, speculative))
+                                      pipelined, sh, sw, speculative,
+                                      ht))
         return agg
 
     @classmethod
@@ -307,6 +324,13 @@ class CostModel:
     t_dedup_hit: float = 0.0    # cold touch that joined another query's
     #                             same-round gather (VMEM broadcast of a
     #                             DMA someone else already paid for)
+    t_hot_tier_hit: float = 0.0  # one vertex visit in the in-memory hot
+    #                              tier (DESIGN.md §10): an exact
+    #                              distance + queue op at memory latency.
+    #                              Compute-side — it never enters
+    #                              ``_io_time``, so the modeled
+    #                              memory-vs-disk split of hybrid
+    #                              routing stays clean.
     t_round: float = 0.0        # round-granular regime (DESIGN.md §5):
     #                             lockstep cost per batched-loop round —
     #                             the gather issue + merge barrier every
@@ -418,10 +442,16 @@ class CostModel:
             self.t_block_io
         return s.spec_wasted * t_batch
 
+    def _hot_time(self, s: IOStats) -> float:
+        """The memory-latency half of hybrid routing: hot-tier vertex
+        visits price as compute (exact distance + queue op each), never
+        as I/O — keeping the memory-vs-disk split exact."""
+        return s.hot_tier_hits * self.t_hot_tier_hit
+
     def latency_us(self, s: IOStats, pipeline: bool = False) -> float:
         t_io = self._io_time(s)
         t_comp = (s.dist_comps * self.t_dist + s.pq_comps * self.t_pq
-                  + self._round_comp(s))
+                  + self._round_comp(s) + self._hot_time(s))
         t_other = s.hops * self.t_hop_other
         if pipeline:
             # §5.1: DR and DC run concurrently; serial residue is the max
@@ -466,11 +496,16 @@ class CostModel:
     def breakdown(self, s: IOStats, pipeline: bool = False) -> dict:
         t_io = self._io_time(s)
         t_comp = (s.dist_comps * self.t_dist + s.pq_comps * self.t_pq
-                  + self._round_comp(s))
+                  + self._round_comp(s) + self._hot_time(s))
         t_other = s.hops * self.t_hop_other
         total = self.latency_us(s, pipeline)
         return {"t_io_us": t_io, "t_comp_us": t_comp, "t_other_us": t_other,
                 "total_us": total,
+                # hybrid hot-tier terms (DESIGN.md §10): memory-latency
+                # visits, priced inside t_comp — the memory half of the
+                # hybrid memory-vs-disk split (t_io is the disk half)
+                "hot_tier_hits": s.hot_tier_hits,
+                "t_hot_tier_us": self._hot_time(s),
                 # round-granular terms (0 outside that regime): the
                 # lockstep chain, the occupancy-weighted compute and
                 # the streaming cold-DMA share a dma_pipelined batch
@@ -503,7 +538,8 @@ class CostModel:
 NVME_SEGMENT = CostModel(t_block_io=95.0, t_dist=0.055, t_pq=0.012,
                          t_cache_hit=0.5, t_batch_block=18.0,
                          t_tier2_hit=2.5, t_tier0_hit=0.5,
-                         t_dedup_hit=0.5, name="nvme")
+                         t_dedup_hit=0.5, t_hot_tier_hit=0.1,
+                         name="nvme")
 
 # TPU regime (DESIGN.md §2): 4 KB HBM→VMEM DMA ≈ 1.2 µs latency-bound,
 # VPU block ranking ≈ 0.02 µs/vector amortized, ADC ≈ 0.002 µs via LUT
@@ -519,8 +555,12 @@ NVME_SEGMENT = CostModel(t_block_io=95.0, t_dist=0.055, t_pq=0.012,
 # query adds ≈ 0.15 µs of VPU rank + top-k merge for its tiles — idle
 # rounds of a converged query are free (occupancy-weighted via
 # rounds_active_weight).
+# A hot-tier visit is one exact distance + queue op on an in-memory
+# graph: ~DRAM-speed on the NVMe host (~0.1 µs incl. the queue push),
+# ~one VPU distance on TPU (~0.02 µs).
 TPU_HBM_SEGMENT = CostModel(t_block_io=1.2, t_dist=0.02, t_pq=0.002,
                             t_cache_hit=0.05, t_batch_block=0.35,
                             t_tier2_hit=0.08, t_tier0_hit=0.01,
-                            t_dedup_hit=0.01, t_round=1.5,
+                            t_dedup_hit=0.01, t_hot_tier_hit=0.02,
+                            t_round=1.5,
                             t_round_comp=0.15, name="tpu-hbm")

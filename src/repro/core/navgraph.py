@@ -10,7 +10,7 @@ For the HNSW variant the upper layers of the disk HNSW play this role
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -53,6 +53,33 @@ def build_navgraph(x: np.ndarray, p: NavGraphParams, metric: str = "l2",
                      algo=algo, seed=p.seed)
     g = G.build_graph(sub, gp, metric)
     return NavGraph(graph=g, sample_ids=ids, vectors=sub)
+
+
+def subset_navgraph(x: Optional[np.ndarray], ids: np.ndarray,
+                    max_degree: int, build_beam: int,
+                    metric: str = "l2", algo: str = "nsg",
+                    seed: int = 1,
+                    vectors: Optional[np.ndarray] = None) -> NavGraph:
+    """Build a ``NavGraph`` over an *explicit* vertex subset.
+
+    Same machinery as ``build_navgraph`` but the caller chooses which
+    global ids are resident instead of a uniform μ-sample — the hot
+    tier (``repro.io.hottier``) passes the hot-set members selected by
+    the shared ``repro.io.hotset`` ranking, so the in-memory answering
+    graph covers exactly the vertices the block tiers already call hot.
+    Pass the already-gathered ``vectors`` [len(ids), D] when no flat
+    ``x`` exists (e.g. gathering out of a ``BlockStore``).
+    """
+    ids = np.asarray(ids, np.int64)
+    sub = (np.ascontiguousarray(vectors, dtype=np.float32)
+           if vectors is not None
+           else np.ascontiguousarray(x[ids], dtype=np.float32))
+    gp = GraphParams(max_degree=max_degree,
+                     build_beam=max(build_beam, max_degree),
+                     algo=algo, seed=seed)
+    g = G.build_graph(sub, gp, metric)
+    return NavGraph(graph=g, sample_ids=ids.astype(np.int32),
+                    vectors=sub)
 
 
 def from_hnsw_layers(x: np.ndarray, h: G.HNSWGraph,

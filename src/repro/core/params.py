@@ -82,6 +82,43 @@ class NavGraphParams:
 
 
 @dataclasses.dataclass(frozen=True)
+class HotTierParams:
+    """The in-memory hot tier above the block hierarchy (DESIGN.md §10).
+
+    A navigable graph over the hot-set *vectors* (selected by the
+    shared ``repro.io.hotset`` ranking, same prior as tiers 0/1/2) that
+    *answers* at memory latency; the cold block search is seeded from
+    its exit frontier. Also the home of the mutable delta: inserts land
+    in the hot tier's append region until ``compact()`` folds them into
+    a fresh disk layout."""
+    budget_frac: float = 0.10     # share of segment vectors resident hot
+    max_degree: int = 16          # hot-graph degree (HNSW-style, small)
+    build_beam: int = 48
+    search_beam: int = 16         # beam for the hot route (to convergence)
+    exit_width: int = 4           # exit-frontier seeds handed to cold search
+    cold_gamma_frac: float = 0.85  # hybrid's cold Γ as a share of the
+    #                                configured candidate size — the hot
+    #                                tier absorbs the early exploration,
+    #                                so the seeded block search runs a
+    #                                narrower beam at equal recall
+    append_slack: float = 0.5     # append-region capacity / built size
+    hops: int = 1                 # BFS depth of the hot-set ranking
+    seed: int = 1
+
+    def __post_init__(self):
+        if not 0.0 < self.budget_frac <= 1.0:
+            raise ValueError("budget_frac must be in (0, 1]")
+        if not 0.0 < self.cold_gamma_frac <= 1.0:
+            raise ValueError("cold_gamma_frac must be in (0, 1]")
+        if self.exit_width < 1:
+            raise ValueError("exit_width must be >= 1")
+        if self.append_slack < 0.0:
+            raise ValueError("append_slack must be >= 0")
+        if self.search_beam < self.exit_width:
+            raise ValueError("search_beam must cover exit_width")
+
+
+@dataclasses.dataclass(frozen=True)
 class SearchParams:
     """Online search parameters (§5)."""
     candidate_size: int = 64      # Γ

@@ -122,13 +122,20 @@ def block_search_query(seg: SegmentView, q: np.ndarray, k: int,
                        result: Optional[Dict[int, float]] = None,
                        kicked: Optional[List[Tuple[float, int]]] = None,
                        expanded: Optional[set] = None,
-                       stats: Optional[IOStats] = None) -> SearchResult:
+                       stats: Optional[IOStats] = None,
+                       seeds: Optional[np.ndarray] = None) -> SearchResult:
     """One ANNS query via block search (Algorithm 2).
 
     ``cand``/``result``/``kicked``/``expanded`` allow the RS driver
     (§5.3) to resume a previous search without recomputation — the
     ``expanded`` set in particular must survive rounds, or reseeded
     kicked vertices re-read blocks already expanded earlier.
+
+    ``seeds`` is the seed-override path (hot/cold hybrid routing,
+    DESIGN.md §10): explicit entry vertex ids (−1 entries ignored) that
+    replace the navigation-graph entry pick — the hot tier hands its
+    exit frontier here so the cold search starts where the memory tier
+    converged.
     """
     store, layout = seg.store, seg.layout
     eps = store.verts_per_block
@@ -179,7 +186,13 @@ def block_search_query(seg: SegmentView, q: np.ndarray, k: int,
             stats.vertices_used += 1
         return out
 
-    entry = _entry_points(seg, q, p)
+    if seeds is not None:
+        entry = np.asarray([int(v) for v in seeds if int(v) >= 0],
+                           np.int64)
+        if entry.size == 0:
+            entry = _entry_points(seg, q, p)
+    else:
+        entry = _entry_points(seg, q, p)
     ed = route_dist(entry)
     for v, dd in zip(entry, ed):
         kk = C.push(float(dd), int(v))
@@ -257,14 +270,20 @@ def block_search_query(seg: SegmentView, q: np.ndarray, k: int,
 
 
 def anns(seg: SegmentView, queries: np.ndarray, k: int,
-         p: SearchParams) -> Tuple[np.ndarray, np.ndarray, List[IOStats]]:
-    """Batch ANNS. Returns (ids [Q, k], dists [Q, k], per-query stats)."""
+         p: SearchParams, seeds: Optional[np.ndarray] = None
+         ) -> Tuple[np.ndarray, np.ndarray, List[IOStats]]:
+    """Batch ANNS. Returns (ids [Q, k], dists [Q, k], per-query stats).
+
+    ``seeds`` [Q, S] (−1-padded) overrides the per-query entry points —
+    the hybrid hot-first router passes the hot tier's exit frontier."""
     Q = queries.shape[0]
     ids = np.full((Q, k), -1, np.int64)
     dd = np.full((Q, k), np.inf, np.float32)
     stats: List[IOStats] = []
     for qi in range(Q):
-        r = block_search_query(seg, queries[qi], k, p)
+        r = block_search_query(
+            seg, queries[qi], k, p,
+            seeds=None if seeds is None else seeds[qi])
         m = r.ids.shape[0]
         ids[qi, :m] = r.ids
         dd[qi, :m] = r.dists

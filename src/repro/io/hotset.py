@@ -38,14 +38,18 @@ def hot_block_ranking(block_of: np.ndarray, adj: np.ndarray,
 
     BFS out ``hops`` levels from ``seed_ids`` over the disk graph,
     counting each visited vertex's block with weight ``2^(hops-level)``
-    (seeds dominate, fringe counts least). Only blocks actually touched
-    appear; callers needing a fixed-size set fill the tail themselves
-    (see ``fill_to``).
+    (seeds dominate, fringe counts least). One visited set is carried
+    across levels, so each vertex is counted exactly once at its first
+    (heaviest) level — on cyclic graphs a per-level set would revisit
+    earlier-level vertices and double-count their blocks at lower
+    weight. Only blocks actually touched appear; callers needing a
+    fixed-size set fill the tail themselves (see ``fill_to``).
     """
     if len(seed_ids) == 0:
         return []
     counts: Counter = Counter()
     frontier = [int(v) for v in seed_ids]
+    seen = set(frontier)
     weight = 1 << hops
     for _ in range(hops + 1):
         for v in frontier:
@@ -53,7 +57,6 @@ def hot_block_ranking(block_of: np.ndarray, adj: np.ndarray,
         if weight == 1:
             break
         nxt: List[int] = []
-        seen = set(frontier)
         for v in frontier:
             for w in adj[v, : deg[v]]:
                 w = int(w)
@@ -109,8 +112,12 @@ def plan_tier0(ranking: Sequence[int], observed: Mapping[int, int],
     exactly the selection ``device_search._tier0_pack`` materializes,
     so the serving scheduler can price a repack's drift before paying
     for one (its hysteresis gate compares this plan against the live
-    pack via ``pack_drift``)."""
-    obs = {b: c for b, c in observed.items() if c >= min_observed}
+    pack via ``pack_drift``). Observed ids outside
+    ``[0, total_blocks)`` are stale demand (a compaction shrank the
+    layout since the window was collected) and are dropped before
+    re-ranking."""
+    obs = {int(b): c for b, c in observed.items()
+           if c >= min_observed and 0 <= int(b) < int(total_blocks)}
     if obs:
         ranking = repack_from_frequencies(ranking, obs)
     return fill_to(ranking, num_blocks, total_blocks)
@@ -140,18 +147,27 @@ def fill_to(ranking: Sequence[int], num_blocks: int,
     The result is a *prefix-nested* family: any larger budget's set
     strictly contains any smaller one, which makes budget sweeps
     monotone by construction (a hot block never turns cold as the
-    budget grows)."""
-    num_blocks = min(int(num_blocks), int(total_blocks))
+    budget grows). Ids outside ``[0, total_blocks)`` — stale demand for
+    blocks a compaction removed — are filtered out before slicing, so
+    the pack plan never indexes past the live layout."""
+    total_blocks = int(total_blocks)
+    num_blocks = min(int(num_blocks), total_blocks)
     if num_blocks <= 0:
         return []
-    out = list(ranking[:num_blocks])
-    if len(out) < num_blocks:
-        chosen = set(out)
-        for b in range(total_blocks):
-            if b not in chosen:
-                out.append(b)
-                if len(out) == num_blocks:
-                    break
+    out: List[int] = []
+    chosen = set()
+    for b in ranking:
+        b = int(b)
+        if 0 <= b < total_blocks and b not in chosen:
+            out.append(b)
+            chosen.add(b)
+            if len(out) == num_blocks:
+                return out
+    for b in range(total_blocks):
+        if b not in chosen:
+            out.append(b)
+            if len(out) == num_blocks:
+                break
     return out
 
 

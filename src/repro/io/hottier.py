@@ -1,0 +1,301 @@
+"""repro.io.hottier — the in-memory hot tier above the block hierarchy
+(DESIGN.md §10).
+
+Tiers 0/1/2 cache *blocks* of one static disk graph; the hot tier is a
+small navigable in-memory graph over the hot-set *vectors* (selected by
+the same ``repro.io.hotset`` ranking every block tier admits from) that
+*answers* at memory latency. Hybrid routing runs a query on the hot
+graph to convergence first, then seeds the cold block search from the
+hot tier's exit frontier (the seed-override paths of
+``core.search.block_search_query`` / ``core.device_search.device_anns``)
+— so the disk graph starts where memory already converged. The memory
+work is charged as ``IOStats.hot_tier_hits`` (one exact distance +
+queue op per visited vertex) and priced by ``CostModel.t_hot_tier_hit``,
+never as block I/O.
+
+The hot tier is also the *mutable* region of a segment
+(``core.delta.DeltaSegment``): inserts land in its append region via
+incremental graph insertion, deletes are tombstones masked at route
+time, and ``compact()`` folds everything back into a fresh disk layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import graph as G
+from repro.core import navgraph as NG
+from repro.core.params import HotTierParams
+from repro.io import hotset
+
+
+@dataclasses.dataclass
+class HotRoute:
+    """One batch's hot-tier routing output."""
+    ids: np.ndarray       # [Q, k] global ids, −1-padded, tombstone-masked
+    dists: np.ndarray     # [Q, k] exact distances (inf on pad)
+    exits: np.ndarray     # [Q, exit_width] int32 cold-graph seed ids
+    #                       (−1-padded): the exit frontier handed to the
+    #                       block search's seed-override path
+    hot_hits: np.ndarray  # [Q] int32 vertices visited — the memory
+    #                       charge (IOStats.hot_tier_hits)
+
+
+def merge_hot_cold(k: int,
+                   hot_ids: np.ndarray, hot_dists: np.ndarray,
+                   cold_ids: np.ndarray, cold_dists: np.ndarray):
+    """Merge one query's hot + cold candidate rows into top-k.
+
+    Dedup by id keeping the smaller distance (the hot tier scores
+    exact f32 on host; the cold path may differ in the last ulp for
+    the same vertex), then order by ``(dist, id)`` — the same tiebreak
+    as ``coordinator.merge_topk`` / ``device_search.merge_shard_topk``,
+    so hybrid results stay deterministic under any arrival order.
+    Inputs are −1/inf padded rows; output is ([k] ids, [k] dists)."""
+    ids = np.concatenate([hot_ids, cold_ids]).astype(np.int64)
+    ds = np.concatenate([hot_dists, cold_dists]).astype(np.float32)
+    best: Dict[int, float] = {}
+    for i, d in zip(ids, ds):
+        i = int(i)
+        if i < 0 or not np.isfinite(d):
+            continue
+        if i not in best or d < best[i]:
+            best[i] = float(d)
+    order = sorted(best.items(), key=lambda t: (t[1], t[0]))[:k]
+    out_i = np.full(k, -1, np.int64)
+    out_d = np.full(k, np.inf, np.float32)
+    for m, (i, d) in enumerate(order):
+        out_i[m] = i
+        out_d[m] = d
+    return out_i, out_d
+
+
+@dataclasses.dataclass
+class HotTier:
+    """A navigable in-memory graph over the hot set, with a mutable
+    append region.
+
+    Arrays are capacity-allocated; ``size`` is the live prefix. Local
+    ids index the arrays; ``ids`` maps local → global. Global ids <
+    ``base_size`` exist in the disk segment too (valid cold seeds);
+    ids ≥ ``base_size`` are appended vectors that live ONLY here until
+    a compaction."""
+    vectors: np.ndarray            # [cap, D] float32
+    ids: np.ndarray                # [cap] int64 global ids (−1 free)
+    adj: np.ndarray                # [cap, Λ] int32 local adjacency
+    deg: np.ndarray                # [cap] int32
+    size: int
+    base_size: int
+    dead: np.ndarray               # [cap] bool local tombstones
+    params: HotTierParams
+    metric: str = "l2"
+    entry: int = 0                 # local entry vertex
+    tracer: Optional[object] = None
+    metrics: Optional[object] = None
+    _local_of: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+    # ------------------------------------------------------- accounting
+
+    def memory_bytes(self) -> int:
+        """The hot tier's Eq. 10 memory charge: resident vectors +
+        adjacency + ids + tombstones, at full capacity (the append
+        region is reserved memory whether used or not)."""
+        return (self.vectors.nbytes + self.adj.nbytes + self.deg.nbytes
+                + self.ids.nbytes + self.dead.nbytes)
+
+    @property
+    def live_count(self) -> int:
+        return int(self.size - self.dead[: self.size].sum())
+
+    def attach_obs(self, tracer=None, metrics=None,
+                   target: str = "hot") -> None:
+        """Wire the observability plane: ``route()`` records a
+        ``hot.route`` span and hit counters against ``target``."""
+        self.tracer = tracer
+        if metrics is not None:
+            self.metrics = metrics
+            metrics.gauge("hot.size", target).set(float(self.size))
+            metrics.gauge("hot.memory_bytes", target).set(
+                float(self.memory_bytes()))
+        self._obs_target = target
+
+    # ------------------------------------------------------------ route
+
+    def route(self, queries: np.ndarray, k: int) -> HotRoute:
+        """Run the batch on the hot graph to convergence (memory cost).
+
+        Returns the hot top-k (tombstones masked), the exit frontier
+        (cold-graph seed ids for the block search), and per-query
+        visit counts — the ``hot_tier_hits`` charge."""
+        queries = np.ascontiguousarray(queries, np.float32)
+        qn = queries.shape[0]
+        p = self.params
+        beam = max(p.search_beam, k, p.exit_width)
+        span = (self.tracer.span("hot.route", cat="serve", track="hot",
+                                 queries=qn)
+                if self.tracer is not None else None)
+        if span is not None:
+            span.__enter__()
+        ids_l, d, visited = G.greedy_search_batch(
+            self.vectors[: self.size], self.adj[: self.size],
+            self.deg[: self.size], self.entry, queries, beam=beam,
+            metric=self.metric)
+        hot_hits = np.asarray([len(v) for v in visited], np.int32)
+        valid = ids_l >= 0
+        safe = np.maximum(ids_l, 0)
+        gids = np.where(valid, self.ids[safe], -1)
+        is_dead = np.where(valid, self.dead[safe], True)
+
+        out_i = np.full((qn, k), -1, np.int64)
+        out_d = np.full((qn, k), np.inf, np.float32)
+        exits = np.full((qn, p.exit_width), -1, np.int32)
+        for b in range(qn):
+            # results: live beam entries in distance order
+            m = 0
+            for j in range(beam):
+                if valid[b, j] and not is_dead[b, j] and m < k:
+                    out_i[b, m] = gids[b, j]
+                    out_d[b, m] = d[b, j]
+                    m += 1
+            # exit frontier: best beam entries the COLD graph knows
+            # (tombstoned vertices still navigate; appended ids don't
+            # exist on disk and are skipped)
+            e = 0
+            for j in range(beam):
+                if valid[b, j] and gids[b, j] < self.base_size \
+                        and e < p.exit_width:
+                    exits[b, e] = gids[b, j]
+                    e += 1
+        if span is not None:
+            span.__exit__(None, None, None)
+        if self.metrics is not None:
+            tgt = getattr(self, "_obs_target", "hot")
+            self.metrics.counter("hot.routed_queries", tgt).inc(qn)
+            self.metrics.counter("hot.route_hits", tgt).inc(
+                float(hot_hits.sum()))
+        return HotRoute(ids=out_i, dists=out_d, exits=exits,
+                        hot_hits=hot_hits)
+
+    # ------------------------------------------------------- mutability
+
+    def _grow(self) -> None:
+        cap = self.vectors.shape[0]
+        new_cap = max(cap * 2, cap + 8)
+        for name in ("vectors", "ids", "adj", "deg", "dead"):
+            a = getattr(self, name)
+            shape = (new_cap,) + a.shape[1:]
+            fill = -1 if a.dtype.kind == "i" else 0
+            b = np.full(shape, fill, a.dtype) if a.dtype.kind == "i" \
+                else np.zeros(shape, a.dtype)
+            b[:cap] = a
+            setattr(self, name, b)
+
+    def insert(self, vecs: np.ndarray, gids: np.ndarray) -> None:
+        """Incremental graph insertion into the append region: greedy
+        search for each new vector's neighborhood, connect to the top
+        ``max_degree``, add reverse edges (farthest-replacement when a
+        neighbor is full) — HNSW-style, deterministic."""
+        vecs = np.atleast_2d(np.asarray(vecs, np.float32))
+        gids = np.atleast_1d(np.asarray(gids, np.int64))
+        lam = self.adj.shape[1]
+        for vec, gid in zip(vecs, gids):
+            if self.size == self.vectors.shape[0]:
+                self._grow()
+            li = self.size
+            self.vectors[li] = vec
+            self.ids[li] = gid
+            self.dead[li] = False
+            if li == 0:
+                self.deg[li] = 0
+                self.entry = 0
+            else:
+                ids_l, _, _ = G.greedy_search_batch(
+                    self.vectors[: li], self.adj[: li], self.deg[: li],
+                    self.entry, vec[None, :],
+                    beam=max(self.params.build_beam, lam),
+                    metric=self.metric)
+                nn = [int(v) for v in ids_l[0] if v >= 0][: lam]
+                self.adj[li, :] = -1
+                self.adj[li, : len(nn)] = nn
+                self.deg[li] = len(nn)
+                for v in nn:
+                    if self.deg[v] < lam:
+                        self.adj[v, self.deg[v]] = li
+                        self.deg[v] += 1
+                    else:
+                        nbrs = self.adj[v, : lam]
+                        dd = ((self.vectors[nbrs] - self.vectors[v]) ** 2
+                              ).sum(axis=1)
+                        worst = int(np.argmax(dd))
+                        d_new = float(((vec - self.vectors[v]) ** 2
+                                       ).sum())
+                        if d_new < float(dd[worst]):
+                            self.adj[v, worst] = li
+            self.size += 1
+            self._local_of[int(gid)] = li
+        if self.metrics is not None:
+            tgt = getattr(self, "_obs_target", "hot")
+            self.metrics.gauge("hot.size", tgt).set(float(self.size))
+
+    def delete(self, gid: int) -> bool:
+        """Tombstone a global id if it is hot-resident. Returns whether
+        the id was found here (the caller still tombstones the cold
+        tier's bitmap either way)."""
+        li = self._local_of.get(int(gid))
+        if li is None:
+            return False
+        self.dead[li] = True
+        return True
+
+
+def build_hot_tier(seg, p: HotTierParams = HotTierParams(),
+                   metric: Optional[str] = None) -> HotTier:
+    """Build the hot tier of a ``Segment`` from the shared hot-set
+    ranking: take blocks in ranking order until ``budget_frac`` of the
+    segment's vectors are covered (whole blocks — the ranking's unit),
+    gather their vectors out of the block store, and build a navigable
+    graph over them with the ``core.navgraph`` machinery."""
+    view = seg.view
+    metric = metric or view.metric
+    store, lay = view.store, view.layout
+    block_of = np.asarray(lay.block_of)
+    n = int(block_of.shape[0])
+    ranking = hotset.hot_block_ranking(
+        block_of, seg.graph.adj, seg.graph.deg,
+        hotset.view_seed_ids(view), hops=p.hops)
+    order = hotset.fill_to(ranking, store.num_blocks, store.num_blocks)
+    budget = max(int(math.ceil(p.budget_frac * n)), 1)
+    hot_ids: List[int] = []
+    hot_vecs: List[np.ndarray] = []
+    for b in order:
+        vid = np.asarray(store.vid[b])
+        live = vid >= 0
+        hot_ids.extend(int(v) for v in vid[live])
+        hot_vecs.append(np.asarray(store.vecs[b])[live])
+        if len(hot_ids) >= budget:
+            break
+    ids = np.asarray(hot_ids, np.int64)
+    xs = np.ascontiguousarray(np.concatenate(hot_vecs, axis=0),
+                              np.float32)
+    nav = NG.subset_navgraph(None, ids, max_degree=p.max_degree,
+                             build_beam=p.build_beam, metric=metric,
+                             algo="nsg", seed=p.seed, vectors=xs)
+    built = ids.shape[0]
+    cap = built + int(math.ceil(p.append_slack * built))
+    lam = nav.graph.adj.shape[1]
+    vectors = np.zeros((cap, xs.shape[1]), np.float32)
+    vectors[:built] = nav.vectors
+    gids = np.full((cap,), -1, np.int64)
+    gids[:built] = ids
+    adj = np.full((cap, lam), -1, np.int32)
+    adj[:built] = nav.graph.adj
+    deg = np.zeros((cap,), np.int32)
+    deg[:built] = nav.graph.deg
+    return HotTier(vectors=vectors, ids=gids, adj=adj, deg=deg,
+                   size=built, base_size=n,
+                   dead=np.zeros((cap,), bool), params=p, metric=metric,
+                   entry=int(nav.graph.entry),
+                   _local_of={int(g): i for i, g in enumerate(ids)})

@@ -21,6 +21,7 @@ from repro.core.params import DeviceSearchParams, SearchParams
 from repro.core.search import SegmentView, anns
 from repro.io.async_fetch import AsyncFetchQueue
 from repro.io.cached_store import CachedBlockStore
+from repro.io.hottier import merge_hot_cold
 from repro.serving import target as tgt
 
 # serving default: the divergence-aware batched preset (wide fetch +
@@ -74,7 +75,14 @@ class SegmentServer:
     ``host`` (optional) keeps the host ``Segment`` the device arrays
     were packed from; the serving ``RepackScheduler`` needs it to
     rebuild the tier-0 pack online (``repack``). Servers without it
-    simply cannot be repack targets."""
+    simply cannot be repack targets.
+
+    ``hot_tier`` (optional, a ``repro.io.hottier.HotTier``) turns the
+    server hybrid: queries route hot-first on the host, the device
+    search is seeded from the exit frontier (``device_anns``'s
+    ``seeds`` override), results merge by ``(dist, id)`` with
+    ``tombstones`` masked from both sides, and the memory work lands
+    in the ``hot_tier_hits`` batch column."""
     segment: DeviceSegment
     offset: int                   # base of this segment's id space
     num_vectors: int
@@ -82,17 +90,45 @@ class SegmentServer:
     params: DeviceSearchParams = SERVE_DEVICE_SEARCH
     metric: str = "l2"
     host: Optional[object] = None  # the host Segment (repack source)
+    hot_tier: Optional[object] = None   # repro.io.hottier.HotTier
+    tombstones: Optional[np.ndarray] = None  # [num_vectors] bool
 
     def search(self, queries: np.ndarray, k: Optional[int] = None
                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         import jax.numpy as jnp
         k = k or self.k_default
+        queries = np.ascontiguousarray(queries, np.float32)
+        n_dead = (int(self.tombstones.sum())
+                  if self.tombstones is not None else 0)
+        route = None
+        seeds = None
+        k_cold = k
+        candidates = max(self.params.candidates, k)
+        if self.hot_tier is not None:
+            route = self.hot_tier.route(queries, k)
+            exits = route.exits.astype(np.int32)
+            # union with the nav entries: the exits start the device
+            # beam where memory converged, the nav entries keep basin
+            # diversity; the hot tier absorbed the early exploration so
+            # the cold beam narrows (cold_gamma_frac) at equal recall
+            nav = self.host.view.nav if self.host is not None else None
+            if nav is not None:
+                nav_seeds = nav.entry_points(
+                    queries, beam=self.params.nav_beam,
+                    num=self.params.entry_points).astype(np.int32)
+                exits = np.concatenate([exits, nav_seeds], axis=1)
+            seeds = jnp.asarray(exits, jnp.int32)
+            # over-fetch so the cold top-k survives the tombstone mask
+            k_cold = k + min(n_dead, k)
+            candidates = max(k_cold, int(round(
+                self.params.candidates
+                * self.hot_tier.params.cold_gamma_frac)))
         # a per-request k above the configured beam widens Γ with it
         # (DeviceSearchParams requires candidates >= k)
         p = dataclasses.replace(
-            self.params, k=k, candidates=max(self.params.candidates, k))
+            self.params, k=k_cold, candidates=max(candidates, k_cold))
         r = device_anns(self.segment, jnp.asarray(queries, jnp.float32),
-                        p, metric=self.metric)
+                        p, metric=self.metric, seeds=seeds)
         self.last_io = np.asarray(r.io)
         self.last_tier0_hits = np.asarray(r.tier0_hits)
         self.last_hops = np.asarray(r.hops)
@@ -105,7 +141,24 @@ class SegmentServer:
         # None when tracing is off
         self.last_round_log = (np.asarray(r.round_log)
                                if r.round_log is not None else None)
-        return np.asarray(r.ids), np.asarray(r.dists), np.asarray(r.io)
+        cold_ids = np.asarray(r.ids)
+        cold_dists = np.asarray(r.dists)
+        if route is None:
+            self.last_hot_tier_hits = np.zeros(queries.shape[0], np.int64)
+            return cold_ids, cold_dists, np.asarray(r.io)
+        self.last_hot_tier_hits = route.hot_hits.astype(np.int64)
+        ci = cold_ids.astype(np.int64)
+        cd = cold_dists.astype(np.float32)
+        if self.tombstones is not None:
+            dead = (ci >= 0) & self.tombstones[np.maximum(ci, 0)]
+            ci = np.where(dead, -1, ci)
+            cd = np.where(dead, np.inf, cd)
+        out_i = np.full((queries.shape[0], k), -1, np.int64)
+        out_d = np.full((queries.shape[0], k), np.inf, np.float32)
+        for qi in range(queries.shape[0]):
+            out_i[qi], out_d[qi] = merge_hot_cold(
+                k, route.ids[qi], route.dists[qi], ci[qi], cd[qi])
+        return out_i, out_d, np.asarray(r.io)
 
     def repack(self, observed, plan=None) -> int:
         """Swap the tier-0 pack for one re-ranked by ``observed``
@@ -134,6 +187,7 @@ class SegmentServer:
                 "dedup_cross": self.last_dedup_cross,
                 "spec_hits": self.last_spec_hits,
                 "spec_wasted": self.last_spec_wasted,
+                "hot_tier_hits": self.last_hot_tier_hits,
                 "rounds": self.last_rounds,
                 "dma_pipelined": (self.params.pipeline_dma
                                   and self.params.fetch_impl == "fused"),
@@ -141,6 +195,12 @@ class SegmentServer:
 
     def repack_source(self):
         return self.host
+
+    def attach_obs(self, tracer, metrics) -> None:
+        if self.hot_tier is not None and \
+                (tracer is not None or metrics is not None):
+            self.hot_tier.attach_obs(tracer, metrics,
+                                     target=f"seg{self.offset}")
 
 
 @dataclasses.dataclass
@@ -322,7 +382,7 @@ class QueryCoordinator:
                     "mean_block_reads_per_query", "total_tier0_hits",
                     "total_dedup_saved", "total_dedup_cross",
                     "total_spec_hits", "total_spec_wasted",
-                    "deduped_block_reads",
+                    "total_hot_tier_hits", "deduped_block_reads",
                     "cache_hits", "cache_misses", "cache_hit_rate")
 
     def search(self, queries: np.ndarray, k: int = 10
@@ -344,7 +404,7 @@ class QueryCoordinator:
                    else list(range(len(self.servers))))
         ids, dists, offs = [], [], []
         total_io, total_t0, total_saved, total_cross = 0, 0, 0, 0
-        total_spec_h, total_spec_w = 0, 0
+        total_spec_h, total_spec_w, total_hot = 0, 0, 0
         for si in targets:
             s = self.servers[si]
             if self.tracer is not None:
@@ -367,6 +427,7 @@ class QueryCoordinator:
                 total_cross += int(np.asarray(bs["dedup_cross"]).sum())
                 total_spec_h += int(np.asarray(bs["spec_hits"]).sum())
                 total_spec_w += int(np.asarray(bs["spec_wasted"]).sum())
+                total_hot += int(np.asarray(bs["hot_tier_hits"]).sum())
             if self.metrics is not None:
                 # per-target attribution: which segment the reads hit
                 self.metrics.counter("serve.block_reads",
@@ -392,6 +453,10 @@ class QueryCoordinator:
                  # whenever no target speculates
                  "total_spec_hits": total_spec_h,
                  "total_spec_wasted": total_spec_w,
+                 # hybrid hot tier (DESIGN.md §10): vertex visits the
+                 # in-memory answering graph absorbed before the block
+                 # search even started — memory-priced, never I/O
+                 "total_hot_tier_hits": total_hot,
                  "deduped_block_reads": total_io - total_saved}
         # repro.io: aggregate shared-cache counters from servers that
         # expose them, as deltas so every key in the dict is per-call
@@ -453,6 +518,8 @@ class QueryCoordinator:
             stats["total_spec_hits"])
         m.counter("serve.total_spec_wasted").inc(
             stats["total_spec_wasted"])
+        m.counter("serve.total_hot_tier_hits").inc(
+            stats["total_hot_tier_hits"])
         m.counter("serve.cache_hits").inc(stats["cache_hits"])
         m.counter("serve.cache_misses").inc(stats["cache_misses"])
         m.gauge("serve.cache_hit_rate").set(stats["cache_hit_rate"])

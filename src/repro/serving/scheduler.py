@@ -146,6 +146,36 @@ class RepackScheduler:
             v.layout.block_of, seg.graph.adj, seg.graph.deg,
             hotset.view_seed_ids(v)))
 
+    def note_layout_swap(self, server) -> None:
+        """A compaction swapped a fresh ``Segment`` under ``server``
+        (DESIGN.md §10 swap protocol): re-derive the target's
+        build-time ranking from the NEW layout and drop demand-window
+        entries that index past the new block count — stale demand for
+        since-compacted blocks must never reach a pack plan
+        (``hotset.fill_to``'s range filter backstops feeds this
+        scheduler never hears about). The window otherwise survives:
+        still-valid demand keeps accumulating drift."""
+        seg = tgt.repack_source(server)
+        for i, t in enumerate(self._targets):
+            if t is server and seg is not None:
+                v = seg.view
+                self._rankings[i] = hotset.hot_block_ranking(
+                    v.layout.block_of, seg.graph.adj, seg.graph.deg,
+                    hotset.view_seed_ids(v))
+                break
+        if seg is not None:
+            total = int(seg.view.store.num_blocks)
+            self._window = Counter(
+                {b: c for b, c in self._window.items()
+                 if 0 <= int(b) < total})
+        # the swapped target's telemetry window restarts with its layout
+        self._server_stats.pop(id(server), None)
+        if self.tracer is not None:
+            self.tracer.event(
+                "sched.layout_swap", cat="sched", track="sched",
+                target=str(getattr(server, "offset", -1)),
+                window_blocks=len(self._window))
+
     # --------------------------------------------------------- telemetry
     def note_batch(self, servers: Sequence = ()) -> None:
         """Fold one served batch's device columns into the window:
@@ -166,7 +196,8 @@ class RepackScheduler:
                 bool(bs.get("dma_pipelined", False)),
                 np.asarray(bs["spec_hits"]),
                 np.asarray(bs["spec_wasted"]),
-                bool(bs.get("dma_speculative", False)))
+                bool(bs.get("dma_speculative", False)),
+                np.asarray(bs["hot_tier_hits"]))
             self._server_stats.setdefault(id(s), IOStats()).merge(batch)
             self._step_us_sum += self.cost_model.latency_us(batch)
             self._step_batches += 1

@@ -47,14 +47,18 @@ import numpy as np
 # together — the exact columns ``IOStats.from_device_batch`` folds
 # (``dedup_cross`` is the cross-tile subset of ``dedup_saved``;
 # ``spec_hits``/``spec_wasted`` are the speculation outcome columns,
-# zero whenever the target does not speculate)
+# zero whenever the target does not speculate; ``hot_tier_hits`` is the
+# in-memory hot tier's per-query visit column, zero for targets with no
+# hot tier attached)
 BATCH_STAT_KEYS = ("io", "tier0_hits", "hops", "dedup_saved",
-                   "dedup_cross", "rounds", "spec_hits", "spec_wasted")
+                   "dedup_cross", "rounds", "spec_hits", "spec_wasted",
+                   "hot_tier_hits")
 
 # keys the adapter zero-fills for a target that predates (or opts out
-# of) speculation — a legacy 6-key emitter keeps working; the schema a
-# CONSUMER sees is always the full BATCH_STAT_KEYS
-_ZERO_DEFAULT_KEYS = ("spec_hits", "spec_wasted")
+# of) speculation / hybrid hot-tier routing — a legacy 6-key emitter
+# keeps working; the schema a CONSUMER sees is always the full
+# BATCH_STAT_KEYS
+_ZERO_DEFAULT_KEYS = ("spec_hits", "spec_wasted", "hot_tier_hits")
 
 
 @runtime_checkable

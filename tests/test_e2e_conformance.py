@@ -152,6 +152,106 @@ def test_host_cached_equals_uncached(small_segment, small_data,
     np.testing.assert_array_equal(d0, d1)
 
 
+# ------------------------------------------------- hybrid hot/cold tier
+
+@pytest.fixture(scope="module")
+def delta_seg(small_segment):
+    from repro.core import delta as DL
+    from repro.core.params import HotTierParams
+    return DL.DeltaSegment.wrap(small_segment,
+                                HotTierParams(budget_frac=0.10))
+
+
+@pytest.mark.slow
+def test_hybrid_recall_and_cold_io_reduction(small_segment, small_data,
+                                             oracle, delta_seg):
+    """The tentpole contract (DESIGN.md §10): hot-first routing at a
+    10% hot-set budget clears the oracle floor, stays within ±0.01
+    recall of the pure block search, and STRICTLY reduces the cold I/O
+    per query — the hot tier absorbs the early exploration, so the
+    seeded, Γ-narrowed block search touches fewer blocks for the same
+    answer quality. The memory work is visible (and nonzero) in the
+    ``hot_tier_hits`` column, never in ``block_reads``."""
+    _, q = small_data
+    p = small_segment.params.search
+    ids_p, _, st_p = anns(small_segment.view, q, 10, p)
+    ids_h, _, st_h = delta_seg.search(q, 10, p)
+    rec_p = recall_at_k(ids_p, oracle)
+    rec_h = recall_at_k(ids_h, oracle)
+    assert rec_h >= 0.8, f"hybrid recall {rec_h:.3f} below floor"
+    assert rec_h >= rec_p - 0.01, \
+        f"hybrid recall {rec_h:.3f} not within 0.01 of pure {rec_p:.3f}"
+    io_p = sum(s.block_reads for s in st_p)
+    io_h = sum(s.block_reads for s in st_h)
+    assert io_h < io_p, \
+        f"hybrid cold I/O {io_h} not strictly below pure {io_p}"
+    assert sum(s.hot_tier_hits for s in st_h) > 0
+    assert all(s.hot_tier_hits == 0 for s in st_p)
+
+
+@pytest.mark.slow
+def test_hybrid_tombstones_never_surface(small_segment, small_data,
+                                         oracle, delta_seg):
+    """Deleted ids are masked in BOTH tiers: delete every query's
+    current best answer and none of them may reappear, while recall on
+    the surviving ground truth holds."""
+    _, q = small_data
+    p = small_segment.params.search
+    victims = sorted(set(int(v) for v in oracle[:, 0]))
+    for v in victims:
+        assert delta_seg.delete(v)
+    try:
+        ids, _, _ = delta_seg.search(q, 10, p)
+        assert not np.isin(ids, victims).any(), \
+            "tombstoned ids surfaced in hybrid results"
+        # surviving ground truth still found: compare against the
+        # oracle minus the victims
+        surviving = np.array([[v for v in row if v not in set(victims)]
+                              [:5] for row in oracle])
+        rec = recall_at_k(ids[:, :5], surviving[:, :5])
+        assert rec >= 0.7, f"post-delete recall collapsed: {rec:.3f}"
+    finally:
+        # un-tombstone: the module-scoped delta is shared with the
+        # recall test above (order-independent either way — deletes
+        # only mask, never mutate the base segment)
+        delta_seg.tomb[victims] = False
+        delta_seg.hot.dead[[delta_seg.hot._local_of[v]
+                            for v in victims
+                            if v in delta_seg.hot._local_of]] = False
+
+
+@pytest.mark.slow
+def test_hybrid_compact_round_trip_bit_identity(small_segment,
+                                                small_data):
+    """insert → delete → compact → search ≡ fresh build of the same
+    live vectors, to the bit — compaction goes through the full
+    offline pipeline (graph, ``core/layout`` reorder, nav, PQ), so
+    there is no incremental state to drift."""
+    from repro.core import delta as DL
+    from repro.core.params import HotTierParams
+    from repro.core.segment import build_segment
+    x, q = small_data
+    d = DL.DeltaSegment.wrap(small_segment,
+                             HotTierParams(budget_frac=0.10))
+    rng = np.random.default_rng(13)
+    new = rng.standard_normal((8, x.shape[1])).astype(np.float32)
+    gids = d.insert(new)
+    dead_base = [3, 77, 1200, 2400]
+    for g in dead_base + [int(gids[5])]:
+        assert d.delete(g)
+    compacted, live_gids = d.compact()
+    keep = np.ones(x.shape[0], bool)
+    keep[dead_base] = False
+    x_live = np.concatenate(
+        [x[keep], np.delete(new, 5, axis=0)], axis=0).astype(np.float32)
+    assert compacted.num_vectors == x_live.shape[0] == live_gids.shape[0]
+    fresh = build_segment(x_live, small_segment.params)
+    ic, dc, _ = anns(compacted.view, q, 10, small_segment.params.search)
+    iff, df, _ = anns(fresh.view, q, 10, small_segment.params.search)
+    np.testing.assert_array_equal(ic, iff)
+    np.testing.assert_array_equal(dc, df)
+
+
 # -------------------------------------------------------- golden totals
 
 @pytest.mark.slow

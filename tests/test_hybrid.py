@@ -1,0 +1,342 @@
+"""Hot/cold hybrid tier (ISSUE 10): hotset ranking bugfixes, the
+in-memory hot tier, the mutable delta segment, and the serving swap.
+
+The two regression tests at the top pin the ``hotset`` bugfixes and
+fail on the pre-fix code:
+
+  * ``hot_block_ranking`` used to reset its visited set every BFS
+    level, so cyclic graphs re-counted earlier-level vertices at lower
+    weight and could flip the ranking order;
+  * ``fill_to``/``plan_tier0`` used to pass observed block ids ≥
+    ``total_blocks`` (stale demand after a compaction shrank the
+    segment) straight into the pack plan, which
+    ``device_search._tier0_pack`` then indexed out of range.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.io import hotset
+
+
+# ---------------------------------------------------- hotset bugfixes
+
+def test_hot_block_ranking_cycle_regression():
+    """Cross-level visited set: a 2-cycle must not re-count its block.
+
+    Graph (one seed s in block 0):
+
+        s -> r1 -> r2 -> r1        (block 1: a 2-cycle)
+        s -> c1 -> c2 -> c3        (block 2: an acyclic chain)
+
+    With hops=3 the weights are 8/4/2/1. Correct counts: block0 = 8,
+    block1 = 4+2 = 6 (the cycle ends the R side at level 2), block2 =
+    4+2+1 = 7, so the ranking is [0, 2, 1]. The pre-fix per-level
+    visited reset re-enters r1 at level 3 (+1 to block 1), tying the
+    counts at 7 and flipping the order to [0, 1, 2].
+    """
+    adj = np.array([[1, 3], [2, -1], [1, -1],
+                    [4, -1], [5, -1], [-1, -1]], np.int32)
+    deg = np.array([2, 1, 1, 1, 1, 0], np.int32)
+    block_of = np.array([0, 1, 1, 2, 2, 2], np.int32)
+    ranking = hotset.hot_block_ranking(block_of, adj, deg,
+                                       seed_ids=[0], hops=3)
+    assert ranking == [0, 2, 1], \
+        f"cycle double-count regressed: {ranking}"
+
+
+def test_fill_to_filters_stale_block_ids():
+    """Stale ids ≥ total_blocks (or negative) never reach the pack."""
+    # 5 and 9 are stale (total_blocks shrank to 4 after a compaction)
+    out = hotset.fill_to([5, 9, 1, 0], 3, 4)
+    assert out == [1, 0, 2], f"stale ids leaked into the pack: {out}"
+    assert all(0 <= b < 4 for b in out)
+    # negative ids are equally out of range
+    out = hotset.fill_to([-3, 2, 0], 2, 3)
+    assert out == [2, 0]
+    # prefix nesting survives the filter: growing budgets nest strictly
+    stale = [7, 1, 9, 0, 2]
+    fills = [hotset.fill_to(stale, n, 3) for n in (1, 2, 3)]
+    for small, big in zip(fills, fills[1:]):
+        assert small == big[: len(small)]
+
+
+def test_plan_tier0_filters_stale_observed_ids():
+    """Observed demand for since-compacted blocks is dropped, not
+    planned: the plan stays inside the (new, smaller) layout."""
+    plan = hotset.plan_tier0(ranking=[0, 1, 2],
+                             observed={7: 100, 2: 5},
+                             num_blocks=2, total_blocks=3)
+    assert plan == [2, 0], f"stale observed id leaked: {plan}"
+    assert all(0 <= b < 3 for b in plan)
+
+
+# ------------------------------------------------------------ fixtures
+
+N, DIM, K = 600, 24, 10
+
+
+@pytest.fixture(scope="module")
+def hybrid_setup():
+    from repro.core.params import SegmentParams, HotTierParams
+    from repro.core.segment import build_segment
+    rng = np.random.default_rng(7)
+    x = rng.standard_normal((N, DIM)).astype(np.float32)
+    q = rng.standard_normal((12, DIM)).astype(np.float32)
+    seg = build_segment(x, SegmentParams())
+    d2 = ((q[:, None, :] - x[None, :, :]) ** 2).sum(-1)
+    truth = np.argsort(d2, axis=1)[:, :K]
+    return x, q, seg, truth
+
+
+# ------------------------------------------------------- hot tier unit
+
+def test_hot_tier_build_budget_and_membership(hybrid_setup):
+    from repro.core.params import HotTierParams
+    from repro.io.hottier import build_hot_tier
+    x, q, seg, truth = hybrid_setup
+    p = HotTierParams(budget_frac=0.10)
+    hot = build_hot_tier(seg, p)
+    # whole-block admission: at least the budget, at most one block over
+    eps = seg.view.store.verts_per_block
+    assert N * p.budget_frac <= hot.size < N * p.budget_frac + eps
+    assert hot.base_size == N
+    # members are exactly the vectors of the top-ranked blocks, and the
+    # resident copy is the store's copy bit-for-bit
+    for li in range(hot.size):
+        gid = int(hot.ids[li])
+        b, s = (int(seg.view.layout.block_of[gid]),
+                int(seg.view.layout.slot_of[gid]))
+        assert int(seg.view.store.vid[b, s]) == gid
+        assert np.array_equal(hot.vectors[li], seg.view.store.vecs[b, s])
+    assert hot.memory_bytes() > 0
+
+
+def test_hot_tier_route_exits_and_hits(hybrid_setup):
+    from repro.core.params import HotTierParams
+    from repro.io.hottier import build_hot_tier
+    x, q, seg, truth = hybrid_setup
+    hot = build_hot_tier(seg, HotTierParams(budget_frac=0.10))
+    r = hot.route(q, K)
+    assert r.ids.shape == (12, K) and r.exits.shape == (12, 4)
+    # every exit is a cold-graph id (exists on disk), every hit count
+    # covers at least the converged beam
+    valid = r.exits >= 0
+    assert valid.any(axis=1).all()
+    assert (r.exits[valid] < N).all()
+    assert (r.hot_hits >= 1).all()
+    # routed results are real hot members with exact distances
+    for qi in range(12):
+        for j in range(K):
+            g = int(r.ids[qi, j])
+            if g < 0:
+                continue
+            d = float(((q[qi] - x[g]) ** 2).sum())
+            assert abs(d - float(r.dists[qi, j])) < 1e-3
+
+
+def test_hot_tier_insert_delete_route(hybrid_setup):
+    from repro.core.params import HotTierParams
+    from repro.io.hottier import build_hot_tier
+    x, q, seg, truth = hybrid_setup
+    hot = build_hot_tier(seg, HotTierParams(budget_frac=0.10))
+    size0, cap0 = hot.size, hot.vectors.shape[0]
+    # insert enough to force at least one append-region growth
+    rng = np.random.default_rng(11)
+    extra = rng.standard_normal((cap0 - size0 + 5, DIM)).astype(np.float32)
+    gids = np.arange(N, N + extra.shape[0])
+    hot.insert(extra, gids)
+    assert hot.size == size0 + extra.shape[0]
+    assert hot.vectors.shape[0] > cap0
+    # an inserted vector is findable by exact-match query
+    r = hot.route(extra[:1], 3)
+    assert int(r.ids[0, 0]) == N and float(r.dists[0, 0]) == 0.0
+    # ...until tombstoned
+    assert hot.delete(N)
+    r = hot.route(extra[:1], 3)
+    assert N not in r.ids[0]
+    # appended ids never leak into the exit frontier (no disk identity)
+    assert (r.exits < hot.base_size).all()
+    # deleting a non-resident id is a no-op report
+    assert not hot.delete(10 ** 9)
+
+
+# ------------------------------------------------- seed-override paths
+
+def test_host_seed_override_matches_entry_points(hybrid_setup):
+    """seeds == the nav entry points the search would pick itself →
+    bit-identical results; all-(-1) seeds fall back to nav entries."""
+    from repro.core.search import anns, _entry_points
+    x, q, seg, truth = hybrid_setup
+    p = seg.params.search
+    base_ids, base_d, _ = anns(seg.view, q, K, p)
+    seeds = np.stack([_entry_points(seg.view, qq, p) for qq in q])
+    s_ids, s_d, _ = anns(seg.view, q, K, p, seeds=seeds)
+    assert np.array_equal(base_ids, s_ids)
+    assert np.array_equal(base_d, s_d)
+    f_ids, f_d, _ = anns(seg.view, q, K, p,
+                         seeds=np.full((12, 3), -1, np.int64))
+    assert np.array_equal(base_ids, f_ids)
+
+
+def test_device_seed_override_matches_entry_points(hybrid_setup):
+    """Device path: seeding with the exact nav-entry frontier the
+    kernel would derive itself is bit-identical to not seeding."""
+    jax = pytest.importorskip("jax")
+    from repro.core import device_search as DS
+    from repro.configs.starling_segment import DEVICE_SEARCH_BATCH
+    x, q, seg, truth = hybrid_setup
+    ds = DS.from_segment(seg, tier0_frac=0.1)
+    p = dataclasses.replace(DEVICE_SEARCH_BATCH, k=K)
+    qj = jnp.asarray(q)
+    base = DS.device_anns(ds, qj, p)
+    entry = DS.nav_entry_points(ds, qj, beam=p.nav_beam, hops=p.nav_hops,
+                                num=p.entry_points, metric="l2")
+    seeded = DS.device_anns(ds, qj, p, seeds=entry)
+    assert np.array_equal(np.asarray(base.ids), np.asarray(seeded.ids))
+    assert np.array_equal(np.asarray(base.dists),
+                          np.asarray(seeded.dists))
+    assert np.array_equal(np.asarray(base.io), np.asarray(seeded.io))
+
+
+# ------------------------------------------------------- delta segment
+
+def test_delta_insert_delete_search(hybrid_setup):
+    from repro.core.params import HotTierParams
+    from repro.core import delta as DL
+    x, q, seg, truth = hybrid_setup
+    d = DL.DeltaSegment.wrap(seg, HotTierParams(budget_frac=0.10))
+    p = seg.params.search
+    rng = np.random.default_rng(3)
+    new = rng.standard_normal((4, DIM)).astype(np.float32)
+    gids = d.insert(new)
+    assert list(gids) == [N, N + 1, N + 2, N + 3]
+    # an inserted vector answers its own query through the hybrid path
+    ids, dists, _ = d.search(new[:1], 3, p)
+    assert int(ids[0, 0]) == N and float(dists[0, 0]) == 0.0
+    # delete a base id + an appended id; neither ever surfaces again
+    victim = int(truth[0, 0])
+    assert d.delete(victim) and d.delete(int(gids[1]))
+    assert not d.delete(victim)          # double delete reports False
+    ids, _, _ = d.search(q, K, p)
+    assert victim not in ids and int(gids[1]) not in ids
+    assert d.live_count == N + 4 - 2
+    # stats carry the memory charge
+    _, _, stats = d.search(q[:2], K, p)
+    assert all(s.hot_tier_hits > 0 for s in stats)
+
+
+def test_delta_compact_bit_identical(hybrid_setup):
+    """insert → delete → compact() ≡ a fresh build of the live set."""
+    from repro.core.params import HotTierParams
+    from repro.core.segment import build_segment
+    from repro.core import delta as DL
+    x, q, seg, truth = hybrid_setup
+    d = DL.DeltaSegment.wrap(seg, HotTierParams(budget_frac=0.10))
+    rng = np.random.default_rng(5)
+    new = rng.standard_normal((6, DIM)).astype(np.float32)
+    gids = d.insert(new)
+    for g in (0, 17, int(gids[2])):
+        assert d.delete(g)
+    compacted, live_gids = d.compact()
+    # the live set, rebuilt from the block store + append region
+    keep = np.ones(N, bool)
+    keep[[0, 17]] = False
+    x_live = np.concatenate(
+        [x[keep], new[[0, 1, 3, 4, 5]]], axis=0).astype(np.float32)
+    assert live_gids.shape[0] == x_live.shape[0]
+    fresh = build_segment(x_live, seg.params)
+    assert np.array_equal(compacted.view.store.vid, fresh.view.store.vid)
+    assert np.array_equal(compacted.view.store.vecs,
+                          fresh.view.store.vecs)
+    assert np.array_equal(compacted.graph.adj, fresh.graph.adj)
+    assert np.array_equal(compacted.view.layout.blocks,
+                          fresh.view.layout.blocks)
+    assert np.array_equal(compacted.view.pq_codes, fresh.view.pq_codes)
+
+
+# ------------------------------------------------- accounting plumbing
+
+def test_iostats_hot_tier_hits_merge_and_pricing():
+    from repro.core.iostats import IOStats, NVME_SEGMENT
+    a = IOStats(block_reads=4, hot_tier_hits=30)
+    b = IOStats(block_reads=2, hot_tier_hits=12)
+    a.merge(b)
+    assert a.hot_tier_hits == 42
+    cm = NVME_SEGMENT
+    base = dataclasses.replace(cm, t_hot_tier_hit=0.0)
+    s = IOStats(block_reads=4, hot_tier_hits=100)
+    # hot visits price into compute, never into the I/O half
+    assert cm.breakdown(s)["t_io_us"] == base.breakdown(s)["t_io_us"]
+    assert cm.latency_us(s) == pytest.approx(
+        base.latency_us(s) + 100 * cm.t_hot_tier_hit)
+    assert cm.breakdown(s)["hot_tier_hits"] == 100
+
+
+# ------------------------------- scheduler swap (satellite 2, serving)
+
+def test_scheduler_drops_stale_window_on_layout_swap(hybrid_setup):
+    """Compaction shrinks the layout; the scheduler's demand window
+    must drop entries past the new block count and the next forced
+    repack must plan strictly in-range (pre-fix: ``_tier0_pack``
+    indexed out of range on the stale plan)."""
+    jax = pytest.importorskip("jax")
+    from repro.core.params import HotTierParams, RepackParams
+    from repro.core import delta as DL
+    from repro.core import device_search as DS
+    from repro.serving.coordinator import SegmentServer
+    from repro.serving.scheduler import RepackScheduler
+    x, q, seg, truth = hybrid_setup
+    ds = DS.from_segment(seg, tier0_frac=0.2)
+    server = SegmentServer(segment=ds, offset=0, num_vectors=N, host=seg)
+    sched = RepackScheduler(RepackParams(min_observed=1))
+    sched.attach_target(server)
+    old_total = int(seg.view.store.num_blocks)
+    # hot demand parked on the TAIL blocks of the old layout
+    sched._window.update({b: 50 for b in range(old_total - 4, old_total)})
+    # delete half the base, compact, swap under the serving target
+    d = DL.DeltaSegment.wrap(seg, HotTierParams(budget_frac=0.10))
+    for g in range(0, N, 2):
+        d.delete(g)
+    compacted, _ = d.compact()
+    new_total = int(compacted.view.store.num_blocks)
+    assert new_total < old_total
+    DL.swap_into_device_server(server, compacted, scheduler=sched,
+                               tier0_frac=0.2)
+    assert all(0 <= b < new_total for b in sched._window)
+    decision = sched.maybe_repack(force=True)
+    assert decision is not None
+    for b in DS.hot_pack_blocks(server.segment):
+        assert 0 <= b < new_total
+
+
+def test_hybrid_server_batch_stats_column(hybrid_setup):
+    """The hybrid server's hot_tier_hits ride the batch-stat schema and
+    fold through the scheduler's IOStats path."""
+    jax = pytest.importorskip("jax")
+    from repro.core.params import HotTierParams
+    from repro.core import device_search as DS
+    from repro.io.hottier import build_hot_tier
+    from repro.serving.coordinator import SegmentServer, QueryCoordinator
+    from repro.serving import target as tgt_mod
+    x, q, seg, truth = hybrid_setup
+    ds = DS.from_segment(seg, tier0_frac=0.1)
+    hot = build_hot_tier(seg, HotTierParams(budget_frac=0.10))
+    tomb = np.zeros(N, bool)
+    victim = int(truth[0, 0])
+    tomb[victim] = True
+    hot.delete(victim)
+    server = SegmentServer(segment=ds, offset=0, num_vectors=N,
+                           host=seg, hot_tier=hot, tombstones=tomb)
+    ids, dists, io = server.search(q, K)
+    assert victim not in ids
+    bs = tgt_mod.batch_stats(server)
+    assert (np.asarray(bs["hot_tier_hits"]) > 0).all()
+    co = QueryCoordinator([server])
+    gi, gd, st = co.search(q, K)
+    assert st["total_hot_tier_hits"] == int(
+        np.asarray(bs["hot_tier_hits"]).sum())
+    assert victim not in gi
